@@ -1,0 +1,37 @@
+"""Paper Fig. 9: effective KV bandwidth under mapping/scheduling options —
+dense baseline / interleaved + reuse / token-wise + reuse / +invariance
+buffer — from the transaction model in kvcache/layout.py (the same
+row-buffer/burst accounting the paper's memory system analysis uses)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Rows, time_fn
+from repro.kvcache.layout import TokenWiseLayout, transaction_model
+
+
+def run(quick: bool = False) -> Rows:
+    rows = Rows()
+    rng = np.random.default_rng(0)
+    L, T = (8, 64) if quick else (16, 256)
+    keep = 0.75
+    gates = (rng.random((L, T)) < keep).astype(np.float32)
+    gates[0] = 1.0                                # dense base layer
+    layout = TokenWiseLayout(num_ports=16)
+    us = time_fn if False else None
+    import time
+    t0 = time.perf_counter()
+    eff = transaction_model(gates, layout)
+    dt = (time.perf_counter() - t0) * 1e6
+    peak = 460.0                                  # GB/s (paper's U280 HBM2)
+    for name, frac in eff.items():
+        rows.add(f"fig9/{name}", dt / len(eff),
+                 f"eff_frac={frac:.3f};eff_GBps={frac * peak:.1f}")
+    # the paper's ordering must hold: invariance > tokenwise > interleaved
+    assert eff["invariance_buffer"] >= eff["tokenwise_reuse"] >= \
+        eff["interleaved_reuse"], eff
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -1,0 +1,68 @@
+"""Paper Table 3: end-to-end decode throughput + bandwidth efficiency.
+
+Two layers of evidence:
+  * measured: ServeEngine tokens/s on the reduced llama2-7b (CPU — used for
+    the relative dense-vs-skip comparison, the quantity SkipOPU's routing
+    contributes);
+  * derived: decode-roofline tokens/s for the FULL llama2-7b on the target
+    memory system — decode is bandwidth-bound, so
+    tok/s = eff_bw / bytes_per_token with bytes = W4 weights + KV reads,
+    which is exactly how the paper normalizes Table 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+
+
+def _derived_toks(bw_gbps: float, eff: float, keep: float,
+                  w_bits: int, ctx: int) -> float:
+    cfg = get_config("llama2-7b")
+    n = cfg.param_count(active_only=True)
+    w_bytes = n * w_bits / 8 * (keep if keep < 1 else 1.0)
+    kv_bytes = (2 * cfg.num_layers * cfg.kv_inner_dim * ctx * 2)
+    return bw_gbps * 1e9 * eff / (w_bytes + kv_bytes)
+
+
+def run(quick: bool = False) -> Rows:
+    rows = Rows()
+    # --- measured (reduced model, dense vs skip) -------------------------
+    base = get_config("llama2-7b").smoke()
+    new_toks = 8 if quick else 24
+    for mode in ("dense", "skip"):
+        cfg = base if mode == "skip" else dataclasses.replace(
+            base, skip=dataclasses.replace(base.skip, enabled=False))
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(cfg, params, max_len=64 + new_toks)
+        prompts = np.random.default_rng(0).integers(
+            0, cfg.vocab_size, (4, 64), dtype=np.int32)
+        out = eng.generate(prompts, new_toks)
+        s = out["stats"]
+        rows.add(f"table3/measured/{mode}", s.decode_s * 1e6 / max(
+            s.decode_tokens, 1), f"tok_s={s.decode_tok_per_s:.1f}")
+
+    # --- derived (full model, paper's normalization) ---------------------
+    # SkipOPU row: U280 460 GB/s, 88.4% eff, W4, 25% skip, ctx 128+1024
+    cases = {
+        "skipopu_u280": (460, 0.884, 0.75, 4),
+        "vllm_a100": (1555, 0.315, 1.0, 16),
+        "flightllm_u280": (460, 0.66, 1.0, 8),
+        "dfx_u280": (460, 0.34, 1.0, 16),
+        "ours_tpu_v5e_chip": (819, 0.80, 0.75, 4),
+    }
+    for name, (bw, eff, keep, bits) in cases.items():
+        t = _derived_toks(bw, eff, keep, bits, ctx=1152)
+        rows.add(f"table3/derived/{name}", 0.0,
+                 f"norm_tok_s={t:.1f};bw_eff={eff:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

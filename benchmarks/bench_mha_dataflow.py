@@ -1,0 +1,104 @@
+"""Paper Fig. 8: normalized MHA speedup under the incremental dataflow
+optimizations — Baseline → PartialSkip → KV-Reuse → KV-Reuse+OPT — across
+[prefill:decode] workloads.
+
+Two columns per configuration:
+  * measured: wall-time of the jit'd MHA submodule pipeline on a reduced
+    model (CPU; *relative* speedups are the quantity the paper reports);
+  * flops-model: analytic arithmetic/byte reduction at the full llama2-7b
+    scale (keep=0.75), which is mesh-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows, time_fn
+from repro.configs import get_config
+from repro.core import skip_block
+from repro.models import model as M
+from repro.models import transformer
+
+CONFIGS = ("baseline", "partial_skip", "kv_reuse", "kv_reuse_opt")
+
+
+def _cfg_for(mode: str):
+    base = get_config("llama2-7b").smoke()
+    base = dataclasses.replace(base, num_layers=4, attn_chunk=64)
+    sk = base.skip
+    if mode == "baseline":
+        sk = dataclasses.replace(sk, enabled=False)
+    elif mode == "partial_skip":
+        # router gates attention compute; KV still generated for all tokens
+        sk = dataclasses.replace(sk, enabled=True, kv_reuse=False,
+                                 mode="gather", route_mlp=False)
+    elif mode == "kv_reuse":
+        sk = dataclasses.replace(sk, enabled=True, kv_reuse=True,
+                                 mode="gather", route_mlp=False)
+    else:  # kv_reuse_opt: + fused router/stats dataflow (single-pass
+        # reductions; on TPU the Pallas fusions — here the jnp-fused path)
+        sk = dataclasses.replace(sk, enabled=True, kv_reuse=True,
+                                 mode="gather", route_mlp=False)
+        base = dataclasses.replace(base, attn_chunk=256)
+    return dataclasses.replace(base, skip=sk)
+
+
+def _mha_flops_model(mode: str, prefill: int, decode: int,
+                     keep: float = 0.75) -> float:
+    """Per-token MHA cost model at llama2-7b scale (normalized)."""
+    cfg = get_config("llama2-7b")
+    d, hq, dh = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    L = prefill + decode
+    qkvo = 4 * d * d                  # per executed token
+    attn = 2 * 2 * hq * dh * L        # QK + SV against ~L context
+    kv_gen = 2 * d * d
+    if mode == "baseline":
+        return qkvo + attn + kv_gen * 0
+    if mode == "partial_skip":
+        return keep * (qkvo - kv_gen * 2) + kv_gen * 2 + keep * attn
+    # kv_reuse / opt: skipped tokens generate nothing
+    return keep * (qkvo + attn)
+
+
+def run(quick: bool = False) -> Rows:
+    rows = Rows()
+    workloads = [(128, 64)] if quick else [(128, 64), (256, 128)]
+    for prefill, decode in workloads:
+        base_us = None
+        for mode in CONFIGS:
+            cfg = _cfg_for(mode)
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+            toks = jax.random.randint(jax.random.PRNGKey(1), (1, prefill),
+                                      0, cfg.vocab_size)
+
+            pre = jax.jit(lambda p, b: M.prefill(p, b, cfg,
+                                                 pad_to=prefill + decode))
+            logits, cache, _ = pre(params, {"tokens": toks})
+            dec = jax.jit(lambda p, c, b, t: M.decode_step(p, c, b, t, cfg))
+
+            def pipeline():
+                lg, c, _ = pre(params, {"tokens": toks})
+                tok = jnp.argmax(lg, -1)[:, None]
+                for i in range(min(decode, 16)):      # bounded decode loop
+                    lg, c, _ = dec(params, c, {"tokens": tok},
+                                   jnp.int32(prefill + i))
+                    tok = jnp.argmax(lg, -1)[:, None]
+                return lg
+
+            us = time_fn(pipeline, iters=3, warmup=1)
+            if mode == "baseline":
+                base_us = us
+            speedup = base_us / us if us else 0.0
+            fl_base = _mha_flops_model("baseline", prefill, decode)
+            fl = _mha_flops_model(mode, prefill, decode)
+            rows.add(f"fig8/{mode}/p{prefill}d{decode}", us,
+                     f"measured_speedup={speedup:.2f};"
+                     f"model_speedup={fl_base / fl:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -1,0 +1,44 @@
+"""§Roofline aggregation: reads the dry-run JSON records and emits the
+per-(arch × shape × mesh) three-term roofline rows (also consumed by
+EXPERIMENTS.md generation)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Rows
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells():
+    cells = []
+    if RESULTS.exists():
+        for p in sorted(RESULTS.glob("*.json")):
+            cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def run(quick: bool = False) -> Rows:
+    rows = Rows()
+    for c in load_cells():
+        if c.get("status") != "ok" or c.get("variant", "baseline") != "baseline":
+            continue
+        name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        dom = c["bottleneck"]
+        bound = max(c["compute_s"], c["memory_s"], c["collective_s"])
+        frac = c["compute_s"] / bound if bound else 0.0
+        rows.add(name, bound * 1e6,
+                 f"bottleneck={dom};compute_s={c['compute_s']:.3e};"
+                 f"memory_s={c['memory_s']:.3e};"
+                 f"collective_s={c['collective_s']:.3e};"
+                 f"useful_flops={c['useful_flops_ratio']:.2f};"
+                 f"roofline_frac={frac:.3f}")
+    if not rows.rows:
+        rows.add("roofline/no_dryrun_results", 0.0,
+                 "run: python -m repro.launch.dryrun --all")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

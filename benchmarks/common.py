@@ -1,0 +1,34 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (CPU timing — used for
+    *relative* comparisons between configurations, mirroring the paper's
+    normalized speedups; absolute TPU numbers come from the roofline)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+class Rows:
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us: float, derived: str = ""):
+        self.rows.append((name, us, derived))
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")

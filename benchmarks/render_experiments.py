@@ -1,0 +1,93 @@
+"""Render §Dry-run / §Roofline markdown tables from results/dryrun/*.json.
+
+  PYTHONPATH=src python -m benchmarks.render_experiments [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+ARCH_ORDER = ["qwen3-8b", "stablelm-3b", "deepseek-coder-33b", "gemma3-12b",
+              "musicgen-medium", "grok-1-314b", "arctic-480b", "qwen2-vl-2b",
+              "jamba-v0.1-52b", "mamba2-2.7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if abs(x) < 1e-3 or abs(x) >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.{digits}g}"
+
+
+def load(variant="baseline"):
+    cells = {}
+    for p in sorted(RESULTS.glob("*.json")):
+        c = json.loads(p.read_text())
+        if c.get("variant", "baseline") != variant:
+            continue
+        cells[(c["arch"], c["shape"], c["mesh"])] = c
+    return cells
+
+
+def roofline_table(cells, mesh):
+    print(f"\n### Roofline — mesh {mesh} (per device, per step)\n")
+    print("| arch | shape | compute s | memory s | collective s | bottleneck"
+          " | MODEL/HLO flops | mem fit (args+temp GB) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            c = cells.get((a, s, mesh))
+            if c is None:
+                continue
+            if c["status"] == "skipped":
+                print(f"| {a} | {s} | — | — | — | *skipped:"
+                      f" full-attention @500k* | — | — |")
+                continue
+            ma = c.get("memory_analysis", {})
+            args_gb = ma.get("argument_size_in_bytes", 0) / 1e9
+            temp_gb = ma.get("temp_size_in_bytes", 0) / 1e9
+            print(f"| {a} | {s} | {fmt(c['compute_s'])} | {fmt(c['memory_s'])}"
+                  f" | {fmt(c['collective_s'])} | **{c['bottleneck']}** | "
+                  f"{c['useful_flops_ratio']:.2f} | "
+                  f"{args_gb:.1f}+{temp_gb:.1f} |")
+
+
+def dryrun_table(cells):
+    print("\n### Dry-run compile matrix (status × mesh)\n")
+    print("| arch | " + " | ".join(SHAPE_ORDER) + " |")
+    print("|---|" + "---|" * len(SHAPE_ORDER))
+    for a in ARCH_ORDER:
+        row = [a]
+        for s in SHAPE_ORDER:
+            marks = []
+            for mesh, tag in (("16x16", "1pod"), ("2x16x16", "2pod")):
+                c = cells.get((a, s, mesh))
+                if c is None:
+                    marks.append("?")
+                elif c["status"] == "ok":
+                    marks.append("✓")
+                elif c["status"] == "skipped":
+                    marks.append("skip")
+                else:
+                    marks.append("FAIL")
+            row.append("/".join(marks))
+        print("| " + " | ".join(row) + " |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    cells = load(args.variant)
+    dryrun_table(cells)
+    for mesh in ("16x16", "2x16x16"):
+        roofline_table(cells, mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  python -m benchmarks.run [--quick] [--only fig8,...]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_bandwidth, bench_end_to_end,
+                            bench_kv_storage, bench_mha_dataflow,
+                            bench_pe_accuracy, bench_roofline)
+    suite = {
+        "table1_pe_accuracy": bench_pe_accuracy,
+        "fig8_mha_dataflow": bench_mha_dataflow,
+        "fig9_bandwidth": bench_bandwidth,
+        "kv_storage_25pct": bench_kv_storage,
+        "table3_end_to_end": bench_end_to_end,
+        "roofline": bench_roofline,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    failed = 0
+    print("name,us_per_call,derived")
+    for name, mod in suite.items():
+        if only and name not in only:
+            continue
+        try:
+            mod.run(quick=args.quick).emit()
+        except Exception:
+            failed += 1
+            print(f"{name},0.0,ERROR", file=sys.stdout)
+            traceback.print_exc()
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""End-to-end training driver: train a SkipGPT model on the synthetic LM
+stream with checkpointing + fault-tolerance hooks.
+
+  PYTHONPATH=src python examples/train_skipgpt.py             # ~10M demo
+  PYTHONPATH=src python examples/train_skipgpt.py --preset 100m --steps 300
+
+The 100m preset is the deliverable's "~100M model for a few hundred steps"
+configuration — sized for a single accelerator; the demo preset shows the
+same curves in CPU-minutes.
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, SkipConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+PRESETS = {
+    # ~10M params: CPU-minutes demo
+    "demo": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=4,
+                 d_ff=1024, vocab_size=2048, seq=128, batch=4, steps=150,
+                 lr=1e-3),
+    # ~100M params: the deliverable configuration (single TPU/GPU class)
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+                 d_ff=3072, vocab_size=32000, seq=512, batch=8, steps=300,
+                 lr=6e-4),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="demo")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/skipgpt_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cfg = ModelConfig(
+        name=f"skipgpt-{args.preset}", family="dense",
+        num_layers=p["num_layers"], d_model=p["d_model"],
+        num_heads=p["num_heads"], num_kv_heads=p["num_kv_heads"],
+        d_ff=p["d_ff"], vocab_size=p["vocab_size"],
+        skip=SkipConfig(enabled=True, keep_prob=0.75),
+        attn_chunk=256, xent_chunk=256, remat=False)
+    print(f"params ≈ {cfg.param_count()/1e6:.1f}M  "
+          f"(SkipGPT routing on, target keep={cfg.skip.keep_prob})")
+
+    steps = args.steps or p["steps"]
+    tcfg = TrainerConfig(seq_len=p["seq"], global_batch=p["batch"],
+                         steps=steps, lr=p["lr"], warmup=max(steps // 10, 5),
+                         ckpt_dir=args.ckpt_dir, ckpt_every=max(steps // 4, 10),
+                         log_every=max(steps // 15, 1))
+    tr = Trainer(cfg, tcfg)
+    state = tr.run(resume=args.resume)
+    print("step   loss    xent    keep")
+    for m in tr.metrics_log:
+        print(f"{m['step']:5d}  {m['loss']:.3f}  {m['xent']:.3f}  "
+              f"{m['keep_frac']:.2f}")
+    d = tr.metrics_log
+    print(f"\nloss {d[0]['loss']:.3f} -> {d[-1]['loss']:.3f} over "
+          f"{int(state['data_step'])} steps; router keep converged to "
+          f"{d[-1]['keep_frac']:.2f} (target {cfg.skip.keep_prob})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""SkipOPU reproduction framework (JAX/TPU)."""
+__version__ = "0.1.0"

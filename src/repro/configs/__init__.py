@@ -1,0 +1,39 @@
+"""Config registry: one module per assigned architecture (+ the paper's own
+Llama-2 workload).  Importing this package populates the registry."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    QuantConfig,
+    SkipConfig,
+    get_config,
+    list_configs,
+    register,
+)
+
+# Assigned architecture pool (10) + paper workload.
+from repro.configs import (  # noqa: F401
+    arctic_480b,
+    deepseek_coder_33b,
+    gemma3_12b,
+    grok_1_314b,
+    jamba_v0_1_52b,
+    llama2_7b,
+    mamba2_2_7b,
+    musicgen_medium,
+    qwen2_vl_2b,
+    qwen3_8b,
+    stablelm_3b,
+)
+
+ASSIGNED_ARCHS = (
+    "qwen3-8b",
+    "stablelm-3b",
+    "deepseek-coder-33b",
+    "gemma3-12b",
+    "musicgen-medium",
+    "grok-1-314b",
+    "arctic-480b",
+    "qwen2-vl-2b",
+    "jamba-v0.1-52b",
+    "mamba2-2.7b",
+)

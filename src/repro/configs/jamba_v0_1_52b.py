@@ -1,0 +1,30 @@
+"""jamba-v0.1-52b  [hybrid]  32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2 every 2 layers, Mamba+attn 1:7 interleave.
+[arXiv:2403.19887]
+
+Adaptation note (DESIGN.md §Arch-applicability): Jamba v0.1 uses Mamba-1 blocks;
+we implement Mamba-2/SSD for all SSM layers (strict superset dataflow, better
+TPU mapping). State size 16 matches the Jamba paper.
+"""
+from repro.configs.base import ATTN, MAMBA, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    layer_pattern=(MAMBA, MAMBA, MAMBA, MAMBA, ATTN, MAMBA, MAMBA, MAMBA),
+    num_experts=16,
+    top_k=2,
+    moe_every=2,
+    ssm_state=16,
+    ssm_headdim=64,
+    ssm_chunk=64,
+    pos_embedding="none",   # Jamba uses no explicit positional encoding
+    mlp_act="swiglu",
+))

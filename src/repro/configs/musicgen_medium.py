@@ -1,0 +1,19 @@
+"""musicgen-medium  [audio]  48L d_model=1536 24H (MHA kv=24) d_ff=6144 vocab=2048
+Decoder-only over EnCodec tokens; modality frontend is a STUB (precomputed frame
+embeddings are the model input).  [arXiv:2306.05284]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    norm_type="layernorm",
+    pos_embedding="sinusoidal",
+    mlp_act="gelu_mlp",
+    frontend="audio_stub",
+))

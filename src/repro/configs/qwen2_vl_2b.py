@@ -1,0 +1,23 @@
+"""qwen2-vl-2b  [vlm]  28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936
+M-RoPE (temporal/height/width sections), dynamic resolution.  The vision tower
+is a STUB: the model consumes precomputed patch embeddings + 3D positions.
+[arXiv:2409.12191]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    pos_embedding="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    mlp_act="swiglu",
+    frontend="vlm_stub",
+    tie_embeddings=True,
+))

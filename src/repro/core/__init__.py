@@ -1,0 +1,1 @@
+from repro.core import kv_reuse, routing, skip_block  # noqa: F401

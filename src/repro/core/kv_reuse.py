@@ -1,0 +1,83 @@
+"""Cross-layer KV reuse (paper §2.1 Eq. 2 and §4.4).
+
+A token that skips attention at layer *l* inherits its K/V from the most
+recent layer where it executed:  ``K_l[i] = K_{l-1}[i]`` recursively.  The
+key hardware observation the paper exploits — *the KV of a skipped token is
+invariant across layers until it re-executes* — maps onto TPU as a dense
+scan-carried **view**:
+
+    view_l = where(gate_l, kv_new_l, view_{l-1})
+
+which is a fully regular select (the TPU analogue of serving reused entries
+from the on-chip URAM buffer instead of issuing irregular cross-layer HBM
+gathers).  Storage accounting for the *compact store* (the 25.4 % claim)
+lives in ``repro/kvcache/cache.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import routing
+
+KVPair = Tuple[jnp.ndarray, jnp.ndarray]   # (k, v): [B, T, Hkv, dh]
+
+
+def init_view(k_new: jnp.ndarray, v_new: jnp.ndarray) -> KVPair:
+    """Base case of the recursion: at the first attention layer the view is
+    the freshly computed KV for *all* tokens (the buffer is initialized
+    dense; see DESIGN.md — recursion needs a base)."""
+    return k_new, v_new
+
+
+def merge_view(view: Optional[KVPair], k_new: jnp.ndarray, v_new: jnp.ndarray,
+               gate: jnp.ndarray) -> KVPair:
+    """Dense select realizing Eq. 2.  gate: [B, T] (1 = executed)."""
+    if view is None:
+        return init_view(k_new, v_new)
+    g = gate.astype(bool)[:, :, None, None]
+    k = jnp.where(g, k_new, view[0])
+    v = jnp.where(g, v_new, view[1])
+    return k, v
+
+
+def merge_view_gathered(view: Optional[KVPair], k_new: jnp.ndarray,
+                        v_new: jnp.ndarray, idx: jnp.ndarray, T: int
+                        ) -> KVPair:
+    """Gather-mode variant: KV was computed only for the compacted tokens
+    (k_new/v_new: [B, C, Hkv, dh]); scatter them into the dense view at the
+    original positions ``idx`` [B, C]."""
+    if view is None:
+        # base case: dense init requires full KV; caller guarantees the first
+        # attention layer runs dense (idx == arange(T)).
+        assert k_new.shape[1] == T, "first attention layer must be dense"
+        return k_new, v_new
+    scat = jax.vmap(lambda o, i, u: o.at[i].set(u))
+    k = scat(view[0], idx, k_new)
+    v = scat(view[1], idx, v_new)
+    return k, v
+
+
+def merge_token_view(kv_prev: Optional[KVPair], k_new: jnp.ndarray,
+                     v_new: jnp.ndarray, gate: jnp.ndarray) -> KVPair:
+    """Decode-time single-token view: the carried (k, v) of the *new* token
+    as it flows through layers (the proactive invariance-buffer update —
+    §4.4.2).  k_new/v_new: [B, 1, Hkv, dh]; gate: [B]."""
+    if kv_prev is None:
+        return k_new, v_new
+    g = gate.astype(bool)[:, None, None, None]
+    return (jnp.where(g, k_new, kv_prev[0]),
+            jnp.where(g, v_new, kv_prev[1]))
+
+
+def storage_saved_fraction(gates: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of per-layer KV slots the compact store avoids writing.
+
+    gates: [L, B, T] execution masks over attention layers (layer 0 counts
+    as dense — the view base case).  Saved = 1 − (stored / (L·T))."""
+    L = gates.shape[0]
+    stored = gates[1:].sum() + gates.shape[1] * gates.shape[2]  # layer0 dense
+    total = L * gates.shape[1] * gates.shape[2]
+    return 1.0 - stored / total

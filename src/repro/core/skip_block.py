@@ -1,0 +1,302 @@
+"""Skip-aware submodule composition: router → (gather) → norm → submodule →
+scatter/mask → residual.
+
+This is the paper's execution pipeline (Fig. 1 / Alg. 1) in JAX form:
+
+  * the router logits and the norm's reduction statistics are computed in a
+    single pass over the activations (the "deep-fused router + RMSNorm"
+    dataflow — on TPU via the fused Pallas kernel, on the jnp path via two
+    fusable reductions XLA merges);
+  * only *kept* tokens are normalized and fed to the submodule (gather mode
+    compacts them into a static-capacity tile — the bitmask analogue);
+  * attention composes with the cross-layer KV view (kv_reuse.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import kv_reuse, routing
+from repro.distributed.sharding import hint
+from repro.models import attention as attn_mod
+from repro.models import layers
+from repro.models.layers import Params
+
+Stats = Dict[str, jnp.ndarray]
+
+
+def _gather_positions(positions: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """positions: [B, T] or [3, B, T] (M-RoPE); idx: [B, C]."""
+    if positions.ndim == 3:
+        return jax.vmap(lambda p: jnp.take_along_axis(p, idx, axis=1))(positions)
+    return jnp.take_along_axis(positions, idx, axis=1)
+
+
+def _q_index_positions(positions: jnp.ndarray) -> jnp.ndarray:
+    """Sequence-index positions used for causal masking ([B, T] even when the
+    RoPE positions are 3-D M-RoPE: masking uses the temporal index)."""
+    if positions.ndim == 3:
+        return positions[0]
+    return positions
+
+
+def _router_and_stats(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                      routed: bool):
+    """One pass producing (router logits, norm reduction stats) — Alg. 1
+    lines 4–7.  Dispatches to the fused Pallas kernel when enabled."""
+    if cfg.use_kernels and routed and cfg.norm_type == "rmsnorm":
+        from repro.kernels import ops as kops
+        logits, stats = kops.fused_router_rmsnorm_stats(
+            x, p["router"]["w"], p["router"]["b"])
+    else:
+        stats = layers.norm_stats(x, cfg)
+        logits = routing.router_logits(p["router"], x) if routed else None
+    return logits, stats
+
+
+def _gate(logits, rng, cfg: ModelConfig, train: bool, shape, routed: bool):
+    if not routed:
+        ones = jnp.ones(shape, jnp.float32)
+        return ones, ones
+    return routing.gate_from_logits(logits, rng, cfg, train)
+
+
+# ---------------------------------------------------------------------------
+# Attention submodule (prefill / train)
+# ---------------------------------------------------------------------------
+
+def routed_attention(p: Params, x: jnp.ndarray,
+                     view: Optional[kv_reuse.KVPair],
+                     positions: jnp.ndarray, cfg: ModelConfig, *,
+                     rng: Optional[jax.Array], train: bool,
+                     window: int = 0
+                     ) -> Tuple[jnp.ndarray, kv_reuse.KVPair, Stats]:
+    """x: [B, T, D].  Returns (x + routed_attn(x), new KV view, stats)."""
+    B, T, _ = x.shape
+    routed = cfg.skip.enabled and cfg.skip.route_attention
+    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    gate, p_keep = _gate(logits, rng, cfg, train, (B, T), routed)
+    gate = hint(gate, "gate")
+    q_pos_idx = _q_index_positions(positions)
+    inner = p["inner"]
+
+    use_gather = routed and cfg.skip.mode == "gather" and not train
+    if use_gather:
+        cap = routing.capacity(T, cfg.skip.keep_prob)
+        score = logits[..., 1] - logits[..., 0]
+        idx = routing.select_topc(score, cap)
+        xg = hint(routing.gather_tokens(x, idx), "activation")
+        sg = jax.tree_util.tree_map(
+            lambda s: jnp.take_along_axis(s, idx, axis=1), nstats)
+        xng = hint(layers.norm_apply(p["norm"], xg, cfg, stats=sg),
+                   "activation")
+        pos_g = _gather_positions(positions, idx)
+        q = attn_mod.project_q(inner, xng, pos_g, cfg)
+        if view is None or not cfg.skip.kv_reuse:
+            # dense KV generation: view base case, or the paper's
+            # "PartialSkip" ablation (KV recomputed for skipped tokens too)
+            xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+            k, v = attn_mod.project_kv(inner, xn, positions, cfg)
+            view = kv_reuse.init_view(k, v)
+        else:
+            kg, vg = attn_mod.project_kv(inner, xng, pos_g, cfg)
+            view = kv_reuse.merge_view_gathered(view, kg, vg, idx, T)
+        view = (hint(view[0], "kv_view"), hint(view[1], "kv_view"))
+        o = attn_mod.attention_core(q, view[0], view[1],
+                                    q_positions=jnp.take_along_axis(
+                                        q_pos_idx, idx, axis=1),
+                                    cfg=cfg, window=window)
+        y = attn_mod.output_proj(inner, o, cfg)
+        gate_g = jnp.take_along_axis(gate, idx, axis=1)
+        y = hint(y * gate_g.astype(y.dtype)[..., None], "activation")
+        x = x + hint(routing.scatter_tokens(y, idx, T), "activation")
+    else:
+        xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+        q = attn_mod.project_q(inner, xn, positions, cfg)
+        k, v = attn_mod.project_kv(inner, xn, positions, cfg)
+        if routed and cfg.skip.kv_reuse:
+            view = kv_reuse.merge_view(view, k, v, gate)
+        else:
+            view = kv_reuse.init_view(k, v)
+        view = (hint(view[0], "kv_view"), hint(view[1], "kv_view"))
+        o = attn_mod.attention_core(q, view[0], view[1],
+                                    q_positions=q_pos_idx, cfg=cfg,
+                                    window=window)
+        y = attn_mod.output_proj(inner, o, cfg)
+        if routed:
+            y = y * gate.astype(y.dtype)[..., None]
+        x = x + hint(y, "activation")
+
+    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
+        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    stats["attn_gate"] = gate
+    return x, view, stats
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE submodule (prefill / train)
+# ---------------------------------------------------------------------------
+
+def routed_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+               inner_fn: Callable[[Params, jnp.ndarray], Tuple[jnp.ndarray, Stats]],
+               rng: Optional[jax.Array], train: bool
+               ) -> Tuple[jnp.ndarray, Stats]:
+    """inner_fn(params, xn) -> (y, aux); covers dense MLP and MoE."""
+    B, T, _ = x.shape
+    routed = cfg.skip.enabled and cfg.skip.route_mlp
+    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    gate, p_keep = _gate(logits, rng, cfg, train, (B, T), routed)
+
+    use_gather = routed and cfg.skip.mode == "gather" and not train
+    if use_gather:
+        cap = routing.capacity(T, cfg.skip.keep_prob)
+        score = logits[..., 1] - logits[..., 0]
+        idx = routing.select_topc(score, cap)
+        xg = hint(routing.gather_tokens(x, idx), "activation")
+        sg = jax.tree_util.tree_map(
+            lambda s: jnp.take_along_axis(s, idx, axis=1), nstats)
+        xng = hint(layers.norm_apply(p["norm"], xg, cfg, stats=sg),
+                   "activation")
+        y, aux = inner_fn(p["inner"], xng)
+        gate_g = jnp.take_along_axis(gate, idx, axis=1)
+        y = hint(y * gate_g.astype(y.dtype)[..., None], "activation")
+        x = x + hint(routing.scatter_tokens(y, idx, T), "activation")
+    else:
+        xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+        y, aux = inner_fn(p["inner"], xn)
+        if routed:
+            y = y * gate.astype(y.dtype)[..., None]
+        x = x + hint(y, "activation")
+
+    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
+        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    stats.update(aux)
+    return x, stats
+
+
+# ---------------------------------------------------------------------------
+# Decode-step variants (single new token, per-layer KV cache)
+# ---------------------------------------------------------------------------
+
+def routed_attention_decode(p: Params, x: jnp.ndarray,
+                            k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                            t: jnp.ndarray,
+                            kv_prev: Optional[kv_reuse.KVPair],
+                            positions: jnp.ndarray, cfg: ModelConfig, *,
+                            window: int = 0
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                       kv_reuse.KVPair, Stats]:
+    """One decode step.  x: [B, 1, D]; k/v_cache: [B, Tmax, Hkv, dh];
+    t: scalar int (current position); kv_prev: the carried single-token KV
+    view (the proactive invariance-buffer update, §4.4.2)."""
+    B = x.shape[0]
+    routed = cfg.skip.enabled and cfg.skip.route_attention
+    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    gate, p_keep = _gate(logits[:, 0] if logits is not None else None,
+                         None, cfg, False, (B,), routed)
+    inner = p["inner"]
+
+    xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+    q = attn_mod.project_q(inner, xn, positions, cfg)
+    k_new, v_new = attn_mod.project_kv(inner, xn, positions, cfg)
+    if routed and cfg.skip.kv_reuse:
+        k_t, v_t = kv_reuse.merge_token_view(kv_prev, k_new, v_new, gate)
+    else:
+        k_t, v_t = k_new, v_new
+
+    valid = jnp.full((B,), t + 1, jnp.int32)
+    if cfg.kv_cache_layout == "bhtd":
+        # head-major cache: write [B, Hkv, 1, dh] at (0, 0, t, 0); the
+        # attention dot consumes the cache with no relayout transpose.
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_t.swapaxes(1, 2).astype(k_cache.dtype), (0, 0, t, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_t.swapaxes(1, 2).astype(v_cache.dtype), (0, 0, t, 0))
+        k_cache = hint(k_cache, "kv_cache_step_bhtd")
+        v_cache = hint(v_cache, "kv_cache_step_bhtd")
+        o = attn_mod.decode_attention_bhtd(
+            q, k_cache, v_cache,
+            q_positions=_q_index_positions(positions), cfg=cfg,
+            kv_valid_len=valid)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_t.astype(k_cache.dtype), (0, t, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_t.astype(v_cache.dtype), (0, t, 0, 0))
+        k_cache = hint(k_cache, "kv_cache_step")
+        v_cache = hint(v_cache, "kv_cache_step")
+        o = attn_mod.attention_core(
+            q, k_cache, v_cache,
+            q_positions=_q_index_positions(positions),
+            cfg=cfg, window=window, kv_valid_len=valid)
+    y = attn_mod.output_proj(inner, o, cfg)
+    if routed:
+        y = y * gate.astype(y.dtype)[:, None, None]
+    x = x + y
+
+    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
+        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    stats["attn_gate"] = gate
+    return x, k_cache, v_cache, (k_t, v_t), stats
+
+
+def routed_ssm(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+               rng: Optional[jax.Array], train: bool,
+               conv_state=None, ssm_state=None
+               ) -> Tuple[jnp.ndarray, Tuple, Stats]:
+    """Mamba block with masked-contribution routing (DESIGN.md
+    §Arch-applicability): a skipped token's dt is zeroed inside the SSD scan
+    so it neither updates the state nor produces output."""
+    from repro.models import ssm as ssm_mod
+
+    B, T, _ = x.shape
+    routed = cfg.skip.enabled and cfg.skip.route_ssm
+    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    gate, p_keep = _gate(logits, rng, cfg, train, (B, T), routed)
+    xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+    y, states = ssm_mod.ssm_apply(p["inner"], xn, cfg,
+                                  gate_mask=gate if routed else None,
+                                  conv_state=conv_state, ssm_state=ssm_state)
+    x = x + hint(y, "activation")
+    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
+        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    return x, states, stats
+
+
+def routed_ssm_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                      conv_state, ssm_state
+                      ) -> Tuple[jnp.ndarray, Tuple, Stats]:
+    from repro.models import ssm as ssm_mod
+
+    B = x.shape[0]
+    routed = cfg.skip.enabled and cfg.skip.route_ssm
+    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    gate, p_keep = _gate(logits[:, 0] if logits is not None else None,
+                         None, cfg, False, (B,), routed)
+    xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+    y, states = ssm_mod.ssm_step(p["inner"], xn, cfg, conv_state, ssm_state,
+                                 gate_mask=gate if routed else None)
+    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
+        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    return x + y, states, stats
+
+
+def routed_mlp_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                      inner_fn) -> Tuple[jnp.ndarray, Stats]:
+    """Decode-time MLP routing is the masked path with T=1."""
+    B = x.shape[0]
+    routed = cfg.skip.enabled and cfg.skip.route_mlp
+    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    gate, p_keep = _gate(logits[:, 0] if logits is not None else None,
+                         None, cfg, False, (B,), routed)
+    xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+    y, aux = inner_fn(p["inner"], xn)
+    if routed:
+        y = y * gate.astype(y.dtype)[:, None, None]
+    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
+        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    stats.update(aux)
+    return x + y, stats

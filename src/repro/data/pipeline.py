@@ -1,0 +1,92 @@
+"""Deterministic synthetic LM data pipeline.
+
+Production shape: the dataset is addressed by a monotone *global step
+cursor* — every host computes its shard of every batch purely from
+(step, host_id), so (a) restarts resume exactly (the cursor lives in the
+checkpoint), (b) elastic re-configuration just re-partitions the host range,
+(c) no inter-host coordination is needed.
+
+The token stream is a mixture of Zipf-distributed unigrams and short
+Markov-ish repeats so losses decrease meaningfully during the example runs
+(pure-uniform tokens give a constant-entropy floor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class SyntheticLMDataset:
+    cfg: ModelConfig
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    repeat_prob: float = 0.5
+    repeat_offset: int = 16
+
+    def _tokens_for(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        B, T = self.global_batch, self.seq_len + 1
+        V = self.cfg.vocab_size
+        base = rng.zipf(self.zipf_a, size=(B, T)).astype(np.int64)
+        toks = (base - 1) % V
+        # inject predictable structure: with prob p, token t repeats t-k
+        rep = rng.random((B, T)) < self.repeat_prob
+        rep[:, : self.repeat_offset] = False
+        idx = np.arange(T)[None, :] - self.repeat_offset
+        toks = np.where(rep, np.take_along_axis(
+            toks, np.broadcast_to(idx, (B, T)), axis=1), toks)
+        return toks.astype(np.int32)
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        toks = self._tokens_for(step)
+        inputs, labels = toks[:, :-1], toks[:, 1:]
+        if self.cfg.frontend == "token":
+            out: Dict[str, np.ndarray] = {"tokens": inputs}
+        else:
+            # modality stub: embed the synthetic ids through a fixed random
+            # projection (stands in for the frozen EnCodec/ViT frontend)
+            rng = np.random.default_rng(self.seed + 7)
+            table = rng.standard_normal(
+                (min(self.cfg.vocab_size, 4096), self.cfg.d_model)).astype(
+                    np.float32) * 0.02
+            out = {"embeds": table[inputs % table.shape[0]]}
+        if self.cfg.pos_embedding == "mrope":
+            pos = np.broadcast_to(
+                np.arange(inputs.shape[1], dtype=np.int32)[None],
+                inputs.shape)
+            out["positions"] = np.broadcast_to(pos[None], (3,) + inputs.shape).copy()
+        out["labels"] = labels
+        return out
+
+    def host_batch(self, step: int, host_id: int, num_hosts: int
+                   ) -> Dict[str, np.ndarray]:
+        """This host's shard of the global batch (per-host loading)."""
+        full = self.batch(step)
+        B = self.global_batch
+        assert B % num_hosts == 0
+        lo, hi = host_id * B // num_hosts, (host_id + 1) * B // num_hosts
+
+        def shard(k, v):
+            return v[:, lo:hi] if k == "positions" else v[lo:hi]
+
+        return {k: shard(k, v) for k, v in full.items()}
+
+
+def make_batch_iterator(cfg: ModelConfig, seq_len: int, global_batch: int,
+                        start_step: int = 0, seed: int = 0
+                        ) -> Iterator[Dict[str, np.ndarray]]:
+    ds = SyntheticLMDataset(cfg, seq_len, global_batch, seed)
+    step = start_step
+    while True:
+        yield ds.batch(step)
+        step += 1

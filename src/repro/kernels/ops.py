@@ -1,0 +1,137 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles layout packing (GQA head packing), padding, backend dispatch
+(interpret=True off-TPU so CPU tests execute the kernel bodies), and the
+pure-jnp fallbacks used by the dry-run lowering.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_packed
+from repro.kernels.fused_router_rmsnorm import (router_stats_pallas,
+                                                rmsnorm_matmul_pallas)
+from repro.kernels.int4_matmul import int4_matmul_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _pack_heads(q, k, v, q_positions, kv_valid_len):
+    B, Tq, Hq, dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    # q rows pack (G, Tq): every KV tile is reused by all G grouped q-heads.
+    qp = (q.reshape(B, Tq, Hkv, G, dh)
+          .transpose(0, 2, 3, 1, 4)
+          .reshape(B * Hkv, G * Tq, dh))
+    kp = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Tk, dh)
+    vp = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Tk, dh)
+    pos = jnp.broadcast_to(q_positions[:, None, None, :],
+                           (B, Hkv, G, Tq)).reshape(B * Hkv, G * Tq)
+    if kv_valid_len is None:
+        kv_len = jnp.full((B * Hkv, 1), Tk, jnp.int32)
+    else:
+        kv_len = jnp.broadcast_to(kv_valid_len[:, None, None],
+                                  (B, Hkv, 1)).reshape(B * Hkv, 1)
+    return qp, kp, vp, pos, kv_len, (B, Tq, Hq, Hkv, G, dh)
+
+
+def flash_attention(q, k, v, *, q_positions, causal: bool = True,
+                    window: int = 0, kv_valid_len=None,
+                    softmax_scale: Optional[float] = None) -> jnp.ndarray:
+    """q: [B,Tq,Hq,dh]; k/v: [B,Tk,Hkv,dh] -> [B,Tq,Hq,dh]."""
+    scale = softmax_scale if softmax_scale is not None \
+        else 1.0 / math.sqrt(q.shape[-1])
+    qp, kp, vp, pos, kv_len, meta = _pack_heads(
+        q, k, v, q_positions, kv_valid_len)
+    B, Tq, Hq, Hkv, G, dh = meta
+    out = flash_attention_packed(qp, kp, vp, pos, kv_len, causal=causal,
+                                 window=window, scale=scale,
+                                 interpret=_interpret())
+    return (out.reshape(B, Hkv, G, Tq, dh)
+            .transpose(0, 3, 1, 2, 4)
+            .reshape(B, Tq, Hq, dh))
+
+
+def decode_attention(q, k, v, *, q_positions, window: int = 0,
+                     kv_valid_len=None,
+                     softmax_scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token decode: q [B,1,Hq,dh] against a [B,Tk,Hkv,dh] cache.
+    The packed layout makes this flash-decoding: the G grouped q-heads are
+    the rows, the KV length is the reduction."""
+    return flash_attention(q, k, v, q_positions=q_positions, causal=True,
+                           window=window, kv_valid_len=kv_valid_len,
+                           softmax_scale=softmax_scale)
+
+
+# ---------------------------------------------------------------------------
+# int4 matmul (BFP accumulation)
+# ---------------------------------------------------------------------------
+
+def int4_matmul(x: jnp.ndarray, w_codes: jnp.ndarray, scale: jnp.ndarray,
+                use_kernel: bool = False) -> jnp.ndarray:
+    """x: [..., K] × int4-coded [K, N] -> [..., N]."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w_codes.shape[1]
+    x2 = x.reshape(-1, K)
+    if use_kernel:
+        out = int4_matmul_pallas(x2, w_codes, scale, interpret=_interpret())
+    else:
+        # jnp fallback: dequantize-and-matmul; XLA keeps the int8 weight
+        # feed (weight HBM bytes = 1/2 of bf16; accounted at 4-bit in the
+        # roofline, DESIGN.md).
+        G = K // scale.shape[0]
+        w = (w_codes.astype(x.dtype).reshape(K // G, G, N)
+             * scale[:, None, :].astype(x.dtype)).reshape(K, N)
+        out = x2 @ w
+    return out.reshape(*lead, N)
+
+
+# ---------------------------------------------------------------------------
+# Fused router + RMSNorm statistics
+# ---------------------------------------------------------------------------
+
+def ssd_scan(xh, dt, A_log, Bm, Cm, chunk: int) -> jnp.ndarray:
+    """Mamba-2 SSD chunk scan (state carried in VMEM across chunks)."""
+    from repro.kernels.ssd_scan import ssd_scan_pallas
+    return ssd_scan_pallas(xh, dt, A_log, Bm, Cm, chunk,
+                           interpret=_interpret())
+
+
+def fused_router_rmsnorm_stats(x: jnp.ndarray, w: jnp.ndarray,
+                               b: jnp.ndarray):
+    """x: [B, T, D] -> (router logits [B, T, 2] f32, mean_sq [B, T] f32)."""
+    B, T, D = x.shape
+    logits, ms = router_stats_pallas(x.reshape(B * T, D), w,
+                                     interpret=_interpret())
+    return logits.reshape(B, T, 2) + b, ms.reshape(B, T)
+
+
+def rmsnorm_matmul(x: jnp.ndarray, mean_sq: jnp.ndarray, gamma: jnp.ndarray,
+                   w: jnp.ndarray, eps: float = 1e-5,
+                   use_kernel: bool = True) -> jnp.ndarray:
+    """Normalization fused into the following projection (Alg. 1 ll. 11-15).
+    x: [..., K]; mean_sq: [...]; w: [K, N]."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    ms2 = mean_sq.reshape(-1)
+    if use_kernel:
+        out = rmsnorm_matmul_pallas(x2, ms2, gamma, w, eps=eps,
+                                    interpret=_interpret())
+    else:
+        out = ref.rmsnorm_matmul_ref(x2, ms2, gamma, w, eps)
+    return out.reshape(*lead, w.shape[1])

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose against
+these; benchmarks reuse them for the Table-1 accuracy reproduction)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+MBITS = 7
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        q_positions: jnp.ndarray,
+                        causal: bool = True, window: int = 0,
+                        kv_valid_len: Optional[jnp.ndarray] = None,
+                        softmax_scale: Optional[float] = None) -> jnp.ndarray:
+    """Dense GQA attention oracle.  q: [B,Tq,Hq,dh]; k/v: [B,Tk,Hkv,dh]."""
+    B, Tq, Hq, dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, Tq, Hkv, G, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    kv_pos = jnp.arange(Tk)
+    mask = jnp.ones((B, Tq, Tk), bool)
+    qp = q_positions[:, :, None]
+    if causal:
+        mask &= kv_pos[None, None, :] <= qp
+    if window:
+        mask &= kv_pos[None, None, :] > qp - window
+    if kv_valid_len is not None:
+        mask &= kv_pos[None, None, :] < kv_valid_len[:, None, None]
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key -> zero output (mirrors the kernel's guard)
+    p = jnp.where(mask.any(-1)[:, None, None, :, None], p, 0.0)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Tq, Hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int4 × bf16 matmul
+# ---------------------------------------------------------------------------
+
+def int4_matmul_ref(x: jnp.ndarray, w_codes: jnp.ndarray,
+                    scale: jnp.ndarray) -> jnp.ndarray:
+    """Exact-dequant fp32 oracle (the accuracy target)."""
+    K, N = w_codes.shape
+    G = K // scale.shape[0]
+    w = (w_codes.astype(jnp.float32).reshape(K // G, G, N)
+         * scale[:, None, :]).reshape(K, N)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def bfp_matmul_ref(x: jnp.ndarray, w_codes: jnp.ndarray,
+                   scale: jnp.ndarray) -> jnp.ndarray:
+    """Bit-accurate emulation of the kernel's BFP fixed-point accumulation
+    (shared per-row-per-group exponent, int8 mantissas, int32 accumulate,
+    one FP reconstruction per group).  The kernel must match this closely."""
+    M, K = x.shape
+    Kw, N = w_codes.shape
+    G = K // scale.shape[0]
+    xg = x.astype(jnp.float32).reshape(M, K // G, G)
+    amax = jnp.abs(xg).max(axis=-1, keepdims=True)
+    e = jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30)))
+    e = jnp.where(amax == 0, 0.0, e)
+    pe = jnp.exp2(e)                                       # [M, K/G, 1]
+    mant = jnp.clip(jnp.round(xg * (2.0 ** MBITS) / pe), -128, 127)
+    wg = w_codes.reshape(K // G, G, N).astype(jnp.int32)
+    prod = jnp.einsum("mcg,cgn->mcn", mant.astype(jnp.int32), wg)  # int32
+    recon = (prod.astype(jnp.float32) * pe * (2.0 ** -MBITS)
+             * scale[None, :, :])                          # [M, K/G, N]
+    return recon.sum(axis=1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused router + RMSNorm stats
+# ---------------------------------------------------------------------------
+
+def router_stats_ref(x: jnp.ndarray, w: jnp.ndarray):
+    """x: [T, D]; w: [D, 2] -> (logits f32 [T, 2], mean_sq f32 [T])."""
+    xf = x.astype(jnp.float32)
+    return xf @ w.astype(jnp.float32), (xf * xf).mean(axis=-1)
+
+
+def rmsnorm_matmul_ref(x: jnp.ndarray, mean_sq: jnp.ndarray,
+                       gamma: jnp.ndarray, w: jnp.ndarray,
+                       eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    xn = xf * jax.lax.rsqrt(mean_sq[:, None] + eps) * gamma.astype(jnp.float32)
+    return (xn @ w.astype(jnp.float32)).astype(x.dtype)

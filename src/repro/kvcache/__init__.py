@@ -1,0 +1,2 @@
+from repro.kvcache.cache import CompactKVStore, DenseKVStore  # noqa: F401
+from repro.kvcache.layout import TokenWiseLayout, transaction_model  # noqa: F401

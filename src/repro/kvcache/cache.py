@@ -1,0 +1,133 @@
+"""KV-cache stores realizing the paper's §4.4 memory system.
+
+``DenseKVStore``   — baseline: one [T, Hkv, dh] K/V pair *per layer*
+                     (no storage savings; every layer's view materialized).
+``CompactKVStore`` — the paper's design: per layer, only the KV entries of
+                     *executed* tokens are stored (plus the dense layer-0
+                     base), and ONE rolling dense view buffer serves
+                     attention (the URAM invariance-buffer analogue).
+                     Moving from layer l to l+1 scatters layer (l+1)'s
+                     compact entries into the view — all other entries are
+                     invariant (the paper's cross-layer KV invariance).
+
+Storage accounting here backs the paper's "up to 25.4 % KV storage
+reduction" claim (benchmarks/bench_kv_storage.py) and the serve engine's
+traffic model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class KVStats:
+    dense_entries: int = 0       # what the baseline would store
+    stored_entries: int = 0      # what we actually store
+    view_entries: int = 0        # rolling view buffer size
+    scattered_entries: int = 0   # view-update traffic (entries)
+
+    @property
+    def saved_fraction(self) -> float:
+        if self.dense_entries == 0:
+            return 0.0
+        return 1.0 - self.stored_entries / self.dense_entries
+
+
+class DenseKVStore:
+    """Per-layer dense KV (the paper's baseline)."""
+
+    def __init__(self, num_layers: int, heads: int, head_dim: int):
+        self.L, self.H, self.D = num_layers, heads, head_dim
+        self.k: List[List[np.ndarray]] = [[] for _ in range(num_layers)]
+        self.v: List[List[np.ndarray]] = [[] for _ in range(num_layers)]
+        self.stats = KVStats()
+
+    def append(self, layer: int, k: np.ndarray, v: np.ndarray,
+               executed: bool) -> None:
+        # dense baseline stores every layer's entry regardless of routing
+        self.k[layer].append(np.asarray(k))
+        self.v[layer].append(np.asarray(v))
+        self.stats.dense_entries += 1
+        self.stats.stored_entries += 1
+
+    def view(self, layer: int) -> Tuple[np.ndarray, np.ndarray]:
+        return (np.stack(self.k[layer]), np.stack(self.v[layer]))
+
+
+class CompactKVStore:
+    """Compact per-layer store + rolling dense view (paper §4.4)."""
+
+    def __init__(self, num_layers: int, heads: int, head_dim: int):
+        self.L, self.H, self.D = num_layers, heads, head_dim
+        # compact store: per layer, list of (token_idx, k, v)
+        self.entries: List[Dict[int, Tuple[np.ndarray, np.ndarray]]] = \
+            [dict() for _ in range(num_layers)]
+        self._views_valid_layer: Optional[int] = None
+        self._view_k: List[np.ndarray] = []
+        self._view_v: List[np.ndarray] = []
+        self.stats = KVStats()
+        self._tokens = 0
+
+    # -- write path (during decode of one token across layers) ------------
+    def append(self, layer: int, k: np.ndarray, v: np.ndarray,
+               executed: bool) -> None:
+        """Called at each attention layer for the newly decoded token.
+        Layer 0 is the dense base case; other layers store only when the
+        token executed attention there (its KV is otherwise invariant —
+        the paper's key observation)."""
+        self.stats.dense_entries += 1
+        tok = self._tokens
+        if layer == 0:
+            self.entries[0][tok] = (np.asarray(k), np.asarray(v))
+            self.stats.stored_entries += 1
+        elif executed:
+            self.entries[layer][tok] = (np.asarray(k), np.asarray(v))
+            self.stats.stored_entries += 1
+        if layer == self.L - 1:
+            self._tokens += 1
+
+    # -- read path ---------------------------------------------------------
+    def view(self, layer: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Dense [T, H, D] view for attention at ``layer``.
+
+        Consecutive-layer access (the common case) updates the previous
+        view by scattering only layer ``layer``'s compact entries — the
+        invariance-buffer path.  Non-consecutive access rebuilds from
+        layer 0 (the paper's Case-2: buffer invalidated)."""
+        T = self._tokens
+        if self._views_valid_layer is not None and \
+                layer == self._views_valid_layer:
+            pass
+        elif self._views_valid_layer is not None and \
+                layer == self._views_valid_layer + 1 and \
+                len(self._view_k) == T:
+            for tok, (k, v) in self.entries[layer].items():
+                if tok < len(self._view_k):
+                    self._view_k[tok] = k
+                    self._view_v[tok] = v
+                    self.stats.scattered_entries += 1
+        else:
+            self._view_k = [None] * T
+            self._view_v = [None] * T
+            for l in range(layer + 1):
+                for tok, (k, v) in self.entries[l].items():
+                    if tok < T:
+                        self._view_k[tok] = k
+                        self._view_v[tok] = v
+                        self.stats.scattered_entries += 1
+        self._views_valid_layer = layer
+        self.stats.view_entries = max(self.stats.view_entries, T)
+        if T == 0:
+            z = np.zeros((0, self.H, self.D), np.float32)
+            return z, z
+        return (np.stack(self._view_k), np.stack(self._view_v))
+
+    def extend_view_with(self, k: np.ndarray, v: np.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """View including the in-flight token (not yet committed)."""
+        kk, vv = self.view(self._views_valid_layer or 0)
+        return (np.concatenate([kk, k[None]], 0),
+                np.concatenate([vv, v[None]], 0))

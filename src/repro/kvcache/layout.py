@@ -1,0 +1,117 @@
+"""Token-wise KV memory-mapping + transaction model (paper §4.4.1, Fig. 9).
+
+The FPGA maps each token's KV contiguously within one HBM pseudo-channel
+and round-robins tokens across channels; reused (cross-layer) entries
+fragment bursts under the conventional interleaved layout.  This module
+models the three layouts' effective bandwidth the same way the paper's
+Fig. 9 does, re-parameterized for the memory system at hand, and is used
+by ``benchmarks/bench_bandwidth.py``.  On TPU the identical argument
+applies one level up (tokens ↔ chips — see DESIGN.md), so the model is
+labeled in generic "ports".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenWiseLayout:
+    num_ports: int = 16
+    entry_bytes: int = 256 * 2            # one token-layer KV entry
+    burst_bytes: int = 512                # AXI-equivalent burst granule
+    page_miss_penalty: float = 2.5        # row-buffer thrash multiplier
+
+    def port_of(self, token: int) -> int:
+        return token % self.num_ports
+
+    # ---------------------------------------------------------------------
+    # All layouts are scored in the same unit: *rounds of burst time*, with
+    # up to num_ports reads served per round when they map to distinct
+    # ports.  The dense ideal is reads/num_ports rounds.
+    def ideal_rounds(self, n_reads: int) -> float:
+        bursts = -(-self.entry_bytes // self.burst_bytes)
+        return n_reads / self.num_ports * bursts
+
+    def interleaved_transactions(self, reads: Sequence[Dict]) -> float:
+        """Layer-major interleave: fully port-parallel, but cross-layer
+        reuse hops memory regions => row-buffer (page-miss) multiplier on
+        the fraction of layer-discontinuous reads."""
+        bursts = -(-self.entry_bytes // self.burst_bytes)
+        last_layer: Dict[int, int] = {}
+        penalized = 0
+        for r in reads:
+            p = self.port_of(r["token"])
+            if p in last_layer and last_layer[p] != r["layer"]:
+                penalized += 1
+            last_layer[p] = r["layer"]
+        n = len(reads)
+        miss_frac = penalized / n if n else 0.0
+        return (n / self.num_ports) * bursts * (
+            1.0 + miss_frac * (self.page_miss_penalty - 1.0))
+
+    def tokenwise_transactions(self, reads: Sequence[Dict]) -> float:
+        """Token-major mapping: full bursts (no page misses), but concurrent
+        reads hitting one port serialize — round width shrinks on
+        conflicts (paper Fig. 6(b))."""
+        bursts = -(-self.entry_bytes // self.burst_bytes)
+        rounds = 0
+        i = 0
+        reads = list(reads)
+        while i < len(reads):
+            busy = set()
+            while i < len(reads) and len(busy) < self.num_ports:
+                p = self.port_of(reads[i]["token"])
+                if p in busy:
+                    break                      # port conflict ends the round
+                busy.add(p)
+                i += 1
+            rounds += 1
+        return rounds * bursts
+
+    def invariance_buffer_transactions(self, reads: Sequence[Dict]
+                                       ) -> float:
+        """Paper design: reused entries served on-chip; HBM sees only the
+        current layer's fresh entries — port-aligned by construction
+        (round-robin over fresh tokens)."""
+        bursts = -(-self.entry_bytes // self.burst_bytes)
+        fresh = sum(1 for r in reads if r["fresh"])
+        return (fresh / self.num_ports) * bursts
+
+
+def transaction_model(gates: np.ndarray, layout: TokenWiseLayout
+                      ) -> Dict[str, float]:
+    """gates: [L, T] execution mask (1 = fresh KV at that layer).
+    Returns normalized effective-bandwidth estimates for the three layouts
+    (higher = better), mirroring Fig. 9's dense / interleaved / token-wise /
+    +invariance-buffer comparison."""
+    L, T = gates.shape
+    reads: List[Dict] = []
+    for l in range(L):
+        # attention at layer l reads every token's most recent entry
+        last_exec = np.zeros(T, dtype=int)
+        for t in range(T):
+            ex = np.nonzero(gates[: l + 1, t])[0]
+            last_exec[t] = ex[-1] if len(ex) else 0
+        for t in range(T):
+            reads.append({"token": t, "layer": int(last_exec[t]),
+                          "fresh": bool(gates[l, t])})
+    ideal = layout.ideal_rounds(len(reads))
+    controller_eff = 0.887         # paper's measured dense ceiling (88.7 %)
+    out = {
+        "dense_baseline": controller_eff,
+        "interleaved_reuse": controller_eff * ideal / max(
+            layout.interleaved_transactions(reads), 1e-9),
+        "tokenwise_reuse": controller_eff * ideal / max(
+            layout.tokenwise_transactions(reads), 1e-9),
+        # reused entries come from on-chip supply: HBM time covers fresh
+        # entries only (+2% residual non-consecutive traffic), so the
+        # *effective* aggregate can exceed the dense ceiling — the paper's
+        # 467.8 GB/s > 460 GB/s observation.
+        "invariance_buffer": controller_eff * ideal / max(
+            layout.invariance_buffer_transactions(reads) + 0.02 * ideal,
+            1e-9),
+    }
+    return out

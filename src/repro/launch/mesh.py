@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing this module never touches
+jax device state.  The dry-run sets XLA_FLAGS for 512 placeholder host
+devices *before* any jax import (see dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU integration tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count>=data*model)."""
+    return jax.make_mesh((data, model), ("data", "model"))

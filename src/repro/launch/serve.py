@@ -1,0 +1,59 @@
+"""Serving launcher: batched generation with the SkipOPU inference
+pipeline (gather-mode routing + cross-layer KV reuse).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
+      --batch 4 --prompt-len 64 --new-tokens 32
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--gather", action="store_true",
+                    help="compacted (gather) prefill execution")
+    ap.add_argument("--int4", action="store_true",
+                    help="quantize weights to int4 (paper §4.2)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    if args.gather:
+        cfg = dataclasses.replace(
+            cfg, skip=dataclasses.replace(cfg.skip, mode="gather"))
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    if args.int4:
+        from repro.quant import quantize_params
+        params = quantize_params(params, cfg.quant.group_size,
+                                 cfg.quant.pow2_scales)
+
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)
+    eng = ServeEngine(cfg, params,
+                      max_len=args.prompt_len + args.new_tokens,
+                      temperature=args.temperature)
+    out = eng.generate(prompts, args.new_tokens)
+    s = out["stats"]
+    print(f"prefill: {s.prefill_tokens} tok in {s.prefill_s:.2f}s | "
+          f"decode: {s.decode_tok_per_s:.1f} tok/s | "
+          f"attn keep≈{s.attn_keep_frac:.2f} | "
+          f"KV storage saved≈{s.kv_saved_fraction:.1%}")
+    print("sample:", out["tokens"][0, :16])
+
+
+if __name__ == "__main__":
+    main()

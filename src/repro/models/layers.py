@@ -1,0 +1,211 @@
+"""Shared neural-net layers: norms, positional embeddings, (quantizable)
+linear projections, activations.
+
+Everything is pure-functional: ``*_init(key, ...) -> params`` and
+``*_apply(params, x, ...) -> y``.  Params are plain nested dicts of
+``jnp.ndarray`` so the whole model is a pytree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def trunc_normal(key, shape, scale: float, dtype) -> jnp.ndarray:
+    """Truncated-normal init (±2σ) with fan-in scaling handled by caller."""
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear (optionally int4-quantized per paper §4.2)
+# ---------------------------------------------------------------------------
+
+def linear_init(key, in_dim: int, out_dim: int, cfg: ModelConfig,
+                scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return {"w": trunc_normal(key, (in_dim, out_dim), scale, _dtype(cfg))}
+
+
+def linear_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Dispatches dense vs int4-quantized weights.
+
+    Quantized params carry ``w_int`` (int8 storage of int4 codes),
+    ``scale`` [K/G, N] (power-of-2 when cfg.quant.pow2_scales — the BFP domain).
+    """
+    if "w_int" in params:
+        from repro.kernels import ops as kops
+        return kops.int4_matmul(x, params["w_int"], params["scale"],
+                                use_kernel=cfg.use_kernels)
+    return x @ params["w"]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(dim: int, cfg: ModelConfig) -> Params:
+    p = {"gamma": jnp.ones((dim,), _dtype(cfg))}
+    if cfg.norm_type == "layernorm":
+        p["beta"] = jnp.zeros((dim,), _dtype(cfg))
+    return p
+
+
+def norm_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+               stats: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """RMSNorm / LayerNorm with fp32 statistics.
+
+    ``stats`` lets the caller inject *precomputed* normalization statistics —
+    the decoupled-reduction path of the paper's Alg. 1 (statistics are
+    accumulated during the router matmul, elementwise phase runs later).
+    For rmsnorm stats == mean(x²); for layernorm stats == (mean, var).
+    """
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True) if stats is None \
+            else stats[..., None]
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        return (y * params["gamma"].astype(jnp.float32)).astype(x.dtype)
+    if stats is None:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    else:
+        mu, var = stats[0][..., None], stats[1][..., None]
+    y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * params["gamma"].astype(jnp.float32) + params["beta"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_stats(x: jnp.ndarray, cfg: ModelConfig):
+    """The reduction phase alone (paper Alg. 1 line 6)."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        return jnp.mean(xf * xf, axis=-1)
+    mu = jnp.mean(xf, axis=-1)
+    var = jnp.mean(xf * xf, axis=-1) - mu * mu
+    return (mu, var)
+
+
+def rms_head_norm_init(dim: int, cfg: ModelConfig) -> Params:
+    return {"gamma": jnp.ones((dim,), _dtype(cfg))}
+
+
+def rms_head_norm(params: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Per-head qk-norm (RMS over head_dim)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * params["gamma"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE, partial RoPE, M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rotary_pct: float, theta: float) -> jnp.ndarray:
+    rot_dim = int(head_dim * rotary_pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv  # [rot_dim // 2]
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig,
+               ) -> jnp.ndarray:
+    """x: [..., T, H, D]; positions: [B, T] (rope) or [3, B, T] (mrope)."""
+    if cfg.pos_embedding not in ("rope", "mrope"):
+        return x
+    d = x.shape[-1]
+    inv = rope_freqs(d, cfg.rotary_pct, cfg.rope_theta)      # [R/2]
+    half = inv.shape[0]
+    if cfg.pos_embedding == "mrope":
+        # Sections (t, h, w) partition the R/2 frequency slots; each section
+        # consumes its own position stream (Qwen2-VL M-RoPE).
+        sec = cfg.mrope_sections
+        assert sum(sec) == half, (sec, half)
+        pos_f = positions.astype(jnp.float32)                # [3, B, T]
+        freq_parts = []
+        off = 0
+        for s_i, n in enumerate(sec):
+            freq_parts.append(pos_f[s_i][..., None] * inv[off:off + n])
+            off += n
+        freqs = jnp.concatenate(freq_parts, axis=-1)          # [B, T, R/2]
+    else:
+        freqs = positions.astype(jnp.float32)[..., None] * inv  # [B, T, R/2]
+    cos = jnp.cos(freqs)[..., None, :]                        # [B, T, 1, R/2]
+    sin = jnp.sin(freqs)[..., None, :]
+    rot = 2 * half
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = xf1 * cos - xf2 * sin
+    out2 = xf2 * cos + xf1 * sin
+    out = jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out
+
+
+def sinusoidal_positions(positions: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """[B, T] -> [B, T, dim] classic sinusoidal table (MusicGen-style)."""
+    half = dim // 2
+    freq = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    glu = cfg.mlp_act in ("swiglu", "geglu")
+    p = {
+        "up": linear_init(k1, cfg.d_model, d_ff, cfg),
+        "down": linear_init(k2, d_ff, cfg.d_model, cfg),
+    }
+    if glu:
+        p["gate"] = linear_init(k3, cfg.d_model, d_ff, cfg)
+    return p
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    up = linear_apply(params["up"], x, cfg)
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(linear_apply(params["gate"], x, cfg)) * up
+    elif cfg.mlp_act == "geglu":
+        h = jax.nn.gelu(linear_apply(params["gate"], x, cfg)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return linear_apply(params["down"], h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig) -> Params:
+    p = {"table": trunc_normal(key, (cfg.vocab_size, cfg.d_model), 0.02, _dtype(cfg))}
+    return p
+
+
+def embed(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["table"][tokens]
+
+
+def unembed(params: Params, head_params: Optional[Params], x: jnp.ndarray,
+            cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return x @ params["table"].T
+    return linear_apply(head_params, x, cfg)

@@ -1,0 +1,332 @@
+"""LanguageModel: init / train loss / prefill / decode-step over the
+heterogeneous layer stack, with the SkipGPT routing + KV-reuse pipeline
+threaded through every layer.
+
+Public entry points (all pure functions of (cfg, params, ...)):
+  init_params            — parameter pytree
+  train_loss             — chunked-softmax LM loss + router/MoE aux losses
+  prefill                — forward pass that builds the per-layer KV caches
+  decode_step            — one-token autoregressive step over those caches
+  init_decode_cache      — zero caches for decode-only lowering (dry-run)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL, MAMBA, ModelConfig
+from repro.distributed.sharding import hint
+from repro.models import layers, ssm as ssm_mod, transformer
+from repro.models.layers import Params
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "embed": layers.embedding_init(ks[0], cfg),
+        "stack": transformer.stack_init(ks[1], cfg),
+        "final_norm": layers.norm_init(cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.linear_init(ks[2], cfg.d_model, cfg.vocab_size,
+                                          cfg, scale=0.02)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Input plumbing
+# ---------------------------------------------------------------------------
+
+def _positions(batch: Dict[str, jnp.ndarray], B: int, T: int,
+               cfg: ModelConfig) -> jnp.ndarray:
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    if cfg.pos_embedding == "mrope":
+        return jnp.broadcast_to(pos[None], (3, B, T))
+    return pos
+
+
+def _embed_inputs(params: Params, batch: Dict[str, jnp.ndarray],
+                  positions: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.frontend == "token":
+        x = layers.embed(params["embed"], batch["tokens"])
+    else:
+        # audio/vlm stub: the modality frontend is out of scope (paper
+        # backbone only); precomputed frame/patch embeddings come in.
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    if cfg.pos_embedding == "sinusoidal":
+        pos = positions if positions.ndim == 2 else positions[0]
+        x = x + layers.sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)
+    return hint(x, "activation")
+
+
+# ---------------------------------------------------------------------------
+# Stack application
+# ---------------------------------------------------------------------------
+
+def _apply_stack(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                 cfg: ModelConfig, rng: Optional[jax.Array], train: bool,
+                 collect_cache: bool
+                 ) -> Tuple[jnp.ndarray, Dict, Optional[Dict]]:
+    stack = params["stack"]
+    S = cfg.num_stages
+    r0 = jax.random.fold_in(rng, 0) if rng is not None else None
+
+    def stage0_fn(sp, x):
+        x = hint(x, "residual")
+        return transformer.stage_forward(
+            sp, x, None, positions, cfg, r0, train, collect_cache, True)
+
+    if cfg.remat:
+        stage0_fn = jax.checkpoint(stage0_fn)
+    x, view, stats, cache0 = stage0_fn(stack["stage0"], x)
+    cache: Optional[Dict] = {"stage0": cache0} if collect_cache else None
+
+    if S > 1:
+        keys = (jax.random.split(jax.random.fold_in(rng, 1), S - 1)
+                if rng is not None else None)
+
+        def body(carry, xs):
+            x, view = carry
+            x = hint(x, "residual")
+            if view is not None:
+                view = (hint(view[0], "kv_view"), hint(view[1], "kv_view"))
+            if keys is not None:
+                sp, k = xs
+            else:
+                sp, k = xs, None
+            x, view, s, c = transformer.stage_forward(
+                sp, x, view, positions, cfg, k, train, collect_cache, False)
+            if view is not None:
+                view = (hint(view[0], "kv_view"), hint(view[1], "kv_view"))
+            return (hint(x, "residual"), view), (s, c)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            xs = (stack["stages"], keys) if keys is not None else stack["stages"]
+            (x, view), (s_scan, c_scan) = jax.lax.scan(body, (x, view), xs)
+            stats = jax.tree_util.tree_map(lambda a, b: a + b.sum(axis=0),
+                                           stats, s_scan)
+            if collect_cache:
+                cache["stages"] = c_scan
+        else:
+            # unrolled (dry-run accounting mode: XLA cost_analysis does not
+            # multiply while-loop bodies by trip count)
+            c_list = []
+            for i in range(S - 1):
+                sp = jax.tree_util.tree_map(lambda l: l[i], stack["stages"])
+                xs = (sp, keys[i]) if keys is not None else sp
+                (x, view), (s, c) = body((x, view), xs)
+                stats = jax.tree_util.tree_map(lambda a, b: a + b, stats, s)
+                c_list.append(c)
+            if collect_cache:
+                cache["stages"] = jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls), *c_list)
+    return x, stats, cache
+
+
+# ---------------------------------------------------------------------------
+# Training loss (chunked softmax cross-entropy)
+# ---------------------------------------------------------------------------
+
+def _xent_chunk(x: jnp.ndarray, labels: jnp.ndarray, weights: jnp.ndarray,
+                params: Params, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, Tc, D] -> (sum nll, sum weight).  Bounds peak logits memory to
+    one sequence chunk (important for the 262k-vocab archs)."""
+    logits = layers.unembed(params["embed"], params.get("lm_head"), x, cfg)
+    logits = hint(logits, "logits").astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * weights
+    return nll.sum(), weights.sum()
+
+
+def chunked_xent(x: jnp.ndarray, labels: jnp.ndarray, weights: jnp.ndarray,
+                 params: Params, cfg: ModelConfig) -> jnp.ndarray:
+    B, T, D = x.shape
+    C = min(cfg.xent_chunk, T)
+    if T % C:
+        C = T
+    nc = T // C
+    if nc == 1:
+        nll, w = _xent_chunk(x, labels, weights, params, cfg)
+        return nll / jnp.maximum(w, 1.0)
+
+    def chunk_fn(xc, lc, wc, params):
+        return _xent_chunk(xc, lc, wc, params, cfg)
+
+    if cfg.remat:
+        chunk_fn = jax.checkpoint(chunk_fn)
+
+    def body(carry, inp):
+        xc, lc, wc = inp
+        nll, w = chunk_fn(xc, lc, wc, params)
+        return (carry[0] + nll, carry[1] + w), None
+
+    xs = (x.reshape(B, nc, C, D).swapaxes(0, 1),
+          labels.reshape(B, nc, C).swapaxes(0, 1),
+          weights.reshape(B, nc, C).swapaxes(0, 1))
+    (nll, w), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    return nll / jnp.maximum(w, 1.0)
+
+
+def train_loss(params: Params, batch: Dict[str, jnp.ndarray],
+               rng: Optional[jax.Array], cfg: ModelConfig
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    if cfg.frontend == "token":
+        B, T = batch["tokens"].shape
+    else:
+        B, T = batch["embeds"].shape[:2]
+    positions = _positions(batch, B, T, cfg)
+    x = _embed_inputs(params, batch, positions, cfg)
+    x, stats, _ = _apply_stack(params, x, positions, cfg, rng, True, False)
+    x = layers.norm_apply(params["final_norm"], x, cfg)
+
+    labels = batch["labels"]
+    weights = batch.get("loss_weights",
+                        jnp.ones(labels.shape, jnp.float32))
+    xent = chunked_xent(x, labels, weights, params, cfg)
+
+    router_loss = stats["router_loss"]
+    moe_lb = stats["moe_lb_loss"]
+    loss = (xent + cfg.skip.router_loss_weight * router_loss
+            + cfg.moe_lb_weight * moe_lb)
+    keep = stats["keep_frac_sum"] / jnp.maximum(stats["n_routed"], 1.0)
+    metrics = {"loss": loss, "xent": xent, "router_loss": router_loss,
+               "moe_lb_loss": moe_lb, "keep_frac": keep}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def _pad_cache_to(cache: Dict, T: int, pad_to: int, cfg: ModelConfig) -> Dict:
+    """Grow dense KV leaves from length T to pad_to (decode headroom)."""
+    def one(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        if names and names[-1] in ("k", "v"):
+            axis = leaf.ndim - 3                  # [.., T, Hkv, dh]
+            if leaf.shape[axis] == T and pad_to > T:
+                pads = [(0, 0)] * leaf.ndim
+                pads[axis] = (0, pad_to - T)
+                return jnp.pad(leaf, pads)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            pad_to: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """Returns (last-position logits [B, V], cache, stats)."""
+    if cfg.frontend == "token":
+        B, T = batch["tokens"].shape
+    else:
+        B, T = batch["embeds"].shape[:2]
+    positions = _positions(batch, B, T, cfg)
+    x = _embed_inputs(params, batch, positions, cfg)
+    x, stats, cache = _apply_stack(params, x, positions, cfg, None, False, True)
+    x = layers.norm_apply(params["final_norm"], x, cfg)
+    logits = layers.unembed(params["embed"], params.get("lm_head"),
+                            x[:, -1:, :], cfg)[:, 0]
+    if pad_to is not None:
+        cache = _pad_cache_to(cache, T, pad_to, cfg)
+    return logits, cache, stats
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None) -> Dict:
+    """Zero caches shaped for decode-only lowering (the dry-run's
+    ``decode_*`` shapes: one new token against a seq_len-deep cache)."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    Hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    di, g, n = cfg.d_inner_ssm, cfg.ssm_groups, cfg.ssm_state
+    nh, pd = cfg.ssm_nheads, cfg.ssm_headdim
+
+    def entry(kind: str) -> Dict[str, jnp.ndarray]:
+        if kind == MAMBA:
+            return {
+                "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, di), dt),
+                "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * g * n), dt),
+                "ssm": jnp.zeros((batch, nh, pd, n), jnp.float32),
+            }
+        L = (min(cfg.window_size, max_len) if kind == LOCAL and cfg.window_size
+             else max_len)
+        if cfg.kv_cache_layout == "bhtd" and not (
+                kind == LOCAL and cfg.window_size):
+            return {"k": jnp.zeros((batch, Hkv, L, dh), dt),
+                    "v": jnp.zeros((batch, Hkv, L, dh), dt)}
+        return {"k": jnp.zeros((batch, L, Hkv, dh), dt),
+                "v": jnp.zeros((batch, L, Hkv, dh), dt)}
+
+    stage = {f"pos{k}": entry(cfg.block_kind(k)) for k in range(cfg.stage_len)}
+    cache: Dict[str, Any] = {"stage0": stage}
+    if cfg.num_stages > 1:
+        cache["stages"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a[None], (cfg.num_stages - 1,) + a.shape), stage)
+    return cache
+
+
+def decode_step(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
+                t: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """One token for every sequence.  batch: {'tokens': [B, 1]} (or
+    {'embeds': [B, 1, D]}); t: scalar current position.  Returns
+    (logits [B, V], new cache, stats)."""
+    if cfg.frontend == "token":
+        B = batch["tokens"].shape[0]
+    else:
+        B = batch["embeds"].shape[0]
+    pos = jnp.full((B, 1), t, jnp.int32)
+    if cfg.pos_embedding == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, B, 1))
+    x = _embed_inputs(params, batch, pos, cfg)
+
+    stack = params["stack"]
+    x, kv_prev, c0, stats = transformer.stage_decode(
+        stack["stage0"], cache["stage0"], x, None, t, pos, cfg)
+    new_cache: Dict[str, Any] = {"stage0": c0}
+
+    if cfg.num_stages > 1:
+        def body(carry, xs):
+            x, kv_prev = carry
+            sp, ce = xs
+            x, kv_prev, c, s = transformer.stage_decode(
+                sp, ce, x, kv_prev, t, pos, cfg)
+            return (x, kv_prev), (c, s)
+
+        if cfg.scan_layers:
+            (x, kv_prev), (cs, s_scan) = jax.lax.scan(
+                body, (x, kv_prev), (stack["stages"], cache["stages"]))
+            new_cache["stages"] = cs
+            stats = jax.tree_util.tree_map(lambda a, b: a + b.sum(axis=0),
+                                           stats, s_scan)
+        else:
+            c_list = []
+            for i in range(cfg.num_stages - 1):
+                sl = lambda l: l[i]
+                xs = (jax.tree_util.tree_map(sl, stack["stages"]),
+                      jax.tree_util.tree_map(sl, cache["stages"]))
+                (x, kv_prev), (c, s) = body((x, kv_prev), xs)
+                stats = jax.tree_util.tree_map(lambda a, b: a + b, stats, s)
+                c_list.append(c)
+            new_cache["stages"] = jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *c_list)
+
+    x = layers.norm_apply(params["final_norm"], x, cfg)
+    logits = layers.unembed(params["embed"], params.get("lm_head"), x, cfg)
+    return logits[:, 0], new_cache, stats

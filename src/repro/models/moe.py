@@ -1,0 +1,103 @@
+"""Top-k MoE with static-capacity scatter dispatch (GShard/Mixtral-style),
+expert-parallel shardable, plus Arctic's dense-residual composition.
+
+Dispatch is scatter-based rather than one-hot-einsum so the dispatch buffer
+stays O(E·C·D) — the [N, E, C] one-hot tensor would be ~100× larger at the
+assigned shapes.  The SkipGPT FFN router composes *outside* this module: it
+decides whether a token enters the MoE block at all (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import hint
+from repro.models import layers
+from repro.models.layers import Params
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    glu = cfg.mlp_act in ("swiglu", "geglu")
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p: Params = {
+        "gate": layers.trunc_normal(ks[0], (d, E), s_in, dt),
+        "w_up": layers.trunc_normal(ks[1], (E, d, f), s_in, dt),
+        "w_down": layers.trunc_normal(ks[2], (E, f, d), s_out, dt),
+    }
+    if glu:
+        p["w_gate"] = layers.trunc_normal(ks[3], (E, d, f), s_in, dt)
+    if cfg.dense_residual:
+        p["dense"] = layers.mlp_init(ks[4], cfg)
+    return p
+
+
+def _expert_ffn(params: Params, h: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """h: [E, C, D] -> [E, C, D] batched per-expert GLU."""
+    up = jnp.einsum("ecd,edf->ecf", h, params["w_up"])
+    if "w_gate" in params:
+        g = jnp.einsum("ecd,edf->ecf", h, params["w_gate"])
+        act = jax.nn.silu(g) if cfg.mlp_act == "swiglu" else jax.nn.gelu(g)
+        mid = act * up
+    else:
+        mid = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", mid, params["w_down"])
+
+
+def moe_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B, T, D] -> (y, aux).  aux carries the load-balance loss + stats."""
+    B, T, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    N = B * T
+    xf = x.reshape(N, D)
+
+    gate_logits = (xf.astype(jnp.float32) @ params["gate"].astype(jnp.float32))
+    probs = jax.nn.softmax(gate_logits, axis=-1)             # [N, E]
+    top_p, top_e = jax.lax.top_k(probs, K)                   # [N, K]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(math.ceil(cfg.moe_capacity_factor * N * K / E))
+    capacity = max(8, -(-capacity // 8) * 8)                 # round up to 8
+
+    # Position of each (token, slot) within its expert: token-major priority.
+    flat_e = top_e.reshape(-1)                               # [N*K] slot-major? no:
+    # reshape is row-major => slots of token i come before token i+1 — the
+    # paper's routing is token-order too (prefill streams tokens in order).
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # [N*K, E]
+    pos = jnp.cumsum(onehot, axis=0) - 1                     # [N*K, E]
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < capacity
+    dest = jnp.where(keep, flat_e * capacity + pos_in_e, E * capacity)
+
+    dest = dest.reshape(N, K)
+    buf = jnp.zeros((E * capacity, D), x.dtype)
+    for j in range(K):                                       # K static & small
+        buf = buf.at[dest[:, j]].add(xf, mode="drop")
+    buf = hint(buf.reshape(E, capacity, D), "moe_buffer")
+
+    out_buf = _expert_ffn(params, buf, cfg)
+    out_buf = hint(out_buf, "moe_buffer").reshape(E * capacity, D)
+
+    y = jnp.zeros((N, D), x.dtype)
+    for j in range(K):
+        gathered = jnp.take(out_buf, dest[:, j], axis=0, mode="fill",
+                            fill_value=0)
+        y = y + gathered * top_p[:, j].astype(x.dtype)[:, None]
+
+    if "dense" in params:                                    # Arctic residual
+        y = y + layers.mlp_apply(params["dense"], x, cfg).reshape(N, D)
+
+    # Switch-style load-balance loss.
+    me = probs.mean(axis=0)                                  # mean gate prob
+    ce = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (N * K)
+    lb_loss = E * jnp.sum(me * ce)
+    dropped = 1.0 - keep.mean()
+    aux = {"moe_lb_loss": lb_loss, "moe_drop_frac": dropped}
+    return y.reshape(B, T, D), aux

@@ -1,0 +1,248 @@
+"""Mamba-2 / SSD (state-space duality) block — chunked scan forward and a
+single-token decode step.
+
+The chunked SSD computes, per chunk of length Q:
+  intra-chunk: a masked attention-like product  C_i · B_j · decay(i,j) · (dt_j x_j)
+  inter-chunk: a running state  S ← S·exp(ΣdA) + Σ_j decay(end,j)·B_j ⊗ (dt_j x_j)
+which is the sub-quadratic form used for the `mamba2-2.7b` and `jamba` archs.
+
+Projections are kept *separate per component* (z, x, B/C, dt) so the inner
+dimension (heads × headdim) tensor-parallels cleanly over the `model` mesh
+axis while the small B/C/dt streams stay replicated — see
+`distributed/sharding.py`.
+
+SkipGPT adaptation (DESIGN.md §Arch-applicability): token routing on SSM
+layers uses *masked-contribution* semantics — a skipped token's dt is zeroed
+(no state update, no output) and it rides the residual stream.  KV reuse is
+inapplicable (no KV cache).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import hint
+from repro.models import layers
+from repro.models.layers import Params
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner_ssm
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    nh, p = cfg.ssm_nheads, cfg.ssm_headdim
+    return di, g, n, nh, p
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    di, g, n, _, _ = _dims(cfg)
+    return di + 2 * g * n
+
+
+def ssm_init(key, cfg: ModelConfig) -> Params:
+    di, g, n, nh, p = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default).
+    u = jax.random.uniform(ks[5], (nh,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))                # inverse softplus
+    return {
+        "in_proj_z": layers.linear_init(ks[0], d, di, cfg),
+        "in_proj_x": layers.linear_init(ks[1], d, di, cfg),
+        "in_proj_bc": layers.linear_init(ks[2], d, 2 * g * n, cfg),
+        "in_proj_dt": layers.linear_init(ks[3], d, nh, cfg),
+        "conv_x_w": layers.trunc_normal(ks[4], (cfg.ssm_conv, di),
+                                        1.0 / math.sqrt(cfg.ssm_conv), dt),
+        "conv_x_b": jnp.zeros((di,), dt),
+        "conv_bc_w": layers.trunc_normal(ks[6], (cfg.ssm_conv, 2 * g * n),
+                                         1.0 / math.sqrt(cfg.ssm_conv), dt),
+        "conv_bc_b": jnp.zeros((2 * g * n,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": {"gamma": jnp.ones((di,), dt)},
+        "out_proj": layers.linear_init(ks[7], di, d, cfg),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d.  x: [B, T, C]; w: [W, C]."""
+    W = w.shape[0]
+    if init_state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([init_state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _expand_groups(m: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """[..., G, N] -> [..., nh, N] broadcast heads within a group."""
+    di, g, n, nh, p = _dims(cfg)
+    return jnp.repeat(m, nh // g, axis=-2)
+
+
+def ssd_scan(xh: jnp.ndarray, dt: jnp.ndarray, A_log: jnp.ndarray,
+             Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+             init_state: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.
+
+    xh [B,T,H,P], dt [B,T,H] (≥0, already masked for skipped tokens),
+    A_log [H], Bm/Cm [B,T,H,N].  Returns (y [B,T,H,P], state [B,H,P,N]).
+    """
+    B, T, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        z = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xh, dt, Bm, Cm = z(xh), z(dt), z(Bm), z(Cm)
+    Tp = T + pad
+    nc = Tp // Q
+
+    def chunkify(a):
+        a = a.reshape(B, nc, Q, *a.shape[2:])
+        return jnp.moveaxis(a, 1, 0)                    # [nc, B, Q, ...]
+
+    xc, dtc, Bc, Cc = map(chunkify, (xh, dt, Bm, Cm))
+    dA = dtc * (-jnp.exp(A_log))                        # [nc,B,Q,H]
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+
+    s0 = init_state if init_state is not None else \
+        jnp.zeros((B, H, Pd, N), jnp.float32)
+
+    idx = jnp.arange(Q)
+    tri = idx[:, None] >= idx[None, :]                  # [Qi, Qj] causal
+
+    def body(state, inp):
+        xq, dtq, bq, cq, cumq = inp                     # [B,Q,...]
+        state = hint(state, "ssm_state")
+        dtx = xq.astype(jnp.float32) * dtq[..., None]   # [B,Q,H,P]
+        # --- intra-chunk (attention-like) ---
+        seg = jnp.exp(cumq[:, :, None, :] - cumq[:, None, :, :])  # [B,Qi,Qj,H]
+        seg = jnp.where(tri[None, :, :, None], seg, 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", cq.astype(jnp.float32),
+                            bq.astype(jnp.float32)) * seg
+        y = jnp.einsum("bijh,bjhp->bihp", scores, dtx)
+        # --- inter-chunk (carried state) ---
+        y = y + jnp.einsum("bihn,bhpn->bihp", cq.astype(jnp.float32), state) \
+            * jnp.exp(cumq)[..., None]
+        decay_end = jnp.exp(cumq[:, -1, :])             # [B,H]
+        w = jnp.exp(cumq[:, -1:, :] - cumq)             # [B,Q,H]
+        s_local = jnp.einsum("bjhn,bjhp->bhpn",
+                             bq.astype(jnp.float32) * w[..., None], dtx)
+        state = state * decay_end[:, :, None, None] + s_local
+        return state, y
+
+    if nc == 1:
+        state, y = body(s0, (xc[0], dtc[0], Bc[0], Cc[0], cum[0]))
+        ys = y[None]
+    else:
+        state, ys = jax.lax.scan(body, s0, (xc, dtc, Bc, Cc, cum))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Tp, H, Pd)[:, :T]
+    return y, state
+
+
+def ssm_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+              gate_mask: Optional[jnp.ndarray] = None,
+              conv_state: Optional[Tuple] = None,
+              ssm_state: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Tuple]:
+    """Full-sequence forward.  x: [B, T, D]; gate_mask: [B, T] 0/1 keep mask
+    (SkipGPT masked-contribution routing).
+
+    Returns (y, ((conv_x_hist, conv_bc_hist), ssm_state))."""
+    di, g, n, nh, p = _dims(cfg)
+    B, T, D = x.shape
+    z = layers.linear_apply(params["in_proj_z"], x, cfg)
+    xin = layers.linear_apply(params["in_proj_x"], x, cfg)
+    bc = layers.linear_apply(params["in_proj_bc"], x, cfg)
+    dt = layers.linear_apply(params["in_proj_dt"], x, cfg)
+
+    cs_x, cs_bc = conv_state if conv_state is not None else (None, None)
+    W = cfg.ssm_conv
+
+    def hist(raw, cs):
+        h = raw if cs is None else jnp.concatenate([cs, raw], axis=1)
+        if h.shape[1] < W - 1:
+            h = jnp.pad(h, ((0, 0), (W - 1 - h.shape[1], 0), (0, 0)))
+        return h[:, -(W - 1):, :]
+    new_conv_state = (hist(xin, cs_x), hist(bc, cs_bc))
+    xin = _causal_conv(xin, params["conv_x_w"], params["conv_x_b"], cs_x)
+    bc = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"], cs_bc)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,T,H]
+    if gate_mask is not None:
+        dt = dt * gate_mask.astype(jnp.float32)[..., None]
+
+    xh = xin.reshape(B, T, nh, p)
+    Bc_, Cc_ = jnp.split(bc, 2, axis=-1)
+    Bm = _expand_groups(Bc_.reshape(B, T, g, n), cfg)
+    Cm = _expand_groups(Cc_.reshape(B, T, g, n), cfg)
+
+    y, state = ssd_scan(xh, dt, params["A_log"], Bm, Cm, cfg.ssm_chunk,
+                        init_state=ssm_state)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    if gate_mask is not None:
+        y = y * gate_mask.astype(jnp.float32)[..., None, None]
+    y = y.reshape(B, T, di).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = layers.rms_head_norm(params["norm"], y, cfg.norm_eps)
+    out = layers.linear_apply(params["out_proj"], y, cfg)
+    return out, (new_conv_state, state)
+
+
+def ssm_step(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+             conv_state: Tuple[jnp.ndarray, jnp.ndarray],
+             ssm_state: jnp.ndarray,
+             gate_mask: Optional[jnp.ndarray] = None,
+             ) -> Tuple[jnp.ndarray, Tuple]:
+    """Single-token decode.  x: [B, 1, D]; conv_state: (x_hist [B,W-1,di],
+    bc_hist [B,W-1,2gn]) pre-activation inputs; ssm_state: [B, H, P, N]."""
+    di, g, n, nh, p = _dims(cfg)
+    B = x.shape[0]
+    z = layers.linear_apply(params["in_proj_z"], x, cfg)
+    xin = layers.linear_apply(params["in_proj_x"], x, cfg)
+    bc = layers.linear_apply(params["in_proj_bc"], x, cfg)
+    dt = layers.linear_apply(params["in_proj_dt"], x, cfg)
+
+    cs_x, cs_bc = conv_state
+
+    def step_conv(raw, cs, w, b):
+        window = jnp.concatenate([cs, raw], axis=1)          # [B, W, C]
+        out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w) + b)
+        return out[:, None, :], window[:, 1:, :]
+
+    xin, new_cs_x = step_conv(xin, cs_x, params["conv_x_w"], params["conv_x_b"])
+    bc, new_cs_bc = step_conv(bc, cs_bc, params["conv_bc_w"], params["conv_bc_b"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # [B,H]
+    if gate_mask is not None:
+        dt = dt * gate_mask.astype(jnp.float32)[:, None]
+    dA = jnp.exp(dt * (-jnp.exp(params["A_log"])))           # [B,H]
+
+    xh = xin.reshape(B, nh, p).astype(jnp.float32)
+    Bc_, Cc_ = jnp.split(bc, 2, axis=-1)
+    Bm = _expand_groups(Bc_.reshape(B, g, n), cfg)           # [B,H,N]
+    Cm = _expand_groups(Cc_.reshape(B, g, n), cfg)
+
+    upd = jnp.einsum("bhp,bhn->bhpn", xh * dt[..., None], Bm.astype(jnp.float32))
+    new_state = ssm_state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(jnp.float32), new_state)
+    y = y + params["D"][None, :, None] * xh
+    if gate_mask is not None:
+        y = y * gate_mask.astype(jnp.float32)[:, None, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = layers.rms_head_norm(params["norm"], y, cfg.norm_eps)
+    out = layers.linear_apply(params["out_proj"], y, cfg)
+    return out, ((new_cs_x, new_cs_bc), new_state)

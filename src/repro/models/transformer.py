@@ -1,0 +1,264 @@
+"""Layer-stack composition: heterogeneous super-block scan.
+
+Layers are grouped into *stages* of ``cfg.stage_len`` layers (the lcm of the
+interleave pattern and the MoE period) so arbitrary patterns — Gemma-3's
+5 local : 1 global, Jamba's 1 attn : 7 mamba with every-2nd-layer MoE —
+compile as ONE scanned super-block.  Stage 0 runs unrolled: it anchors the
+cross-layer KV-reuse recursion (the view base case) and the decode-time
+single-token view carry.
+
+Caches:
+  * global-attention layers: dense per-layer KV view [B, Tmax, Hkv, dh]
+  * local (sliding-window) layers: ring buffer [B, W, Hkv, dh] written at
+    ``pos % W`` — this is what makes ``long_500k`` decoding feasible
+  * mamba layers: (conv history, SSD state)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL, MAMBA, ModelConfig
+from repro.core import skip_block
+from repro.distributed.sharding import hint
+from repro.models import attention as attn_mod
+from repro.models import layers, moe as moe_mod, ssm as ssm_mod
+from repro.models.layers import Params
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _routed_init(key, cfg: ModelConfig, inner) -> Params:
+    from repro.core import routing
+    k1, k2 = jax.random.split(key)
+    return {
+        "router": routing.router_init(k1, cfg),
+        "norm": layers.norm_init(cfg.d_model, cfg),
+        "inner": inner,
+    }
+
+
+def block_init(key, cfg: ModelConfig, pos_in_stage: int) -> Params:
+    """One layer's parameters.  ``pos_in_stage`` determines kind/MoE (stage
+    structure repeats identically across stages)."""
+    kind = cfg.block_kind(pos_in_stage)
+    is_moe = cfg.is_moe_layer(pos_in_stage)
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    if kind == MAMBA:
+        p["mixer"] = _routed_init(ks[0], cfg, ssm_mod.ssm_init(ks[1], cfg))
+    else:
+        p["mixer"] = _routed_init(ks[0], cfg, attn_mod.attention_init(ks[1], cfg))
+    if is_moe:
+        p["ffn"] = _routed_init(ks[2], cfg, moe_mod.moe_init(ks[3], cfg))
+    elif cfg.d_ff:
+        p["ffn"] = _routed_init(ks[2], cfg, layers.mlp_init(ks[3], cfg))
+    return p
+
+
+def stage_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, cfg.stage_len)
+    return {f"pos{k}": block_init(ks[k], cfg, k) for k in range(cfg.stage_len)}
+
+
+def stack_init(key, cfg: ModelConfig) -> Params:
+    """{'stage0': stage params, 'stages': stacked [S-1, ...] params}."""
+    S = cfg.num_stages
+    ks = jax.random.split(key, S)
+    p: Params = {"stage0": stage_init(ks[0], cfg)}
+    if S > 1:
+        stacked = jax.vmap(lambda k: stage_init(k, cfg))(jnp.stack(ks[1:]))
+        p["stages"] = stacked
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Stage forward (prefill / train)
+# ---------------------------------------------------------------------------
+
+_ZERO_STATS = lambda: {"router_loss": jnp.float32(0.0),
+                       "keep_frac_sum": jnp.float32(0.0),
+                       "n_routed": jnp.float32(0.0),
+                       "moe_lb_loss": jnp.float32(0.0),
+                       "n_moe": jnp.float32(0.0)}
+
+
+def _acc_stats(acc: Dict, s: Dict, routed_kind: bool) -> Dict:
+    acc = dict(acc)
+    acc["router_loss"] += s.get("router_loss", 0.0)
+    if routed_kind:
+        acc["keep_frac_sum"] += s.get("keep_frac", 0.0)
+        acc["n_routed"] += 1.0
+    if "moe_lb_loss" in s:
+        acc["moe_lb_loss"] += s["moe_lb_loss"]
+        acc["n_moe"] += 1.0
+    return acc
+
+
+def _ffn_inner(cfg: ModelConfig, is_moe: bool):
+    if is_moe:
+        return lambda p, xn: moe_mod.moe_apply(p, xn, cfg)
+    return lambda p, xn: (layers.mlp_apply(p, xn, cfg), {})
+
+
+def stage_forward(stage_params: Params, x: jnp.ndarray,
+                  view: Optional[Tuple], positions: jnp.ndarray,
+                  cfg: ModelConfig, rng: Optional[jax.Array], train: bool,
+                  collect_cache: bool, is_stage0: bool
+                  ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict, Dict]:
+    """Apply one super-block.  Returns (x, view, stats, cache)."""
+    stats = _ZERO_STATS()
+    cache: Dict[str, Any] = {}
+    T = x.shape[1]
+    for k in range(cfg.stage_len):
+        bp = stage_params[f"pos{k}"]
+        kind = cfg.block_kind(k)
+        is_moe = cfg.is_moe_layer(k)
+        r_mix = (jax.random.fold_in(rng, 2 * k) if rng is not None else None)
+        r_ffn = (jax.random.fold_in(rng, 2 * k + 1) if rng is not None else None)
+
+        if kind == MAMBA:
+            x, states, s = skip_block.routed_ssm(
+                bp["mixer"], x, cfg, rng=r_mix, train=train)
+            stats = _acc_stats(stats, s, cfg.skip.route_ssm)
+            if collect_cache:
+                cache[f"pos{k}"] = {"conv_x": states[0][0],
+                                    "conv_bc": states[0][1],
+                                    "ssm": states[1]}
+        else:
+            window = cfg.window_size if kind == LOCAL else 0
+            # Local layers keep their own (window-bounded) view; the global
+            # cross-layer reuse chain only threads through matching kinds.
+            x, view, s = skip_block.routed_attention(
+                bp["mixer"], x, view, positions, cfg, rng=r_mix, train=train,
+                window=window)
+            stats = _acc_stats(stats, s, cfg.skip.route_attention)
+            if collect_cache:
+                if kind == LOCAL and cfg.window_size and T > cfg.window_size:
+                    cache[f"pos{k}"] = {
+                        "k": _ring_from_linear(view[0], cfg.window_size),
+                        "v": _ring_from_linear(view[1], cfg.window_size)}
+                else:
+                    cache[f"pos{k}"] = {"k": view[0], "v": view[1]}
+
+        if "ffn" in bp:
+            x, s = skip_block.routed_mlp(
+                bp["ffn"], x, cfg, inner_fn=_ffn_inner(cfg, is_moe),
+                rng=r_ffn, train=train)
+            stats = _acc_stats(stats, s, cfg.skip.route_mlp)
+    return x, view, stats, cache
+
+
+def _ring_from_linear(kv: jnp.ndarray, W: int) -> jnp.ndarray:
+    """[B, T, H, d] -> ring buffer [B, W, H, d]: slot s holds the latest
+    position ≡ s (mod W)."""
+    T = kv.shape[1]
+    if T <= W:
+        return jnp.pad(kv, ((0, 0), (0, W - T), (0, 0), (0, 0)))
+    tail = kv[:, T - W:]                                 # positions T-W..T-1
+    shift = (T - W) % W
+    return jnp.roll(tail, shift, axis=1)
+
+
+def ring_positions(t: jnp.ndarray, W: int) -> jnp.ndarray:
+    """Absolute position stored in each ring slot after writing position t.
+    slot s holds p = t - ((t - s) mod W);  p < 0 => empty."""
+    s = jnp.arange(W)
+    return t - ((t - s) % W)
+
+
+# ---------------------------------------------------------------------------
+# Stage decode step
+# ---------------------------------------------------------------------------
+
+def stage_decode(stage_params: Params, cache: Dict, x: jnp.ndarray,
+                 kv_prev: Optional[Tuple], t: jnp.ndarray,
+                 positions: jnp.ndarray, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict, Dict]:
+    """One super-block, one token.  Returns (x, kv_prev, new_cache, stats)."""
+    stats = _ZERO_STATS()
+    new_cache: Dict[str, Any] = {}
+    for k in range(cfg.stage_len):
+        bp = stage_params[f"pos{k}"]
+        ce = cache[f"pos{k}"]
+        kind = cfg.block_kind(k)
+        is_moe = cfg.is_moe_layer(k)
+
+        if kind == MAMBA:
+            x, states, s = skip_block.routed_ssm_decode(
+                bp["mixer"], x, cfg, conv_state=(ce["conv_x"], ce["conv_bc"]),
+                ssm_state=ce["ssm"])
+            new_cache[f"pos{k}"] = {"conv_x": states[0][0],
+                                    "conv_bc": states[0][1],
+                                    "ssm": states[1]}
+            stats = _acc_stats(stats, s, cfg.skip.route_ssm)
+        elif kind == LOCAL and ce["k"].shape[1] == cfg.window_size:
+            x, kc, vc, kv_prev_l, s = _ring_attention_decode(
+                bp["mixer"], x, ce["k"], ce["v"], t, kv_prev, positions, cfg)
+            new_cache[f"pos{k}"] = {"k": kc, "v": vc}
+            kv_prev = kv_prev_l
+            stats = _acc_stats(stats, s, cfg.skip.route_attention)
+        else:
+            window = cfg.window_size if kind == LOCAL else 0
+            x, kc, vc, kv_prev, s = skip_block.routed_attention_decode(
+                bp["mixer"], x, ce["k"], ce["v"], t, kv_prev, positions, cfg,
+                window=window)
+            new_cache[f"pos{k}"] = {"k": kc, "v": vc}
+            stats = _acc_stats(stats, s, cfg.skip.route_attention)
+
+        if "ffn" in bp:
+            x, s = skip_block.routed_mlp_decode(
+                bp["ffn"], x, cfg, inner_fn=_ffn_inner(cfg, is_moe))
+            stats = _acc_stats(stats, s, cfg.skip.route_mlp)
+    return x, kv_prev, new_cache, stats
+
+
+def _ring_attention_decode(p: Params, x, k_ring, v_ring, t, kv_prev,
+                           positions, cfg: ModelConfig):
+    """Sliding-window decode against a ring buffer cache [B, W, H, d]."""
+    from repro.core import kv_reuse, routing
+
+    B = x.shape[0]
+    W = cfg.window_size
+    routed = cfg.skip.enabled and cfg.skip.route_attention
+    logits, nstats = skip_block._router_and_stats(p, x, cfg, routed)
+    gate, p_keep = skip_block._gate(
+        logits[:, 0] if logits is not None else None, None, cfg, False, (B,),
+        routed)
+    inner = p["inner"]
+    xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+    q = attn_mod.project_q(inner, xn, positions, cfg)
+    k_new, v_new = attn_mod.project_kv(inner, xn, positions, cfg)
+    if routed and cfg.skip.kv_reuse:
+        k_t, v_t = kv_reuse.merge_token_view(kv_prev, k_new, v_new, gate)
+    else:
+        k_t, v_t = k_new, v_new
+
+    slot = jnp.mod(t, W)
+    k_ring = jax.lax.dynamic_update_slice(
+        k_ring, k_t.astype(k_ring.dtype), (0, slot, 0, 0))
+    v_ring = jax.lax.dynamic_update_slice(
+        v_ring, v_t.astype(v_ring.dtype), (0, slot, 0, 0))
+
+    kv_pos = ring_positions(t, W)                        # [W]
+    mask_valid = kv_pos >= 0
+    # emulate kv_valid_len via an explicit mask: map invalid slots to a
+    # position beyond t so the causal mask kills them.
+    q_pos = skip_block._q_index_positions(positions)
+    eff_pos = jnp.where(mask_valid, kv_pos, t + 1)
+    o = attn_mod.chunked_attention(
+        q, k_ring, v_ring,
+        q_positions=q_pos, causal=True, window=0,
+        chunk=W, softmax_scale=None,
+        kv_positions=eff_pos)
+    y = attn_mod.output_proj(inner, o, cfg)
+    if routed:
+        y = y * gate.astype(y.dtype)[:, None, None]
+    x = x + y
+    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
+        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    return x, k_ring, v_ring, (k_t, v_t), stats

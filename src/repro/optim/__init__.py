@@ -1,0 +1,3 @@
+from repro.optim.adamw import (adamw_init, adamw_update,  # noqa: F401
+                               apply_updates)
+from repro.optim.schedule import cosine_schedule  # noqa: F401

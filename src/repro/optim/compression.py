@@ -1,0 +1,89 @@
+"""Error-feedback int8 gradient compression.
+
+Wire format: per-chunk (256 elements) max-abs scales + int8 mantissas — a
+3.9× reduction of gradient-reduction bytes on the data axis.  Error
+feedback (residual carried to the next step) keeps convergence close to
+uncompressed SGD/Adam (Seide et al. 1-bit SGD; Karimireddy et al. EF-SGD).
+
+``compress_decompress`` is the lossy channel (quantize → dequantize) that
+the trainer applies to gradients before the optimizer; ``ef_compress``
+returns the residual for error feedback.  ``compressed_mean`` is the
+shard_map collective form: all-gather int8 + local dequant-mean, moving
+1/4 of the bf16 bytes over the wire.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 256
+
+
+def _quantize_leaf(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % CHUNK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    ch = flat.reshape(-1, CHUNK)
+    scale = jnp.abs(ch).max(axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(ch / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_leaf(q: jnp.ndarray, scale: jnp.ndarray, shape,
+                     dtype) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_decompress(grads: Any) -> Any:
+    """The lossy int8 channel, leafwise."""
+    def one(g):
+        if g.size < CHUNK:
+            return g
+        q, s = _quantize_leaf(g)
+        return _dequantize_leaf(q, s, g.shape, g.dtype)
+
+    return jax.tree_util.tree_map(one, grads)
+
+
+def ef_compress(grads: Any, error: Optional[Any]) -> Tuple[Any, Any]:
+    """Error-feedback compression: (decompressed grads, new residual)."""
+    if error is None:
+        error = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        if g.size < CHUNK:
+            return g, e
+        corrected = g.astype(jnp.float32) + e
+        q, s = _quantize_leaf(corrected)
+        deq = _dequantize_leaf(q, s, g.shape, jnp.float32)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def compressed_mean(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """shard_map collective: int8 all-gather + local dequant-mean.  Moves
+    ~1/4 the bytes of a bf16 psum over the mesh axis."""
+    q, s = _quantize_leaf(x)
+    qs = jax.lax.all_gather(q, axis_name)        # int8 on the wire
+    ss = jax.lax.all_gather(s, axis_name)
+    n = qs.shape[0]
+    deq = (qs.astype(jnp.float32) * ss).sum(axis=0) / n
+    flat = deq.reshape(-1)
+    sz = 1
+    for d in x.shape:
+        sz *= d
+    return flat[:sz].reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,1 @@
+from repro.quant.int4 import dequantize, quantize_params, quantize_rtn  # noqa: F401

@@ -1,0 +1,66 @@
+"""GPTQ-style symmetric INT4 weight quantization (paper §5.1) with
+power-of-2 ("BFP-friendly") per-group scales (paper §4.2.2).
+
+Round-to-nearest per group of ``group_size`` input-channel rows.  Power-of-2
+scales put the dequantization into a shared-exponent domain so the matmul
+kernel can accumulate int8×int4 products in *fixed point* and reconstruct
+floating point once per group — the TPU analogue of the paper's BFP
+accumulation tree.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+INT4_MIN, INT4_MAX = -8, 7
+
+
+def quantize_rtn(w: jnp.ndarray, group_size: int = 128,
+                 pow2_scales: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """w: [K, N] -> (codes int8 in [-8, 7] of shape [K, N],
+    scales fp32 [K/G, N])."""
+    K, N = w.shape
+    G = min(group_size, K)
+    assert K % G == 0, (K, G)
+    wg = w.astype(jnp.float32).reshape(K // G, G, N)
+    amax = jnp.abs(wg).max(axis=1)                       # [K/G, N]
+    scale = amax / INT4_MAX
+    if pow2_scales:
+        # smallest power of 2 >= scale (exact BFP exponent domain)
+        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(scale, 1e-12))))
+    scale = jnp.where(amax == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(wg / scale[:, None, :]), INT4_MIN, INT4_MAX)
+    return codes.reshape(K, N).astype(jnp.int8), scale
+
+
+def dequantize(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    K, N = codes.shape
+    G = K // scale.shape[0]
+    wg = codes.astype(jnp.float32).reshape(K // G, G, N) * scale[:, None, :]
+    return wg.reshape(K, N)
+
+
+def quantize_params(params: Params, group_size: int = 128,
+                    pow2_scales: bool = True,
+                    min_size: int = 1 << 16) -> Params:
+    """Replace every 2-D linear weight leaf named ``w`` with
+    {w_int, scale} (large matrices only — routers/norms stay fp)."""
+    def walk(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if (k == "w" and hasattr(v, "ndim") and v.ndim == 2
+                        and v.size >= min_size and v.shape[0] % group_size == 0):
+                    codes, scale = quantize_rtn(v, group_size, pow2_scales)
+                    out["w_int"] = codes
+                    out["scale"] = scale
+                else:
+                    out[k] = walk(v)
+            return out
+        return tree
+
+    return walk(params)

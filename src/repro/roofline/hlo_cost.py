@@ -1,0 +1,531 @@
+"""Loop-aware static cost analysis over post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` body (our layer stack, attention KV chunks, SSD chunks, xent
+chunks) is counted a single time regardless of trip count, which silently
+underestimates flops/bytes/collectives by up to the layer count.  This
+module re-derives the three roofline inputs from the HLO text with while
+loops multiplied by their trip counts (XLA annotates
+``backend_config={"known_trip_count":{"n":...}}`` on scheduled whiles):
+
+  * flops       — dot ops (2·B·M·N·K from dot_dimension_numbers) + 1/elem
+                  for elementwise arithmetic + reduce inputs.  Descends into
+                  fusion computations (a fusion executes its body per call).
+  * bytes       — operand + result bytes of *materialized* ops only (fusion
+                  call-sites, not their internals) ≈ HBM traffic of the
+                  fused module.
+  * collectives — all-reduce(×2) / all-gather(result) / reduce-scatter(in) /
+                  all-to-all(in) / collective-permute(in), per-device bytes.
+
+All shapes in the post-SPMD module are per-device, so every figure here is
+per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLED_RE = re.compile(r"(?:to_apply|calls|body|condition)=\{?%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "negate",
+    "abs", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "sign", "cosine", "sine", "logistic", "atan2",
+    "remainder", "clamp", "select", "compare", "and", "or", "xor", "not",
+}
+_ZERO_BYTE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+def _text_elems_bytes(text: str) -> Tuple[float, float]:
+    e = b = 0.0
+    for d, s in _SHAPE_RE.findall(text):
+        n = 1
+        if s:
+            for x in s.split(","):
+                n *= int(x)
+        e += n
+        b += n * _DTYPE_BYTES.get(d, 0)
+    return e, b
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    result_text: str
+    operand_names: List[str]
+    attrs: str
+    called: List[str] = field(default_factory=list)
+    is_root: bool = False
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_LINE_RE = re.compile(
+    r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"((?:\([^=]*?\)|[\w\[\],{}]+))\s+"      # result type (maybe tuple)
+    r"([\w\-]+)"                              # opcode
+    r"\((.*?)\)"                              # operand list
+    r"(.*)$",                                 # attrs
+    re.DOTALL)
+
+
+def parse_computations(hlo: str):
+    comps: Dict[str, _Computation] = {}
+    shapes: Dict[str, str] = {}               # op name -> result type text
+    entry_name: Optional[str] = None
+    cur: Optional[_Computation] = None
+    for raw in hlo.splitlines():
+        ls = re.sub(r"/\*.*?\*/", "", raw).strip()
+        if not ls or ls.startswith("//") or ls.startswith("HloModule"):
+            continue
+        if ls.endswith("{") and "->" in ls:
+            m = _HEADER_RE.match(ls)
+            if m:
+                cur = _Computation(m.group(1))
+                comps[cur.name] = cur
+                if ls.startswith("ENTRY"):
+                    entry_name = cur.name
+                continue
+        if "=" not in ls or cur is None:
+            continue
+        om = _OP_LINE_RE.match(ls)
+        if not om:
+            continue
+        root, name, result_text, kind, call_text, attrs = om.groups()
+        op = _Op(name, kind, result_text,
+                 _OPERAND_RE.findall(call_text), attrs,
+                 is_root=bool(root))
+        op.called = _CALLED_RE.findall(attrs)
+        cur.ops.append(op)
+        shapes[name] = result_text
+    _build_upcast_aliases(comps, shapes)
+    return comps, shapes, entry_name
+
+
+def _dtype_of(text: str) -> Optional[str]:
+    m = _SHAPE_RE.search(text)
+    return m.group(1) if m else None
+
+
+def _is_upcast(src_text: str, dst_text: str) -> bool:
+    s, d = _dtype_of(src_text), _dtype_of(dst_text)
+    return (s in _DTYPE_BYTES and d in _DTYPE_BYTES
+            and _DTYPE_BYTES[d] > _DTYPE_BYTES[s])
+
+
+# name -> source name for values that are pure upcasts (CPU-backend f32
+# materializations of bf16 tensors that would not exist on TPU — the MXU
+# consumes bf16 directly).  Resolution follows copies/bitcasts and loop-carry
+# tuples (tuple → while-body parameter → get-tuple-element chains).
+_ALIASES: Dict[str, str] = {}
+
+
+def _build_upcast_aliases(comps, shapes) -> None:
+    _ALIASES.clear()
+    ops_by_name: Dict[str, _Op] = {}
+    tuple_elems: Dict[Tuple[str, int], str] = {}
+    param_owner: Dict[str, str] = {}          # parameter op name -> comp name
+    body_init: Dict[str, str] = {}            # body comp name -> init tuple op
+    while_body: Dict[str, str] = {}           # while op name -> body comp name
+    root_of: Dict[str, str] = {}              # comp name -> root op name
+
+    def comp_is_pure_upcast(comp: _Computation) -> bool:
+        real = [o for o in comp.ops
+                if o.kind not in ("parameter", "bitcast", "constant",
+                                  "copy")]
+        return len(real) == 1 and real[0].kind == "convert"
+
+    for comp in comps.values():
+        for op in comp.ops:
+            ops_by_name[op.name] = op
+            if op.is_root:
+                root_of[comp.name] = op.name
+            if op.kind == "tuple":
+                for i, n in enumerate(op.operand_names):
+                    tuple_elems[(op.name, i)] = n
+            elif op.kind == "parameter":
+                param_owner[op.name] = comp.name
+            elif op.kind == "while":
+                m = re.search(r"body=\{?%?([\w.\-]+)", op.attrs)
+                if m and op.operand_names:
+                    body_init[m.group(1)] = op.operand_names[0]
+                    while_body[op.name] = m.group(1)
+
+    def resolve(name: str, depth: int = 0) -> str:
+        if depth > 64 or name not in ops_by_name:
+            return name
+        op = ops_by_name[name]
+        if op.kind in ("copy", "bitcast") and op.operand_names:
+            return resolve(op.operand_names[0], depth + 1)
+        if op.kind == "convert" and op.operand_names and \
+                _is_upcast(shapes.get(op.operand_names[0], ""), op.result_text):
+            return resolve(op.operand_names[0], depth + 1)
+        if op.kind == "fusion" and len(op.operand_names) == 1 and op.called \
+                and all(c in comps and comp_is_pure_upcast(comps[c])
+                        for c in op.called):
+            return resolve(op.operand_names[0], depth + 1)
+        if op.kind == "get-tuple-element" and op.operand_names:
+            m = re.search(r"index=(\d+)", op.attrs)
+            if m:
+                idx = int(m.group(1))
+                src = op.operand_names[0]
+                if (src, idx) in tuple_elems:
+                    return resolve(tuple_elems[(src, idx)], depth + 1)
+                if src in param_owner:         # loop-carry parameter
+                    init = body_init.get(param_owner[src])
+                    if init and (init, idx) in tuple_elems:
+                        return resolve(tuple_elems[(init, idx)], depth + 1)
+                if src in while_body:          # GTE of while result
+                    rt = root_of.get(while_body[src])
+                    if rt and (rt, idx) in tuple_elems:
+                        return resolve(tuple_elems[(rt, idx)], depth + 1)
+        return name
+
+    for name, op in ops_by_name.items():
+        if op.kind in ("convert", "fusion", "get-tuple-element", "copy",
+                       "bitcast"):
+            r = resolve(name)
+            if r != name and r in shapes and \
+                    _is_upcast(shapes[r], shapes.get(name, "")):
+                _ALIASES[name] = r
+
+
+def resolved_shape_text(name: str, shapes: Dict[str, str]) -> str:
+    return shapes.get(_ALIASES.get(name, name), shapes.get(name, ""))
+
+
+def resolved_bytes(name: str, shapes: Dict[str, str]) -> float:
+    return _text_elems_bytes(resolved_shape_text(name, shapes))[1]
+
+
+def _is_upcast_op(op: _Op) -> bool:
+    """True when the op itself is a pure upcast (counts zero bytes — it
+    would not exist on TPU)."""
+    return op.name in _ALIASES and op.kind in ("convert", "fusion")
+
+
+def _dims(attrs: str, key: str) -> List[int]:
+    m = re.search(key + r"=\{([\d,]*)\}", attrs)
+    return [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+
+
+def _dot_flops(op: _Op, shapes: Dict[str, str]) -> float:
+    if len(op.operand_names) < 2:
+        return 0.0
+    st = [shapes.get(n, "") for n in op.operand_names[:2]]
+    mm = [_SHAPE_RE.search(s) for s in st]
+    if not all(mm):
+        return 0.0
+    lhs = [int(x) for x in mm[0].group(2).split(",")] if mm[0].group(2) else []
+    rhs = [int(x) for x in mm[1].group(2).split(",")] if mm[1].group(2) else []
+    lc, lb = _dims(op.attrs, "lhs_contracting_dims"), _dims(op.attrs, "lhs_batch_dims")
+    rc, rb = _dims(op.attrs, "rhs_contracting_dims"), _dims(op.attrs, "rhs_batch_dims")
+    k = 1
+    for d in lc:
+        k *= lhs[d]
+    b = 1
+    for d in lb:
+        b *= lhs[d]
+    m_ = 1
+    for i, d in enumerate(lhs):
+        if i not in lc and i not in lb:
+            m_ *= d
+    n_ = 1
+    for i, d in enumerate(rhs):
+        if i not in rc and i not in rb:
+            n_ *= d
+    return 2.0 * b * m_ * n_ * k
+
+
+def _operand_bytes(op: _Op, shapes: Dict[str, str]) -> float:
+    return sum(resolved_bytes(n, shapes) for n in op.operand_names)
+
+
+def _elems_of(text: str) -> float:
+    return _text_elems_bytes(text)[0]
+
+
+def _slice_bytes(op: _Op, shapes: Dict[str, str]) -> float:
+    """Bytes of a dynamic-slice result, at the *resolved* dtype of the
+    sliced operand (normalizes CPU f32-upcasted buffers back to bf16)."""
+    elems = _elems_of(op.result_text)
+    if op.operand_names:
+        src = shapes.get(_ALIASES.get(op.operand_names[0],
+                                      op.operand_names[0]), "")
+        d = _dtype_of(src)
+        if d in _DTYPE_BYTES:
+            return elems * _DTYPE_BYTES[d]
+    return _text_elems_bytes(op.result_text)[1]
+
+
+def _fusion_bytes(comp: _Computation, shapes: Dict[str, str],
+                  call_op: Optional[_Op] = None) -> float:
+    """HBM traffic of one fusion execution.
+
+    Reads: every fusion parameter used by a non-slicing interior op counts
+    at full (alias-resolved) size; parameters consumed *only* as the sliced
+    operand of dynamic-(update-)slice count at slice size (XLA aliases the
+    buffer in place).  Writes: root result, except in-place DUS roots which
+    write the update window only.  Pure-upcast chains count as bf16.
+    """
+    local = {op.name: op for op in comp.ops}
+    params = {op.name for op in comp.ops if op.kind == "parameter"}
+
+    def to_param(n: str, depth: int = 0) -> Optional[str]:
+        """Resolve an interior value to the parameter it is a pure
+        convert/bitcast/copy chain of (alias-transparent uses)."""
+        if depth > 16:
+            return None
+        if n in params:
+            return n
+        op = local.get(n)
+        if op is None or not op.operand_names:
+            return None
+        if op.kind in ("bitcast", "copy"):
+            return to_param(op.operand_names[0], depth + 1)
+        if op.kind == "convert":
+            return to_param(op.operand_names[0], depth + 1)
+        return None
+
+    sliced_only = {}
+    for op in comp.ops:
+        if op.kind in ("bitcast", "copy", "convert"):
+            continue                                # transparent links
+        for i, n in enumerate(op.operand_names):
+            p = to_param(n)
+            if p is None:
+                continue
+            is_slice_use = (op.kind in ("dynamic-slice",
+                                        "dynamic-update-slice") and i == 0)
+            prev = sliced_only.get(p, True)
+            sliced_only[p] = prev and is_slice_use
+
+    def param_bytes(pname: str) -> float:
+        # map the fusion parameter to the (alias-resolved) call-site operand
+        if call_op is not None:
+            m = re.match(r"param_(\d+)", pname)
+            if m:
+                i = int(m.group(1))
+                if i < len(call_op.operand_names):
+                    return resolved_bytes(call_op.operand_names[i], shapes)
+        return _text_elems_bytes(shapes.get(pname, ""))[1]
+
+    def value_bytes(n: str) -> float:
+        op = local.get(n)
+        if op is not None and op.kind == "parameter":
+            return param_bytes(n)
+        return resolved_bytes(n, shapes)
+
+    reads = 0.0
+    for n in params:
+        if sliced_only.get(n) is False:
+            reads += param_bytes(n)
+        # unused params (not in sliced_only) cost nothing
+    def effective(n: str, depth: int = 0) -> Optional[_Op]:
+        """Chase convert/bitcast/copy chains to the producing op."""
+        op = local.get(n)
+        if op is None or depth > 16:
+            return op
+        if op.kind in ("convert", "bitcast", "copy") and op.operand_names:
+            return effective(op.operand_names[0], depth + 1) or op
+        return op
+
+    def write_bytes_of(n: str) -> float:
+        src = effective(n)
+        if src is not None and src.kind == "dynamic-update-slice" \
+                and len(src.operand_names) > 1:
+            return value_bytes(src.operand_names[1])
+        return value_bytes(n)
+
+    writes = 0.0
+    for op in comp.ops:
+        if op.kind == "dynamic-slice":
+            reads += _slice_bytes(op, shapes)
+        elif op.kind == "dynamic-update-slice":
+            if len(op.operand_names) > 1:
+                reads += value_bytes(op.operand_names[1])
+        if op.is_root:
+            if op.kind == "tuple":
+                for n in op.operand_names:
+                    writes += write_bytes_of(n)
+            else:
+                writes += write_bytes_of(op.name)
+    return reads + writes
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    coll_ops: int = 0
+    unknown_loops: int = 0
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.coll.items()},
+                    self.coll_ops, self.unknown_loops)
+
+    def add(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        self.coll_ops += o.coll_ops
+        self.unknown_loops += o.unknown_loops
+
+
+def _trip_count_from_cond(cond: _Computation) -> Optional[int]:
+    consts = []
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((-?\d+)\)",
+                          "(" + ",".join(op.operand_names) + ")" + op.attrs)
+            if m:
+                consts.append(int(m.group(1)))
+    # raw text fallback
+    if not consts:
+        return None
+    n = max(consts)
+    return n if 0 < n < 10_000_000 else None
+
+
+def _comp_cost(comp: _Computation, comps, shapes, inside_fusion: bool,
+               memo) -> Cost:
+    key = (comp.name, inside_fusion)
+    if key in memo:
+        return memo[key]
+    total = Cost()
+    memo[key] = total
+    for op in comp.ops:
+        kind = op.kind
+        base = kind[:-6] if kind.endswith("-start") else kind
+        if base in _COLLECTIVES:
+            ob = _operand_bytes(op, shapes)
+            re_, rb = _text_elems_bytes(op.result_text)
+            if base == "all-reduce":
+                cb = 2.0 * ob
+            elif base == "all-gather":
+                # result at the resolved operand dtype (CPU upcasts bf16
+                # operands to f32 — the TPU wire format stays bf16)
+                d = _dtype_of(resolved_shape_text(op.operand_names[0], shapes)
+                              if op.operand_names else op.result_text)
+                cb = re_ * _DTYPE_BYTES.get(d, 4)
+            else:
+                cb = ob
+            total.coll[base] = total.coll.get(base, 0.0) + cb
+            total.coll_ops += 1
+            total.bytes += ob + rb
+            continue
+        if kind.endswith("-done") or kind.endswith("-update-done"):
+            continue
+        if kind == "while":
+            body = cond = None
+            m = re.search(r"body=\{?%?([\w.\-]+)", op.attrs)
+            if m:
+                body = comps.get(m.group(1))
+            m = re.search(r"condition=\{?%?([\w.\-]+)", op.attrs)
+            if m:
+                cond = comps.get(m.group(1))
+            m = _TRIP_RE.search(op.attrs)
+            trips = int(m.group(1)) if m else (
+                _trip_count_from_cond(cond) if cond else None)
+            if trips is None:
+                trips = 1
+                total.unknown_loops += 1
+            if body is not None:
+                total.add(_comp_cost(body, comps, shapes, False,
+                                     memo).scaled(trips))
+            continue
+        if kind in ("call", "conditional", "async-start"):
+            for cname in op.called:
+                if cname in comps:
+                    total.add(_comp_cost(comps[cname], comps, shapes, False,
+                                         memo))
+            continue
+        if kind == "fusion":
+            if _is_upcast_op(op):
+                continue                          # CPU-only upcast
+            fb = 0.0
+            for cname in op.called:
+                if cname in comps:
+                    sub = _comp_cost(comps[cname], comps, shapes, True, memo)
+                    total.flops += sub.flops
+                    for ck, cv in sub.coll.items():
+                        total.coll[ck] = total.coll.get(ck, 0.0) + cv
+                    fb += _fusion_bytes(comps[cname], shapes, op)
+            total.bytes += fb if fb else (
+                _operand_bytes(op, shapes)
+                + _text_elems_bytes(op.result_text)[1])
+            continue
+        if kind == "dot":
+            total.flops += _dot_flops(op, shapes)
+        elif kind in _ELEMWISE:
+            total.flops += _text_elems_bytes(op.result_text)[0]
+        elif kind in ("reduce", "reduce-window"):
+            total.flops += sum(_text_elems_bytes(shapes.get(n, ""))[0]
+                               for n in op.operand_names)
+        if not inside_fusion and kind not in _ZERO_BYTE_OPS:
+            if _is_upcast_op(op) or (kind == "copy" and op.name in _ALIASES):
+                continue                          # CPU-only upcast artifacts
+            rb = resolved_bytes(op.name, shapes)
+            if kind in ("dynamic-slice", "slice", "gather"):
+                # reads only the slice; XLA aliases where possible
+                total.bytes += 2.0 * _slice_bytes(op, shapes)
+            elif kind == "dynamic-update-slice":
+                # in-place: read update + write region (buffer is aliased)
+                ub = (resolved_bytes(op.operand_names[1], shapes)
+                      if len(op.operand_names) > 1 else rb)
+                total.bytes += 2.0 * ub
+            elif kind == "scatter":
+                ub = (resolved_bytes(op.operand_names[-1], shapes)
+                      if op.operand_names else rb)
+                total.bytes += 2.0 * ub
+            else:
+                total.bytes += _operand_bytes(op, shapes) + rb
+    memo[key] = total
+    return total
+
+
+def hlo_static_cost(hlo_text: str) -> Dict[str, object]:
+    comps, shapes, entry_name = parse_computations(hlo_text)
+    entry = comps.get(entry_name) if entry_name else None
+    if entry is None:
+        called = {n for c in comps.values() for op in c.ops for n in op.called}
+        rest = [c for n, c in comps.items() if n not in called]
+        entry = max(rest, key=lambda c: len(c.ops)) if rest else None
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {},
+                "collective_total": 0.0, "collective_ops": 0,
+                "unknown_loops": 0}
+    cost = _comp_cost(entry, comps, shapes, False, {})
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collectives": dict(cost.coll),
+        "collective_total": sum(cost.coll.values()),
+        "collective_ops": cost.coll_ops,
+        "unknown_loops": cost.unknown_loops,
+    }

@@ -1,0 +1,17 @@
+"""Token sampling."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jnp.ndarray, rng, temperature: float = 0.0,
+           top_k: int = 0) -> jnp.ndarray:
+    """logits: [B, V] -> [B] int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(lf, top_k)
+        lf = jnp.where(lf < vals[:, -1:], -1e30, lf)
+    return jax.random.categorical(rng, lf).astype(jnp.int32)

@@ -1,0 +1,3 @@
+from repro.train.checkpoint import (load_checkpoint, save_checkpoint,  # noqa: F401
+                                    latest_step)
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,132 @@
+"""Checkpointing: atomic, resharding-capable, preemption-safe.
+
+Layout (one directory per step)::
+
+    ckpt_dir/step_000123.tmp/   -> written, fsynced, then renamed to
+    ckpt_dir/step_000123/
+        manifest.json           tree structure, dtypes, shapes, data cursor
+        arrays.npz              leaves as host numpy (gathered)
+
+Properties needed at scale and provided here:
+  * atomic publish (tmp dir + rename) — a killed writer never corrupts the
+    latest checkpoint (preemption safety);
+  * resharding restore — leaves are saved as *logical* (global) arrays and
+    re-placed under whatever mesh/sharding the restoring job passes in, so
+    a 512-chip checkpoint restores onto 256 chips or 8 CPU devices
+    (elastic scaling);
+  * the data-pipeline cursor and RNG key ride along, so restart resumes the
+    exact token stream (bitwise-identical training continuation, which the
+    integration test asserts).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    """npz-safe encoding: PRNG keys -> raw key data; ml_dtypes floats
+    (bf16/fp8) -> float32 (the loader casts back via the template dtype)."""
+    if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jax.dtypes.prng_key):
+        return np.asarray(jax.random.key_data(leaf))
+    arr = np.asarray(jax.device_get(leaf))
+    if arr.dtype.kind == "V" or str(arr.dtype) in ("bfloat16", "float8_e4m3fn",
+                                                   "float8_e5m2"):
+        return arr.astype(np.float32)
+    try:
+        np.can_cast(arr.dtype, arr.dtype)        # probe exotic dtypes
+    except TypeError:
+        return arr.astype(np.float32)
+    if str(arr.dtype) not in ("float64", "float32", "float16", "int64",
+                              "int32", "int16", "int8", "uint64", "uint32",
+                              "uint16", "uint8", "bool"):
+        return arr.astype(np.float32)
+    return arr
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    keys = []
+    for i, (path, leaf) in enumerate(flat):
+        k = f"leaf_{i:05d}"
+        arrays[k] = _to_numpy(leaf)
+        keys.append(jax.tree_util.keystr(path))
+    return arrays, (treedef, keys)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Dict[str, Any]) -> Path:
+    """state: {'params': ..., 'opt_state': ..., 'data_step': int,
+    'rng': key, ...} — any pytree of arrays + ints."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    arrays, (treedef, keys) = _flatten(state)
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": keys,
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = Path(ckpt_dir)
+    if not p.exists():
+        return None
+    steps = [int(d.name.split("_")[1]) for d in p.iterdir()
+             if d.is_dir() and d.name.startswith("step_")
+             and not d.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, template: Dict[str, Any],
+                    step: Optional[int] = None,
+                    shardings: Optional[Any] = None) -> Tuple[Dict, int]:
+    """Restore into the structure of ``template``; if ``shardings`` (a
+    matching pytree of NamedSharding) is given, leaves are placed onto the
+    current mesh — reshard-on-restore."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    data = np.load(d / "arrays.npz")
+    flat_t, treedef = jax.tree_util.tree_flatten(template)
+    raw = [data[f"leaf_{i:05d}"] for i in range(len(flat_t))]
+
+    def restore(l, t, s=None):
+        if hasattr(t, "dtype") and jnp.issubdtype(t.dtype,
+                                                  jax.dtypes.prng_key):
+            return jax.random.wrap_key_data(jnp.asarray(l))
+        arr = l.astype(t.dtype)
+        return jax.device_put(arr, s) if s is not None else jnp.asarray(arr)
+
+    if shardings is not None:
+        flat_s = treedef.flatten_up_to(shardings)
+        leaves = [restore(l, t, s) for l, t, s in zip(raw, flat_t, flat_s)]
+    else:
+        leaves = [restore(l, t) for l, t in zip(raw, flat_t)]
+    return treedef.unflatten(leaves), step

@@ -1,0 +1,101 @@
+"""Fault-tolerance machinery: preemption handling, straggler mitigation,
+elastic re-configuration.
+
+On a real multi-pod deployment these hook into the cluster scheduler; here
+they are implemented against wall-clock + signals so the control logic is
+real and testable on CPU:
+
+  * ``PreemptionGuard`` — SIGTERM/SIGINT flip a flag; the training loop
+    checkpoints and exits cleanly at the next step boundary.
+  * ``StragglerMonitor`` — per-step deadline tracking; steps slower than
+    ``factor`` × a trailing median are recorded; after ``budget`` strikes
+    the runner requests a re-configuration (in production: evict the slow
+    host and resume from the last checkpoint on the surviving mesh — which
+    ``load_checkpoint(..., shardings=new_mesh_specs)`` supports directly).
+  * ``ElasticPlan`` — maps a surviving device count to the nearest valid
+    (data, model) mesh and recomputes per-host batch partitions.
+"""
+from __future__ import annotations
+
+import signal
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+class PreemptionGuard:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._requested = False
+        self._prev = {}
+        self._signals = signals
+
+    def __enter__(self):
+        for s in self._signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handler)
+            except ValueError:                 # non-main thread (tests)
+                pass
+        return self
+
+    def _handler(self, signum, frame):
+        self._requested = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested
+
+    def request(self):                          # test hook
+        self._requested = True
+
+    def __exit__(self, *exc):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+        return False
+
+
+@dataclass
+class StragglerMonitor:
+    factor: float = 2.0
+    window: int = 20
+    budget: int = 3
+    _times: List[float] = field(default_factory=list)
+    strikes: int = 0
+
+    def observe(self, step_seconds: float) -> bool:
+        """Returns True when this step counts as a straggler event."""
+        self._times.append(step_seconds)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        if len(self._times) < 5:
+            return False
+        med = statistics.median(self._times[:-1])
+        if step_seconds > self.factor * med:
+            self.strikes += 1
+            return True
+        return False
+
+    @property
+    def reconfigure_requested(self) -> bool:
+        return self.strikes >= self.budget
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    """Nearest valid mesh for a surviving chip count (model parallelism is
+    kept fixed — weights reshard along the data axis only, which the
+    checkpoint reshard-restore handles)."""
+    model: int = 16
+
+    def mesh_for(self, surviving_chips: int) -> Tuple[int, int]:
+        data = max(1, surviving_chips // self.model)
+        # largest power-of-two data axis that fits (keeps batch divisible)
+        p = 1
+        while p * 2 <= data:
+            p *= 2
+        return (p, self.model)
+
+    def host_partition(self, global_batch: int, hosts: int
+                       ) -> List[Tuple[int, int]]:
+        per = global_batch // hosts
+        return [(i * per, (i + 1) * per) for i in range(hosts)]

@@ -1,0 +1,121 @@
+"""Training loop: jit'd step, checkpoint/restart, preemption + straggler
+hooks, metric logging.  Works on any mesh (CPU test meshes included) or
+unsharded single-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticLMDataset
+from repro.distributed.sharding import ShardingPolicy, set_policy
+from repro.models import model as model_lib
+from repro.optim import adamw_init, adamw_update, apply_updates, cosine_schedule
+from repro.train import checkpoint as ckpt_lib
+from repro.train.fault_tolerance import PreemptionGuard, StragglerMonitor
+
+
+@dataclass
+class TrainerConfig:
+    seq_len: int = 256
+    global_batch: int = 8
+    steps: int = 100
+    lr: float = 3e-4
+    warmup: int = 20
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    grad_compression: bool = False
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 policy: Optional[ShardingPolicy] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.policy = policy
+        self.dataset = SyntheticLMDataset(cfg, tcfg.seq_len,
+                                          tcfg.global_batch, tcfg.seed)
+        self.schedule = cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.steps)
+        self._step_fn = self._build_step()
+        self.metrics_log: list = []
+
+    # ------------------------------------------------------------------
+    def _build_step(self) -> Callable:
+        cfg, policy = self.cfg, self.policy
+        schedule = self.schedule
+        compress = self.tcfg.grad_compression
+
+        def step(params, opt_state, batch, rng):
+            with set_policy(policy):
+                (loss, metrics), grads = jax.value_and_grad(
+                    model_lib.train_loss, has_aux=True)(params, batch, rng, cfg)
+                if compress:
+                    from repro.optim.compression import compress_decompress
+                    grads = compress_decompress(grads)
+                updates, opt_state = adamw_update(grads, opt_state, params,
+                                                  schedule)
+                params = apply_updates(params, updates)
+            return params, opt_state, metrics
+
+        if policy is not None:
+            return jax.jit(step, donate_argnums=(0, 1))
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    def init_state(self) -> Dict[str, Any]:
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params = model_lib.init_params(key, self.cfg)
+        if self.policy is not None:
+            specs = self.policy.param_specs(params)
+            params = jax.tree_util.tree_map(jax.device_put, params, specs)
+        return {
+            "params": params,
+            "opt_state": adamw_init(params),
+            "data_step": jnp.zeros((), jnp.int32),
+            "rng": jax.random.PRNGKey(self.tcfg.seed + 1),
+        }
+
+    # ------------------------------------------------------------------
+    def run(self, state: Optional[Dict] = None,
+            resume: bool = False) -> Dict[str, Any]:
+        tcfg = self.tcfg
+        if state is None:
+            state = self.init_state()
+            if resume and tcfg.ckpt_dir and \
+                    ckpt_lib.latest_step(tcfg.ckpt_dir) is not None:
+                state, _ = ckpt_lib.load_checkpoint(tcfg.ckpt_dir, state)
+        start = int(state["data_step"])
+        straggler = StragglerMonitor()
+        with PreemptionGuard() as guard:
+            for step in range(start, tcfg.steps):
+                t0 = time.time()
+                batch = {k: jnp.asarray(v)
+                         for k, v in self.dataset.batch(step).items()}
+                rng = jax.random.fold_in(state["rng"], step)
+                params, opt_state, metrics = self._step_fn(
+                    state["params"], state["opt_state"], batch, rng)
+                state = {"params": params, "opt_state": opt_state,
+                         "data_step": jnp.asarray(step + 1, jnp.int32),
+                         "rng": state["rng"]}
+                dt = time.time() - t0
+                straggler.observe(dt)
+                if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m.update(step=step, sec=round(dt, 3))
+                    self.metrics_log.append(m)
+                if tcfg.ckpt_dir and ((step + 1) % tcfg.ckpt_every == 0
+                                      or guard.preempted
+                                      or step == tcfg.steps - 1):
+                    ckpt_lib.save_checkpoint(tcfg.ckpt_dir, step + 1, state)
+                if guard.preempted:
+                    break
+        state["straggler_strikes"] = straggler.strikes
+        return state

@@ -1,0 +1,135 @@
+"""Per-kernel allclose vs the pure-jnp oracles (ref.py), with shape/dtype
+sweeps.  interpret=True executes the Pallas kernel bodies on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.quant import dequantize, quantize_rtn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mx(a, b):
+    return float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Tq,Tk,Hq,Hkv,dh", [
+    (1, 16, 16, 4, 4, 32),        # MHA square
+    (2, 64, 96, 8, 2, 64),        # GQA rectangular
+    (1, 13, 40, 6, 3, 80),        # odd shapes -> padding paths
+    (2, 128, 256, 4, 1, 128),     # MQA, block-sized
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Tq, Tk, Hq, Hkv, dh, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Tq, Hq, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Tk, Hkv, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Tk, Hkv, dh), jnp.float32).astype(dtype)
+    qpos = jnp.broadcast_to(jnp.arange(Tk - Tq, Tk)[None], (B, Tq))
+    out = ops.flash_attention(q, k, v, q_positions=qpos, causal=True)
+    oref = ref.flash_attention_ref(q, k, v, q_positions=qpos, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert _mx(out, oref) < tol
+
+
+def test_flash_attention_window():
+    ks = jax.random.split(KEY, 3)
+    B, T, H, dh = 2, 64, 4, 32
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, H, dh))
+    v = jax.random.normal(ks[2], (B, T, H, dh))
+    qpos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    out = ops.flash_attention(q, k, v, q_positions=qpos, window=9)
+    oref = ref.flash_attention_ref(q, k, v, q_positions=qpos, window=9)
+    assert _mx(out, oref) < 2e-5
+
+
+def test_decode_attention_valid_len():
+    ks = jax.random.split(KEY, 3)
+    B, Tk, Hq, Hkv, dh = 3, 128, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, 1, Hq, dh))
+    k = jax.random.normal(ks[1], (B, Tk, Hkv, dh))
+    v = jax.random.normal(ks[2], (B, Tk, Hkv, dh))
+    vl = jnp.array([17, 64, 128], jnp.int32)
+    qpos = jnp.full((B, 1), 10_000)
+    out = ops.decode_attention(q, k, v, q_positions=qpos, kv_valid_len=vl)
+    oref = ref.flash_attention_ref(q, k, v, q_positions=qpos,
+                                   kv_valid_len=vl)
+    assert _mx(out, oref) < 2e-5
+
+
+# ---------------------------------------------------------------------------
+# int4 matmul (BFP accumulation)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N,G", [
+    (32, 128, 64, 128),
+    (96, 256, 192, 128),
+    (128, 512, 128, 64),
+    (7, 128, 33, 32),             # ragged M/N -> padding
+])
+def test_int4_kernel_matches_bfp_oracle(M, K, N, G):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (M, K), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(ks[1], (K, N), jnp.float32) * 0.02
+    codes, scale = quantize_rtn(w, G, pow2_scales=True)
+    out_k = ops.int4_matmul(x, codes, scale, use_kernel=True)
+    out_o = ref.bfp_matmul_ref(x, codes, scale)
+    # kernel implements the oracle's arithmetic exactly (same BFP domain)
+    assert _mx(out_k, out_o) <= 1e-5 * max(1.0, float(jnp.abs(out_o).max()))
+
+
+def test_int4_accuracy_vs_exact():
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (64, 512), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(ks[1], (512, 128), jnp.float32) * 0.02
+    codes, scale = quantize_rtn(w, 128, True)
+    out_k = ops.int4_matmul(x, codes, scale, use_kernel=True)
+    exact = ref.int4_matmul_ref(x, codes, scale)
+    rel = float(jnp.linalg.norm(out_k.astype(jnp.float32) - exact.astype(jnp.float32))
+                / jnp.linalg.norm(exact.astype(jnp.float32)))
+    assert rel < 0.05                            # paper Table-1 regime
+
+
+def test_int4_jnp_fallback_matches_exact():
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (16, 128), jnp.float32)
+    w = jax.random.normal(ks[1], (128, 32), jnp.float32) * 0.02
+    codes, scale = quantize_rtn(w, 64, True)
+    out = ops.int4_matmul(x, codes, scale, use_kernel=False)
+    exact = ref.int4_matmul_ref(x, codes, scale)
+    assert _mx(out, exact) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# fused router + rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,D", [(50, 300), (256, 512), (3, 64), (1024, 4096)])
+def test_router_stats_kernel(T, D):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (1, T, D), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(ks[1], (D, 2), jnp.float32) * 0.02
+    b = jnp.array([0.0, 1.0])
+    lg, ms = ops.fused_router_rmsnorm_stats(x, w, b)
+    lg_r, ms_r = ref.router_stats_ref(x.reshape(T, D), w)
+    assert _mx(lg.reshape(T, 2), lg_r + b) < 1e-4
+    assert _mx(ms.reshape(T), ms_r) < 1e-5
+
+
+@pytest.mark.parametrize("M,K,N", [(64, 300, 128), (128, 512, 256), (9, 70, 30)])
+def test_rmsnorm_matmul_kernel(M, K, N):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (M, K), jnp.float32).astype(jnp.bfloat16)
+    g = 1.0 + 0.1 * jax.random.normal(ks[1], (K,))
+    w = jax.random.normal(ks[2], (K, N), jnp.float32) * 0.05
+    ms = (x.astype(jnp.float32) ** 2).mean(-1)
+    out = ops.rmsnorm_matmul(x, ms, g, w)
+    oref = ref.rmsnorm_matmul_ref(x, ms, g, w)
+    assert _mx(out, oref) < 1e-4

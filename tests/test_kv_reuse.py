@@ -1,0 +1,99 @@
+"""Cross-layer KV reuse: the scan-carried view must equal the paper's
+recursive fallback (Eq. 2), and the compact store + rolling view must equal
+the dense store."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kv_reuse
+from repro.kvcache.cache import CompactKVStore, DenseKVStore
+
+
+def _brute_force_view(kvs, gates, layer):
+    """K_l[i] = kv of the most recent executed layer ≤ l (layer 0 dense)."""
+    L, B, T = gates.shape[0], kvs.shape[1], kvs.shape[2]
+    out = np.array(kvs[0])
+    for l in range(1, layer + 1):
+        m = gates[l].astype(bool)
+        out[m] = kvs[l][m]
+    return out
+
+
+def test_merge_view_matches_recursion():
+    rng = np.random.default_rng(0)
+    L, B, T, H, D = 5, 2, 7, 3, 4
+    kvs = rng.standard_normal((L, B, T, H, D)).astype(np.float32)
+    gates = (rng.random((L, B, T)) < 0.6).astype(np.float32)
+    gates[0] = 1.0                               # dense base
+
+    view = None
+    for l in range(L):
+        if l == 0:
+            view = kv_reuse.init_view(jnp.asarray(kvs[l]), jnp.asarray(kvs[l]))
+        else:
+            view = kv_reuse.merge_view(view, jnp.asarray(kvs[l]),
+                                       jnp.asarray(kvs[l]),
+                                       jnp.asarray(gates[l]))
+        expect = _brute_force_view(kvs, gates, l)
+        np.testing.assert_allclose(np.asarray(view[0]), expect, rtol=1e-6)
+
+
+def test_merge_view_gathered_equals_masked():
+    rng = np.random.default_rng(1)
+    B, T, H, D = 2, 8, 2, 4
+    base = rng.standard_normal((B, T, H, D)).astype(np.float32)
+    new = rng.standard_normal((B, T, H, D)).astype(np.float32)
+    # pick 5 kept tokens per row
+    idx = np.stack([np.sort(rng.choice(T, 5, replace=False)) for _ in range(B)])
+    gate = np.zeros((B, T), np.float32)
+    for b in range(B):
+        gate[b, idx[b]] = 1.0
+    dense = kv_reuse.merge_view((jnp.asarray(base), jnp.asarray(base)),
+                                jnp.asarray(new), jnp.asarray(new),
+                                jnp.asarray(gate))
+    kg = jnp.take_along_axis(jnp.asarray(new),
+                             jnp.asarray(idx)[:, :, None, None], axis=1)
+    gathered = kv_reuse.merge_view_gathered(
+        (jnp.asarray(base), jnp.asarray(base)), kg, kg, jnp.asarray(idx), T)
+    np.testing.assert_allclose(np.asarray(dense[0]), np.asarray(gathered[0]))
+
+
+def test_merge_token_view_decode():
+    kv_prev = (jnp.ones((2, 1, 2, 4)), jnp.ones((2, 1, 2, 4)))
+    k_new = jnp.full((2, 1, 2, 4), 5.0)
+    gate = jnp.array([1.0, 0.0])
+    k, v = kv_reuse.merge_token_view(kv_prev, k_new, k_new, gate)
+    assert float(k[0].mean()) == 5.0 and float(k[1].mean()) == 1.0
+
+
+def test_storage_saved_fraction():
+    gates = np.ones((4, 1, 10), np.float32)
+    gates[1:, :, :] = 0.0                        # everything reused
+    frac = kv_reuse.storage_saved_fraction(jnp.asarray(gates))
+    assert abs(float(frac) - 0.75) < 1e-6        # store layer0 only
+
+
+def test_compact_store_equals_dense_view():
+    rng = np.random.default_rng(2)
+    L, H, D, steps = 4, 2, 3, 12
+    comp = CompactKVStore(L, H, D)
+    dense = DenseKVStore(L, H, D)
+    kv_hist = []                                 # per token per layer kv
+    for t in range(steps):
+        gates = rng.random(L) < 0.6
+        gates[0] = True
+        per_layer = []
+        cur = None
+        for l in range(L):
+            fresh = rng.standard_normal((H, D)).astype(np.float32)
+            cur = fresh if (gates[l] or cur is None) else cur
+            comp.append(l, cur, cur, executed=bool(gates[l]))
+            dense.append(l, cur, cur, executed=bool(gates[l]))
+            per_layer.append(cur)
+        kv_hist.append(per_layer)
+    for l in range(L):
+        ck, _ = comp.view(l)
+        dk, _ = dense.view(l)
+        np.testing.assert_allclose(ck, dk, rtol=1e-6)
+    assert comp.stats.saved_fraction > 0.05
+    assert dense.stats.saved_fraction == 0.0

@@ -1,0 +1,117 @@
+"""Model-level behaviour: prefill↔decode consistency, gather≡masked
+equivalence, chunked attention vs dense reference, gather-mode FLOP
+reduction semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as attn
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _drop_free(cfg):
+    return dataclasses.replace(cfg, moe_capacity_factor=8.0)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "gemma3-12b", "grok-1-314b",
+                                  "jamba-v0.1-52b", "mamba2-2.7b"])
+def test_prefill_decode_consistency(arch):
+    cfg = _drop_free(get_config(arch).smoke())
+    params = M.init_params(KEY, cfg)
+    B, T = 2, 24
+    toks = jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)
+    if cfg.frontend == "token":
+        full = {"tokens": toks}
+        part, last = {"tokens": toks[:, :-1]}, {"tokens": toks[:, -1:]}
+    else:
+        emb = jax.random.normal(KEY, (B, T, cfg.d_model), jnp.float32)
+        full, part, last = ({"embeds": emb}, {"embeds": emb[:, :-1]},
+                            {"embeds": emb[:, -1:]})
+    lg_full, _, _ = M.prefill(params, full, cfg)
+    _, cache, _ = M.prefill(params, part, cfg, pad_to=T)
+    lg_step, _, _ = M.decode_step(params, cache, last, jnp.int32(T - 1), cfg)
+    np.testing.assert_allclose(np.asarray(lg_step, np.float32),
+                               np.asarray(lg_full, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_gather_equals_masked_at_capacity():
+    """With capacity ≥ kept count, compacted (gather) execution must equal
+    masked execution exactly — the static-shape realization is lossless."""
+    cfg = _drop_free(get_config("qwen3-8b").smoke())
+    cfg_m = dataclasses.replace(
+        cfg, skip=dataclasses.replace(cfg.skip, mode="masked",
+                                      keep_prob=1.0))
+    cfg_g = dataclasses.replace(
+        cfg, skip=dataclasses.replace(cfg.skip, mode="gather",
+                                      keep_prob=1.0))
+    params = M.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    lg_m, _, _ = M.prefill(params, {"tokens": toks}, cfg_m)
+    lg_g, _, _ = M.prefill(params, {"tokens": toks}, cfg_g)
+    np.testing.assert_allclose(np.asarray(lg_g, np.float32),
+                               np.asarray(lg_m, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_skip_disabled_matches_dense():
+    cfg = get_config("qwen3-8b").smoke()
+    cfg_off = dataclasses.replace(
+        cfg, skip=dataclasses.replace(cfg.skip, enabled=False))
+    params = M.init_params(KEY, cfg_off)
+    toks = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+    loss, m = M.train_loss(params, {"tokens": toks, "labels": toks},
+                           jax.random.PRNGKey(1), cfg_off)
+    assert float(m["keep_frac"]) == 1.0
+    assert float(m["router_loss"]) == 0.0
+
+
+def test_chunked_attention_equals_reference():
+    ks = jax.random.split(KEY, 3)
+    B, Tq, Tk, Hq, Hkv, dh = 2, 32, 48, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, Tq, Hq, dh))
+    k = jax.random.normal(ks[1], (B, Tk, Hkv, dh))
+    v = jax.random.normal(ks[2], (B, Tk, Hkv, dh))
+    qpos = jnp.broadcast_to(jnp.arange(Tk - Tq, Tk)[None], (B, Tq))
+    for chunk in (8, 16, 48, 64):
+        out = attn.chunked_attention(q, k, v, q_positions=qpos, chunk=chunk)
+        oref = attn.reference_attention(q, k, v, q_positions=qpos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_sliding_window_restricts_context():
+    """A far-away KV perturbation must not affect windowed attention."""
+    ks = jax.random.split(KEY, 3)
+    B, T, H, dh = 1, 32, 2, 8
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, H, dh))
+    v = jax.random.normal(ks[2], (B, T, H, dh))
+    qpos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    out1 = attn.chunked_attention(q, k, v, q_positions=qpos, window=4,
+                                  chunk=8)
+    k2 = k.at[:, 0].add(100.0)                    # outside every window ≥ 4
+    v2 = v.at[:, 0].add(100.0)
+    out2 = attn.chunked_attention(q, k2, v2, q_positions=qpos, window=4,
+                                  chunk=8)
+    np.testing.assert_allclose(np.asarray(out1[:, 8:]),
+                               np.asarray(out2[:, 8:]), rtol=1e-5, atol=1e-5)
+
+
+def test_mrope_positions_change_output():
+    cfg = get_config("qwen2-vl-2b").smoke()
+    params = M.init_params(KEY, cfg)
+    B, T = 1, 8
+    emb = jax.random.normal(KEY, (B, T, cfg.d_model), jnp.float32)
+    pos1 = jnp.broadcast_to(jnp.arange(T)[None, None], (3, B, T)).astype(jnp.int32)
+    pos2 = pos1.at[1].set(pos1[1] * 3)            # different spatial stream
+    lg1, _, _ = M.prefill(params, {"embeds": emb, "positions": pos1}, cfg)
+    lg2, _, _ = M.prefill(params, {"embeds": emb, "positions": pos2}, cfg)
+    assert float(jnp.abs(lg1.astype(jnp.float32)
+                         - lg2.astype(jnp.float32)).max()) > 1e-4

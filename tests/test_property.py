@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kv_reuse, routing
+from repro.kernels import ref
+from repro.quant import dequantize, quantize_rtn
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(T=st.integers(1, 300), keep=st.floats(0.05, 1.0))
+@settings(**SET)
+def test_capacity_invariants(T, keep):
+    c = routing.capacity(T, keep)
+    assert 1 <= c <= T
+    assert c >= min(T, int(np.ceil(T * keep)))   # never truncates below target
+
+
+@given(st.data())
+@settings(**SET)
+def test_select_topc_contains_topk(data):
+    T = data.draw(st.integers(4, 64))
+    C = data.draw(st.integers(1, T))
+    score = np.asarray(data.draw(st.lists(
+        st.floats(-10, 10, allow_nan=False), min_size=T, max_size=T)),
+        np.float32)
+    idx = np.asarray(routing.select_topc(jnp.asarray(score[None]), C)[0])
+    assert np.all(np.diff(idx) > 0)              # strictly ascending
+    assert len(set(idx.tolist())) == C           # distinct positions
+    # tie-robust top-C: every selected score ≥ the C-th largest score
+    thr = np.sort(score)[::-1][C - 1]
+    assert np.all(score[idx] >= thr)
+
+
+@given(st.data())
+@settings(**SET)
+def test_scatter_gather_identity(data):
+    B = data.draw(st.integers(1, 3))
+    T = data.draw(st.integers(2, 32))
+    C = data.draw(st.integers(1, T))
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    x = rng.standard_normal((B, T, 4)).astype(np.float32)
+    idx = np.stack([np.sort(rng.choice(T, C, replace=False))
+                    for _ in range(B)])
+    g = routing.gather_tokens(jnp.asarray(x), jnp.asarray(idx))
+    s = routing.scatter_tokens(g, jnp.asarray(idx), T)
+    # scatter(gather(x)) == x on selected rows, 0 elsewhere
+    mask = np.zeros((B, T, 1), np.float32)
+    for b in range(B):
+        mask[b, idx[b]] = 1.0
+    np.testing.assert_allclose(np.asarray(s), x * mask, rtol=1e-6)
+
+
+@given(st.data())
+@settings(**SET)
+def test_kv_view_idempotent_when_nothing_executes(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    B, T, H, D = 1, data.draw(st.integers(1, 16)), 2, 4
+    base = rng.standard_normal((B, T, H, D)).astype(np.float32)
+    new = rng.standard_normal((B, T, H, D)).astype(np.float32)
+    view = (jnp.asarray(base), jnp.asarray(base))
+    out = kv_reuse.merge_view(view, jnp.asarray(new), jnp.asarray(new),
+                              jnp.zeros((B, T)))
+    np.testing.assert_array_equal(np.asarray(out[0]), base)
+    out2 = kv_reuse.merge_view(view, jnp.asarray(new), jnp.asarray(new),
+                               jnp.ones((B, T)))
+    np.testing.assert_array_equal(np.asarray(out2[0]), new)
+
+
+@given(st.data())
+@settings(**SET)
+def test_int4_rtn_error_bound_property(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    K = data.draw(st.sampled_from([64, 128, 256]))
+    N = data.draw(st.integers(1, 16))
+    G = data.draw(st.sampled_from([32, 64, K]))
+    amp = data.draw(st.floats(1e-4, 10.0))
+    w = (rng.standard_normal((K, N)) * amp).astype(np.float32)
+    codes, scale = quantize_rtn(jnp.asarray(w), G, pow2_scales=True)
+    wd = np.asarray(dequantize(codes, scale))
+    s_full = np.repeat(np.asarray(scale), G, axis=0)
+    assert np.all(np.abs(w - wd) <= s_full / 2 * (1 + 1e-5) + 1e-9)
+
+
+@given(st.data())
+@settings(max_examples=10, deadline=None)
+def test_attention_kv_permutation_invariance(data):
+    """Paper §4.4.4: attention output is invariant to KV order when
+    positions travel with the entries (sum-based reduction)."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    Tk = data.draw(st.integers(2, 24))
+    q = rng.standard_normal((1, 1, 2, 8)).astype(np.float32)
+    k = rng.standard_normal((1, Tk, 2, 8)).astype(np.float32)
+    v = rng.standard_normal((1, Tk, 2, 8)).astype(np.float32)
+    from repro.models.attention import chunked_attention
+    qpos = jnp.full((1, 1), Tk)                  # attend to everything
+    perm = rng.permutation(Tk)
+    out1 = chunked_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                             q_positions=qpos, causal=True, chunk=Tk,
+                             kv_positions=jnp.arange(Tk))
+    out2 = chunked_attention(jnp.asarray(q), jnp.asarray(k[:, perm]),
+                             jnp.asarray(v[:, perm]),
+                             q_positions=qpos, causal=True, chunk=Tk,
+                             kv_positions=jnp.asarray(perm))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-4, atol=1e-5)

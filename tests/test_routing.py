@@ -1,0 +1,84 @@
+"""Unit tests for SkipGPT routing (core/routing.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import routing
+
+
+@pytest.fixture
+def cfg():
+    return get_config("qwen3-8b").smoke()
+
+
+def test_router_logits_shape(cfg):
+    p = routing.router_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.ones((2, 5, cfg.d_model), jnp.bfloat16)
+    lg = routing.router_logits(p, x)
+    assert lg.shape == (2, 5, 2) and lg.dtype == jnp.float32
+
+
+def test_gate_deterministic_inference(cfg):
+    logits = jnp.array([[[0.0, 1.0], [1.0, 0.0], [0.3, 0.3]]])
+    gate, p_keep = routing.gate_from_logits(logits, None, cfg, train=False)
+    np.testing.assert_array_equal(np.asarray(gate), [[1.0, 0.0, 0.0]])
+    assert float(p_keep[0, 0]) > 0.5
+
+
+def test_gate_straight_through_gradient(cfg):
+    """The ST estimator must pass gradients to the router weights."""
+    p = routing.router_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
+
+    def loss(p):
+        lg = routing.router_logits(p, x)
+        gate, _ = routing.gate_from_logits(lg, jax.random.PRNGKey(2), cfg,
+                                           train=True)
+        return (gate * 2.0).sum()
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["w"]).sum()) > 0.0
+
+
+def test_gate_is_binary_in_train(cfg):
+    p = routing.router_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+    lg = routing.router_logits(p, x)
+    gate, _ = routing.gate_from_logits(lg, jax.random.PRNGKey(3), cfg, True)
+    vals = np.unique(np.asarray(gate))
+    assert set(vals).issubset({0.0, 1.0})
+
+
+def test_capacity_bounds():
+    assert routing.capacity(100, 0.75) == 80      # rounded up to 8
+    assert routing.capacity(100, 1.0) == 100
+    assert routing.capacity(4, 0.25) == 4         # min(T, multiple)
+    assert routing.capacity(1024, 0.75) == 768
+
+
+def test_select_topc_sorted_and_top():
+    score = jnp.array([[0.1, 0.9, 0.5, 0.8, 0.2]])
+    idx = routing.select_topc(score, 3)
+    np.testing.assert_array_equal(np.asarray(idx[0]), [1, 2, 3])
+    assert np.all(np.diff(np.asarray(idx[0])) > 0)
+
+
+def test_gather_scatter_roundtrip():
+    x = jnp.arange(2 * 6 * 3, dtype=jnp.float32).reshape(2, 6, 3)
+    idx = jnp.array([[0, 2, 5], [1, 3, 4]])
+    g = routing.gather_tokens(x, idx)
+    assert g.shape == (2, 3, 3)
+    s = routing.scatter_tokens(g, idx, 6)
+    # selected rows recovered, others zero
+    np.testing.assert_allclose(np.asarray(s[0, 2]), np.asarray(x[0, 2]))
+    np.testing.assert_allclose(np.asarray(s[1, 0]), 0.0)
+
+
+def test_router_stats_targets_keep_prob(cfg):
+    p_keep = jnp.full((4, 8), cfg.skip.keep_prob)
+    stats = routing.router_stats(p_keep, jnp.ones((4, 8)), cfg)
+    assert float(stats["router_loss"]) < 1e-9

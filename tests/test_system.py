@@ -1,0 +1,126 @@
+"""End-to-end behaviour: training reduces loss, checkpoint-resume is
+bitwise-exact, serving generates with routing + KV reuse, straggler/
+preemption hooks function."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.train.fault_tolerance import (ElasticPlan, PreemptionGuard,
+                                         StragglerMonitor)
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _tiny_cfg():
+    cfg = get_config("qwen3-8b").smoke()
+    return dataclasses.replace(cfg, num_layers=2, d_ff=128)
+
+
+@pytest.mark.slow
+def test_training_reduces_loss(tmp_path):
+    cfg = _tiny_cfg()
+    tcfg = TrainerConfig(seq_len=64, global_batch=4, steps=40, lr=1e-3,
+                        log_every=5, ckpt_dir=None)
+    tr = Trainer(cfg, tcfg)
+    tr.run()
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+@pytest.mark.slow
+def test_checkpoint_resume_bitwise(tmp_path):
+    cfg = _tiny_cfg()
+    common = dict(seq_len=32, global_batch=2, lr=1e-3, log_every=1,
+                  ckpt_every=5)
+    # run A: 10 straight steps
+    trA = Trainer(cfg, TrainerConfig(steps=10, ckpt_dir=None, **common))
+    stateA = trA.run()
+    # run B: 5 steps, checkpoint, fresh trainer resumes to 10
+    ckpt = str(tmp_path / "ck")
+    trB1 = Trainer(cfg, TrainerConfig(steps=5, ckpt_dir=ckpt, **common))
+    trB1.run()
+    trB2 = Trainer(cfg, TrainerConfig(steps=10, ckpt_dir=ckpt, **common))
+    stateB = trB2.run(resume=True)
+    la = jax.tree_util.tree_leaves(stateA["params"])
+    lb = jax.tree_util.tree_leaves(stateB["params"])
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@pytest.mark.slow
+def test_serve_engine_generates():
+    cfg = get_config("llama2-7b").smoke()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_len=48)
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 16),
+                                                dtype=np.int32)
+    out = eng.generate(prompts, 8)
+    assert out["tokens"].shape == (2, 8)
+    s = out["stats"]
+    assert s.decode_tokens == 16
+    assert 0.0 < s.kv_saved_fraction < 0.5       # ~25% claim regime
+    # greedy decoding is deterministic
+    out2 = ServeEngine(cfg, params, max_len=48).generate(prompts, 8)
+    np.testing.assert_array_equal(out["tokens"], out2["tokens"])
+
+
+def test_serve_gather_mode_runs():
+    cfg = get_config("llama2-7b").smoke()
+    cfg = dataclasses.replace(
+        cfg, skip=dataclasses.replace(cfg.skip, mode="gather"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_len=40)
+    prompts = np.random.default_rng(1).integers(0, cfg.vocab_size, (1, 32),
+                                                dtype=np.int32)
+    out = eng.generate(prompts, 4)
+    assert np.isfinite(out["tokens"]).all()
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(factor=2.0, budget=2)
+    for _ in range(10):
+        mon.observe(1.0)
+    assert not mon.reconfigure_requested
+    mon.observe(5.0)
+    mon.observe(5.0)
+    assert mon.strikes == 2 and mon.reconfigure_requested
+
+
+def test_preemption_guard_checkpoints_early(tmp_path):
+    cfg = _tiny_cfg()
+    tcfg = TrainerConfig(seq_len=32, global_batch=2, steps=100,
+                         ckpt_dir=str(tmp_path / "ck"), ckpt_every=1000,
+                         log_every=1000)
+    tr = Trainer(cfg, tcfg)
+
+    # inject preemption after 3 steps via the dataset hook
+    orig = tr.dataset.batch
+    calls = {"n": 0}
+
+    def hooked(step):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            os.kill(os.getpid(), __import__("signal").SIGTERM)
+        return orig(step)
+
+    tr.dataset.batch = hooked
+    state = tr.run()
+    from repro.train import checkpoint as ck
+    assert ck.latest_step(str(tmp_path / "ck")) == int(state["data_step"])
+    assert int(state["data_step"]) < 100
+
+
+def test_elastic_plan():
+    plan = ElasticPlan(model=16)
+    assert plan.mesh_for(256) == (16, 16)
+    assert plan.mesh_for(240) == (8, 16)          # lost a host: shrink data
+    assert plan.mesh_for(512) == (32, 16)
+    parts = plan.host_partition(256, 8)
+    assert parts[0] == (0, 32) and parts[-1] == (224, 256)
