@@ -1,0 +1,118 @@
+"""Continuous batching vs. lock-step serving on a mixed-length workload.
+
+The quantity SkipOPU's dynamic allocation ultimately buys is *useful*
+decode throughput under heterogeneous traffic: requests with different
+prompt lengths and generation budgets.  The lock-step engine must pad
+every prompt to the batch max and decode every row to the batch's longest
+generation budget; the continuous engine retires each request the moment
+it finishes and admits the next one into the freed KV slot, so no decode
+step is spent on tokens nobody asked for.
+
+Reported throughput counts only *requested* tokens (sum of per-request
+``max_new``), so lock-step over-generation shows up as lost throughput —
+the same normalization serving papers use for goodput.  The engine's
+``kv_saved_fraction`` is *measured* from the per-step execution-gate log
+(kv_reuse.storage_saved_fraction), not the analytic keep-rate estimate;
+the warm-start router keeps everything (saved = 0), the neutral-bias row
+shows the skipping regime.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.configs import get_config
+from repro.core import routing
+from repro.models import model as M
+from repro.serve.engine import ContinuousBatchingEngine, ServeEngine
+
+MAX_LEN = 64
+SLOTS = 4
+
+
+def _workload(cfg, n: int):
+    """Heterogeneous traffic: prompt lengths and generation budgets both
+    mixed, so lock-step batching pays for pad-to-max twice (prefill width
+    and decode depth)."""
+    rng = np.random.default_rng(0)
+    lens = [44, 8, 12, 16, 40, 8, 12, 20][:n]
+    news = [2, 16, 4, 16, 2, 16, 4, 12][:n]
+    prompts = [rng.integers(0, cfg.vocab_size, (l,), dtype=np.int32)
+               for l in lens]
+    return list(zip(prompts, news))
+
+
+def _run_lockstep(eng: ServeEngine, work) -> float:
+    """Batches of SLOTS, prompts padded to the batch max, every row decoded
+    to the batch's largest max_new.  Returns wall seconds."""
+    t0 = time.time()
+    for i in range(0, len(work), SLOTS):
+        group = work[i:i + SLOTS]
+        tmax = max(p.shape[0] for p, _ in group)
+        batch = np.stack([np.pad(p, (0, tmax - p.shape[0])) for p, _ in group])
+        eng.generate(batch, max(n for _, n in group))
+    return time.time() - t0
+
+
+def _run_continuous(eng: ContinuousBatchingEngine, work):
+    t0 = time.time()
+    for p, n in work:
+        eng.submit(p, max_new_tokens=n)
+    out = eng.run()
+    return time.time() - t0, out
+
+
+def run(quick: bool = False) -> Rows:
+    rows = Rows()
+    cfg = get_config("llama2-7b").smoke()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    # 8 requests over 4 slots: the queue-pressure regime continuous
+    # batching exists for (requests > slots, heterogeneous budgets)
+    work = _workload(cfg, 8)
+    useful = sum(n for _, n in work)
+    passes = 2 if quick else 5
+
+    lock = ServeEngine(cfg, params, max_len=MAX_LEN)
+    cont = ContinuousBatchingEngine(cfg, params, max_slots=SLOTS,
+                                    max_len=MAX_LEN)
+    # warm pass compiles every prefill bucket / batch shape; timed passes
+    # are steady-state (the regime a resident server runs in), min-of-N to
+    # shed interference noise from the shared host
+    _run_lockstep(lock, work)
+    _run_continuous(cont, work)
+    lock_ts, cont_ts = [], []
+    for _ in range(passes):
+        lock_ts.append(_run_lockstep(lock, work))
+        s, out = _run_continuous(cont, work)
+        cont_ts.append(s)
+    lock_s = float(np.min(lock_ts))
+    cont_s = float(np.min(cont_ts))
+
+    ttfts = [r.ttft_s for r in out["results"].values()]
+    lock_tps = useful / lock_s
+    cont_tps = useful / cont_s
+    rows.add("serve/lockstep", lock_s * 1e6 / useful,
+             f"useful_tok_s={lock_tps:.1f}")
+    rows.add("serve/continuous", cont_s * 1e6 / useful,
+             f"useful_tok_s={cont_tps:.1f};speedup={cont_tps / lock_tps:.2f}")
+    rows.add("serve/continuous/ttft", np.mean(ttfts) * 1e6,
+             f"max_ttft_s={max(ttfts):.3f}")
+    rows.add("serve/continuous/kv_saved_warmstart", 0.0,
+             f"measured={out['stats'].kv_saved_fraction:.3f};"
+             f"analytic={out['stats'].kv_saved_analytic:.3f}")
+
+    # skipping-router regime: measured storage saving from logged gates
+    eng = ContinuousBatchingEngine(cfg, routing.neutral_router_bias(params),
+                                   max_slots=SLOTS, max_len=MAX_LEN)
+    _, out2 = _run_continuous(eng, work[:4])
+    rows.add("serve/continuous/kv_saved_skipping", 0.0,
+             f"measured={out2['stats'].kv_saved_fraction:.3f};"
+             f"analytic={out2['stats'].kv_saved_analytic:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

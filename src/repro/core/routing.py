@@ -80,6 +80,20 @@ def scatter_tokens(y: jnp.ndarray, idx: jnp.ndarray, T: int) -> jnp.ndarray:
     return jax.vmap(lambda o, i, u: o.at[i].set(u))(out, idx, y)
 
 
+def neutral_router_bias(params: Params) -> Params:
+    """Zero every router's keep-warm-start bias so an *untrained* model
+    actually skips tokens (~50 % keep) — the regime the measured KV-storage
+    accounting is about.  Tests and benchmarks use this; trained routers
+    reach the target keep rate through the aux loss instead."""
+    def one(path, leaf):
+        names = [getattr(p, "key", "") for p in path]
+        if len(names) >= 2 and names[-2] == "router" and names[-1] == "b":
+            return jnp.zeros_like(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
 def router_stats(p_keep: jnp.ndarray, gate: jnp.ndarray, cfg: ModelConfig
                  ) -> Dict[str, jnp.ndarray]:
     """Per-submodule routing statistics + the sparsity-control aux loss

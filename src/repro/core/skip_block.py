@@ -181,6 +181,18 @@ def routed_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
 # Decode-step variants (single new token, per-layer KV cache)
 # ---------------------------------------------------------------------------
 
+def _row_update(cache: jnp.ndarray, new: jnp.ndarray, t: jnp.ndarray,
+                time_axis: int) -> jnp.ndarray:
+    """Write one new KV entry per batch row at its own position.
+    cache: [B, ...] with the time dim at ``time_axis`` (batch excluded);
+    new: cache row-shaped update of time-extent 1; t: [B] int32."""
+    def one(c, u, ti):
+        start = [jnp.int32(0)] * (c.ndim)
+        start[time_axis] = ti
+        return jax.lax.dynamic_update_slice(c, u, tuple(start))
+    return jax.vmap(one)(cache, new, t)
+
+
 def routed_attention_decode(p: Params, x: jnp.ndarray,
                             k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                             t: jnp.ndarray,
@@ -190,9 +202,11 @@ def routed_attention_decode(p: Params, x: jnp.ndarray,
                             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
                                        kv_reuse.KVPair, Stats]:
     """One decode step.  x: [B, 1, D]; k/v_cache: [B, Tmax, Hkv, dh];
-    t: scalar int (current position); kv_prev: the carried single-token KV
-    view (the proactive invariance-buffer update, §4.4.2)."""
+    t: [B] int32 per-sequence positions (a scalar broadcasts — lock-step);
+    kv_prev: the carried single-token KV view (the proactive
+    invariance-buffer update, §4.4.2)."""
     B = x.shape[0]
+    t = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t, jnp.int32)), (B,))
     routed = cfg.skip.enabled and cfg.skip.route_attention
     logits, nstats = _router_and_stats(p, x, cfg, routed)
     gate, p_keep = _gate(logits[:, 0] if logits is not None else None,
@@ -207,14 +221,14 @@ def routed_attention_decode(p: Params, x: jnp.ndarray,
     else:
         k_t, v_t = k_new, v_new
 
-    valid = jnp.full((B,), t + 1, jnp.int32)
+    valid = t + 1                                        # [B]
     if cfg.kv_cache_layout == "bhtd":
-        # head-major cache: write [B, Hkv, 1, dh] at (0, 0, t, 0); the
+        # head-major cache: write [Hkv, 1, dh] per row at its own t; the
         # attention dot consumes the cache with no relayout transpose.
-        k_cache = jax.lax.dynamic_update_slice(
-            k_cache, k_t.swapaxes(1, 2).astype(k_cache.dtype), (0, 0, t, 0))
-        v_cache = jax.lax.dynamic_update_slice(
-            v_cache, v_t.swapaxes(1, 2).astype(v_cache.dtype), (0, 0, t, 0))
+        k_cache = _row_update(
+            k_cache, k_t.swapaxes(1, 2).astype(k_cache.dtype), t, time_axis=1)
+        v_cache = _row_update(
+            v_cache, v_t.swapaxes(1, 2).astype(v_cache.dtype), t, time_axis=1)
         k_cache = hint(k_cache, "kv_cache_step_bhtd")
         v_cache = hint(v_cache, "kv_cache_step_bhtd")
         o = attn_mod.decode_attention_bhtd(
@@ -222,10 +236,10 @@ def routed_attention_decode(p: Params, x: jnp.ndarray,
             q_positions=_q_index_positions(positions), cfg=cfg,
             kv_valid_len=valid)
     else:
-        k_cache = jax.lax.dynamic_update_slice(
-            k_cache, k_t.astype(k_cache.dtype), (0, t, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(
-            v_cache, v_t.astype(v_cache.dtype), (0, t, 0, 0))
+        k_cache = _row_update(k_cache, k_t.astype(k_cache.dtype), t,
+                              time_axis=0)
+        v_cache = _row_update(v_cache, v_t.astype(v_cache.dtype), t,
+                              time_axis=0)
         k_cache = hint(k_cache, "kv_cache_step")
         v_cache = hint(v_cache, "kv_cache_step")
         o = attn_mod.attention_core(

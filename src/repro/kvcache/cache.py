@@ -99,8 +99,9 @@ class CompactKVStore:
         layer 0 (the paper's Case-2: buffer invalidated)."""
         T = self._tokens
         if self._views_valid_layer is not None and \
-                layer == self._views_valid_layer:
-            pass
+                layer == self._views_valid_layer and \
+                len(self._view_k) == T:
+            pass                         # cached view is current
         elif self._views_valid_layer is not None and \
                 layer == self._views_valid_layer + 1 and \
                 len(self._view_k) == T:
@@ -127,7 +128,15 @@ class CompactKVStore:
 
     def extend_view_with(self, k: np.ndarray, v: np.ndarray
                          ) -> Tuple[np.ndarray, np.ndarray]:
-        """View including the in-flight token (not yet committed)."""
-        kk, vv = self.view(self._views_valid_layer or 0)
+        """View including the in-flight token (not yet committed).
+
+        ``_views_valid_layer is None`` (no view ever built) is spelled out
+        instead of the old ``or 0`` so the two states read differently;
+        either way ``view()`` now rebuilds when its cached buffer is stale
+        (fewer entries than committed tokens) rather than returning it."""
+        if self._views_valid_layer is None:
+            kk, vv = self.view(0)        # build the dense base from scratch
+        else:
+            kk, vv = self.view(self._views_valid_layer)
         return (np.concatenate([kk, k[None]], 0),
                 np.concatenate([vv, v[None]], 0))

@@ -82,10 +82,11 @@ def output_proj(params: Params, o: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray
 def _mask_for_chunk(q_pos: jnp.ndarray, kv_pos: jnp.ndarray, *, causal: bool,
                     window: int, kv_valid_len: Optional[jnp.ndarray],
                     batch: int) -> jnp.ndarray:
-    """Boolean [B, Tq, Ck] mask (True = attend)."""
+    """Boolean [B, Tq, Ck] mask (True = attend).  kv_pos is [Ck] (shared) or
+    [B, Ck] (per-sequence — ragged decode over ring/slot caches)."""
     qp = q_pos[:, :, None]           # [B, Tq, 1]
-    kp = kv_pos[None, None, :]       # [1, 1, Ck]
-    m = jnp.ones((batch, q_pos.shape[1], kv_pos.shape[0]), bool)
+    kp = kv_pos[:, None, :] if kv_pos.ndim == 2 else kv_pos[None, None, :]
+    m = jnp.ones((batch, q_pos.shape[1], kv_pos.shape[-1]), bool)
     if causal:
         m &= kp <= qp
     if window:
@@ -109,8 +110,9 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
        gather mode); ``q_positions`` [B, Tq] carries original indices for the
        causal/window masks.
     k, v: [B, Tk, Hkv, dh] — the (possibly reused) per-layer KV view.
-    kv_positions: optional explicit [Tk] absolute positions (ring-buffer
-       caches); default arange(Tk).
+    kv_positions: optional explicit [Tk] or [B, Tk] absolute positions
+       (ring-buffer caches; per-sequence for ragged decode); default
+       arange(Tk).
     Returns [B, Tq, Hq, dh].
     """
     B, Tq, Hq, dh = q.shape
@@ -130,7 +132,8 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         if kv_positions is not None:
-            kv_positions = jnp.pad(kv_positions, (0, pad),
+            pads = [(0, 0)] * (kv_positions.ndim - 1) + [(0, pad)]
+            kv_positions = jnp.pad(kv_positions, pads,
                                    constant_values=jnp.iinfo(jnp.int32).max)
         elif kv_valid_len is None:
             # padded tail masked via kv_valid_len
@@ -151,7 +154,8 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         s = jnp.einsum("bhgqd,bkhd->bhgqk", qT, k_c,
                        preferred_element_type=jnp.float32)
         if kv_positions is not None:
-            kv_pos = jax.lax.dynamic_slice(kv_positions, (ci * chunk,), (chunk,))
+            kv_pos = jax.lax.dynamic_slice_in_dim(
+                kv_positions, ci * chunk, chunk, axis=kv_positions.ndim - 1)
         else:
             kv_pos = ci * chunk + jnp.arange(chunk)
         mask = _mask_for_chunk(q_positions, kv_pos, causal=causal,

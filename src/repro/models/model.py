@@ -225,9 +225,14 @@ def _pad_cache_to(cache: Dict, T: int, pad_to: int, cfg: ModelConfig) -> Dict:
 
 
 def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
-            pad_to: Optional[int] = None
+            pad_to: Optional[int] = None,
+            last_index: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, Dict, Dict]:
-    """Returns (last-position logits [B, V], cache, stats)."""
+    """Returns (last-position logits [B, V], cache, stats).
+
+    ``last_index``: optional [B] int32 index of each sequence's final *real*
+    token — bucketed prefill right-pads prompts to a shared length, and the
+    next-token logits must come from the real last position, not the pad."""
     if cfg.frontend == "token":
         B, T = batch["tokens"].shape
     else:
@@ -236,8 +241,12 @@ def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
     x = _embed_inputs(params, batch, positions, cfg)
     x, stats, cache = _apply_stack(params, x, positions, cfg, None, False, True)
     x = layers.norm_apply(params["final_norm"], x, cfg)
+    if last_index is None:
+        xl = x[:, -1:, :]
+    else:
+        xl = x[jnp.arange(B), last_index.astype(jnp.int32)][:, None, :]
     logits = layers.unembed(params["embed"], params.get("lm_head"),
-                            x[:, -1:, :], cfg)[:, 0]
+                            xl, cfg)[:, 0]
     if pad_to is not None:
         cache = _pad_cache_to(cache, T, pad_to, cfg)
     return logits, cache, stats
@@ -285,13 +294,16 @@ def decode_step(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
                 t: jnp.ndarray, cfg: ModelConfig
                 ) -> Tuple[jnp.ndarray, Dict, Dict]:
     """One token for every sequence.  batch: {'tokens': [B, 1]} (or
-    {'embeds': [B, 1, D]}); t: scalar current position.  Returns
-    (logits [B, V], new cache, stats)."""
+    {'embeds': [B, 1, D]}); t: [B] int32 per-sequence positions — a scalar
+    broadcasts to the whole batch (lock-step decode).  Returns
+    (logits [B, V], new cache, stats); ``stats['attn_gate']`` is the
+    [n_attn_layers, B] execution-gate log over the attention stack."""
     if cfg.frontend == "token":
         B = batch["tokens"].shape[0]
     else:
         B = batch["embeds"].shape[0]
-    pos = jnp.full((B, 1), t, jnp.int32)
+    t = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t, jnp.int32)), (B,))
+    pos = t[:, None]
     if cfg.pos_embedding == "mrope":
         pos = jnp.broadcast_to(pos[None], (3, B, 1))
     x = _embed_inputs(params, batch, pos, cfg)
@@ -299,6 +311,8 @@ def decode_step(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
     stack = params["stack"]
     x, kv_prev, c0, stats = transformer.stage_decode(
         stack["stage0"], cache["stage0"], x, None, t, pos, cfg)
+    g0 = stats.pop("attn_gate", None)
+    gates = g0                      # [nA, B] or None (attention-free stage)
     new_cache: Dict[str, Any] = {"stage0": c0}
 
     if cfg.num_stages > 1:
@@ -307,26 +321,38 @@ def decode_step(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
             sp, ce = xs
             x, kv_prev, c, s = transformer.stage_decode(
                 sp, ce, x, kv_prev, t, pos, cfg)
-            return (x, kv_prev), (c, s)
+            g = s.pop("attn_gate", None)
+            return (x, kv_prev), (c, s, g)
 
         if cfg.scan_layers:
-            (x, kv_prev), (cs, s_scan) = jax.lax.scan(
+            (x, kv_prev), (cs, s_scan, g_scan) = jax.lax.scan(
                 body, (x, kv_prev), (stack["stages"], cache["stages"]))
             new_cache["stages"] = cs
             stats = jax.tree_util.tree_map(lambda a, b: a + b.sum(axis=0),
                                            stats, s_scan)
+            if gates is not None:
+                gates = jnp.concatenate([gates[None], g_scan], axis=0)
         else:
-            c_list = []
+            c_list, g_list = [], []
             for i in range(cfg.num_stages - 1):
                 sl = lambda l: l[i]
                 xs = (jax.tree_util.tree_map(sl, stack["stages"]),
                       jax.tree_util.tree_map(sl, cache["stages"]))
-                (x, kv_prev), (c, s) = body((x, kv_prev), xs)
+                (x, kv_prev), (c, s, g) = body((x, kv_prev), xs)
                 stats = jax.tree_util.tree_map(lambda a, b: a + b, stats, s)
                 c_list.append(c)
+                g_list.append(g)
             new_cache["stages"] = jax.tree_util.tree_map(
                 lambda *ls: jnp.stack(ls), *c_list)
+            if gates is not None:
+                gates = jnp.concatenate(
+                    [gates[None]] + [g[None] for g in g_list], axis=0)
+        if gates is not None:
+            # [S, nA, B] -> [L_attn, B] in stack order (stage0 first)
+            gates = gates.reshape(-1, B)
 
+    if gates is not None:
+        stats["attn_gate"] = gates
     x = layers.norm_apply(params["final_norm"], x, cfg)
     logits = layers.unembed(params["embed"], params.get("lm_head"), x, cfg)
     return logits[:, 0], new_cache, stats

@@ -179,9 +179,14 @@ def stage_decode(stage_params: Params, cache: Dict, x: jnp.ndarray,
                  kv_prev: Optional[Tuple], t: jnp.ndarray,
                  positions: jnp.ndarray, cfg: ModelConfig
                  ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict, Dict]:
-    """One super-block, one token.  Returns (x, kv_prev, new_cache, stats)."""
+    """One super-block, one token per sequence.  ``t``: [B] int32 (or scalar,
+    broadcast — lock-step decode).  Returns (x, kv_prev, new_cache, stats);
+    stats carries ``attn_gate`` [n_attn_in_stage, B] — the per-layer
+    execution gates the serve engine logs for measured KV-storage
+    accounting."""
     stats = _ZERO_STATS()
     new_cache: Dict[str, Any] = {}
+    gates: List[jnp.ndarray] = []
     for k in range(cfg.stage_len):
         bp = stage_params[f"pos{k}"]
         ce = cache[f"pos{k}"]
@@ -201,6 +206,7 @@ def stage_decode(stage_params: Params, cache: Dict, x: jnp.ndarray,
                 bp["mixer"], x, ce["k"], ce["v"], t, kv_prev, positions, cfg)
             new_cache[f"pos{k}"] = {"k": kc, "v": vc}
             kv_prev = kv_prev_l
+            gates.append(s["attn_gate"])
             stats = _acc_stats(stats, s, cfg.skip.route_attention)
         else:
             window = cfg.window_size if kind == LOCAL else 0
@@ -208,22 +214,27 @@ def stage_decode(stage_params: Params, cache: Dict, x: jnp.ndarray,
                 bp["mixer"], x, ce["k"], ce["v"], t, kv_prev, positions, cfg,
                 window=window)
             new_cache[f"pos{k}"] = {"k": kc, "v": vc}
+            gates.append(s["attn_gate"])
             stats = _acc_stats(stats, s, cfg.skip.route_attention)
 
         if "ffn" in bp:
             x, s = skip_block.routed_mlp_decode(
                 bp["ffn"], x, cfg, inner_fn=_ffn_inner(cfg, is_moe))
             stats = _acc_stats(stats, s, cfg.skip.route_mlp)
+    if gates:
+        stats["attn_gate"] = jnp.stack(gates)
     return x, kv_prev, new_cache, stats
 
 
 def _ring_attention_decode(p: Params, x, k_ring, v_ring, t, kv_prev,
                            positions, cfg: ModelConfig):
-    """Sliding-window decode against a ring buffer cache [B, W, H, d]."""
+    """Sliding-window decode against a ring buffer cache [B, W, H, d].
+    ``t``: [B] per-sequence positions (scalar broadcasts)."""
     from repro.core import kv_reuse, routing
 
     B = x.shape[0]
     W = cfg.window_size
+    t = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t, jnp.int32)), (B,))
     routed = cfg.skip.enabled and cfg.skip.route_attention
     logits, nstats = skip_block._router_and_stats(p, x, cfg, routed)
     gate, p_keep = skip_block._gate(
@@ -238,18 +249,18 @@ def _ring_attention_decode(p: Params, x, k_ring, v_ring, t, kv_prev,
     else:
         k_t, v_t = k_new, v_new
 
-    slot = jnp.mod(t, W)
-    k_ring = jax.lax.dynamic_update_slice(
-        k_ring, k_t.astype(k_ring.dtype), (0, slot, 0, 0))
-    v_ring = jax.lax.dynamic_update_slice(
-        v_ring, v_t.astype(v_ring.dtype), (0, slot, 0, 0))
+    slot = jnp.mod(t, W)                                 # [B]
+    k_ring = skip_block._row_update(k_ring, k_t.astype(k_ring.dtype), slot,
+                                    time_axis=0)
+    v_ring = skip_block._row_update(v_ring, v_t.astype(v_ring.dtype), slot,
+                                    time_axis=0)
 
-    kv_pos = ring_positions(t, W)                        # [W]
+    kv_pos = jax.vmap(ring_positions, in_axes=(0, None))(t, W)   # [B, W]
     mask_valid = kv_pos >= 0
     # emulate kv_valid_len via an explicit mask: map invalid slots to a
     # position beyond t so the causal mask kills them.
     q_pos = skip_block._q_index_positions(positions)
-    eff_pos = jnp.where(mask_valid, kv_pos, t + 1)
+    eff_pos = jnp.where(mask_valid, kv_pos, (t + 1)[:, None])
     o = attn_mod.chunked_attention(
         q, k_ring, v_ring,
         q_positions=q_pos, causal=True, window=0,
@@ -261,4 +272,5 @@ def _ring_attention_decode(p: Params, x, k_ring, v_ring, t, kv_prev,
     x = x + y
     stats = routing.router_stats(p_keep, gate, cfg) if routed else {
         "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    stats["attn_gate"] = gate
     return x, k_ring, v_ring, (k_t, v_t), stats

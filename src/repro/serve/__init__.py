@@ -1,1 +1,3 @@
-from repro.serve.engine import ServeEngine, ServeStats  # noqa: F401
+from repro.serve.engine import (ContinuousBatchingEngine,  # noqa: F401
+                                RequestResult, ServeEngine, ServeStats)
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401

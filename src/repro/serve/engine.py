@@ -1,30 +1,41 @@
-"""Batched serving engine: the paper's end-to-end inference pipeline.
+"""Serving engines: the paper's end-to-end inference pipeline.
 
 prefill (gather/compacted execution) → autoregressive decode with dynamic
-routing and cross-layer KV reuse, while a ``CompactKVStore`` tracks the
-storage/traffic the SkipOPU memory system would see (feeding the Fig. 8 /
-Fig. 9 / 25.4 %-storage reproductions).
+routing and cross-layer KV reuse, with KV-storage accounting *measured*
+from the per-step execution-gate log (``stats['attn_gate']``) instead of
+the analytic keep-rate estimate.
 
-The jit'd decode path is the same ``model.decode_step`` the dry-run lowers
-— this engine adds request batching, sampling, stop handling, and the
-bookkeeping layers.
+Two engines share the jitted ``model.decode_step`` path:
+
+``ServeEngine``
+    Lock-step batch: one fixed batch, every sequence at the same position.
+    Kept as the baseline the continuous engine is benchmarked against.
+
+``ContinuousBatchingEngine``
+    Slot-based continuous batching (the serving pattern SkipOPU's
+    dynamically allocated compute pays off in): a fixed ``max_slots ×
+    max_len`` KV pool allocated once, a FIFO request queue with prefill
+    length-bucketing, per-sequence decode positions (``t: [B]``), and
+    admission/eviction as requests start/stop — see
+    ``repro/serve/scheduler.py`` and docs/serving.md.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import LOCAL, ModelConfig
 from repro.core import kv_reuse
-from repro.kvcache.cache import KVStats
 from repro.models import model as model_lib
 from repro.serve.sampling import sample
+from repro.serve.scheduler import (ActiveRequest, Request, Scheduler,
+                                   can_bucket, default_buckets)
 
 
 @dataclasses.dataclass
@@ -34,14 +45,65 @@ class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     attn_keep_frac: float = 1.0
-    kv_saved_fraction: float = 0.0
+    kv_saved_fraction: float = 0.0        # measured from logged gates
+    kv_saved_analytic: float = 0.0        # configured-keep-rate estimate
+    requests_completed: int = 0
 
     @property
     def decode_tok_per_s(self) -> float:
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
 
 
+@dataclasses.dataclass
+class RequestResult:
+    """Per-request outcome + serving metrics."""
+    uid: int
+    tokens: np.ndarray                   # generated tokens (incl. stop token)
+    prompt_len: int
+    ttft_s: float                        # submit → first token
+    decode_s: float                      # time in this request's decode steps
+    finish_reason: str                   # "length" | "stop" | "max_len"
+    kv_stored: int = 0                   # measured compact-store entries
+    kv_dense: int = 0                    # dense-baseline entries
+
+    @property
+    def decode_tokens(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        n = self.decode_tokens - 1       # first token is prefill's
+        return n / self.decode_s if self.decode_s > 0 and n > 0 else 0.0
+
+    @property
+    def kv_saved_fraction(self) -> float:
+        if self.kv_dense == 0:
+            return 0.0
+        return 1.0 - self.kv_stored / self.kv_dense
+
+
+def analytic_kv_saved(cfg: ModelConfig) -> float:
+    """Compact-store saving at the *configured* keep rate: layer 0 dense +
+    keep_prob elsewhere.  The measured per-run figure comes from the decode
+    gate log via kv_reuse.storage_saved_fraction."""
+    L = max(len(cfg.attention_layers), 1)
+    if not (cfg.skip.enabled and cfg.skip.kv_reuse):
+        return 0.0
+    return 1.0 - (1.0 + (L - 1) * cfg.skip.keep_prob) / L
+
+
+def _measured_saved_fraction(gates_per_step: List[np.ndarray],
+                             cfg: ModelConfig) -> float:
+    """Lock-step gate log [L, B] per step -> measured storage saving."""
+    if not gates_per_step or not (cfg.skip.enabled and cfg.skip.kv_reuse):
+        return 0.0
+    g = jnp.asarray(np.stack(gates_per_step, axis=-1))   # [L, B, steps]
+    return float(kv_reuse.storage_saved_fraction(g))
+
+
 class ServeEngine:
+    """Lock-step batched engine (baseline; one shared decode position)."""
+
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
                  temperature: float = 0.0):
         self.cfg = cfg
@@ -52,8 +114,6 @@ class ServeEngine:
                                donate_argnums=(1,))
         self._prefill = jax.jit(partial(model_lib.prefill, cfg=cfg,
                                         pad_to=max_len))
-        # per-(layer, step) execution gates for the storage accounting
-        self._gate_log: List[np.ndarray] = []
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  rng: Optional[jax.Array] = None) -> Dict[str, np.ndarray]:
@@ -73,11 +133,13 @@ class ServeEngine:
 
         out = np.zeros((B, max_new_tokens), np.int32)
         keep_acc, keep_n = 0.0, 0
-        gates_per_step = []
+        gates_per_step: List[np.ndarray] = []
+        emitted = 0
         tok = sample(logits, rng, self.temperature)
         t0 = time.time()
         for i in range(max_new_tokens):
             out[:, i] = np.asarray(tok)
+            emitted += B
             pos = T0 + i
             if pos >= self.max_len:
                 break
@@ -85,28 +147,215 @@ class ServeEngine:
                 self.params, cache, {"tokens": tok[:, None]},
                 jnp.int32(pos))
             if "attn_gate" in dstats:
-                g = np.asarray(dstats["attn_gate"], np.float32)
-                gates_per_step.append(g)
+                gates_per_step.append(
+                    np.asarray(dstats["attn_gate"], np.float32))
             keep_acc += float(dstats["keep_frac_sum"])
             keep_n += max(float(dstats["n_routed"]), 1.0)
             rng, sub = jax.random.split(rng)
             tok = sample(logits, sub, self.temperature)
         jax.block_until_ready(logits)
         stats.decode_s = time.time() - t0
-        stats.decode_tokens = B * max_new_tokens
+        stats.decode_tokens = emitted           # tokens actually emitted
 
         stats.attn_keep_frac = keep_acc / max(keep_n, 1.0)
-        stats.kv_saved_fraction = self.kv_storage_saved(T0 + max_new_tokens)
+        stats.kv_saved_fraction = _measured_saved_fraction(gates_per_step, cfg)
+        stats.kv_saved_analytic = analytic_kv_saved(cfg)
         return {"tokens": out, "stats": stats}
 
-    # ------------------------------------------------------------------
-    def kv_storage_saved(self, total_len: int) -> float:
-        """Analytic compact-store saving at the configured keep rate:
-        layer 0 dense + keep_prob elsewhere (kv_reuse.storage_saved_fraction
-        gives the exact per-run figure in the benchmark)."""
-        L = max(len(self.cfg.attention_layers), 1)
-        if not (self.cfg.skip.enabled and self.cfg.skip.kv_reuse):
-            return 0.0
-        keep = self.cfg.skip.keep_prob
-        stored = 1.0 + (L - 1) * keep
-        return 1.0 - stored / L
+
+# ---------------------------------------------------------------------------
+# Slot-pool plumbing
+# ---------------------------------------------------------------------------
+
+def init_pool(cfg: ModelConfig, max_slots: int, max_len: int) -> Dict:
+    """The continuous engine's KV pool: ``max_slots`` cache rows allocated
+    once (the paper's fixed on-chip KV history buffer analogue)."""
+    return model_lib.init_decode_cache(cfg, max_slots, max_len)
+
+def _align_kv_row(row: jnp.ndarray, target_shape, kind: str,
+                  cfg: ModelConfig) -> jnp.ndarray:
+    """Reshape one prefill k/v cache row (``[.., T, Hkv, dh]``, padded to
+    max_len) to the pool's layout for its layer kind: head-major transpose
+    for ``bhtd`` pools, truncation to the ring extent for window layers
+    (positions < W: ring slot s ≡ position s, so the prefix IS the ring)."""
+    if kind == LOCAL and cfg.window_size:
+        W = target_shape[-3]
+        if row.shape[-3] != W:
+            row = jax.lax.slice_in_dim(row, 0, W, axis=row.ndim - 3)
+    elif cfg.kv_cache_layout == "bhtd":
+        row = row.swapaxes(-3, -2)           # prefill collects [.., T, H, d]
+    return row
+
+
+def pool_insert(pool: Dict, cache: Dict, slot, cfg: ModelConfig) -> Dict:
+    """Scatter a single-request prefill cache (batch dim 1, KV padded to
+    max_len) into row ``slot`` of the pool.  ``slot`` may be traced — the
+    engine runs this jitted (donating the pool) so admission is one fused
+    scatter, not an eager op per cache leaf."""
+    def one(path, pl, nl):
+        names = [getattr(p, "key", "") for p in path]
+        stage_leaf = names[0] == "stages"
+        row = jnp.take(nl, 0, axis=1 if stage_leaf else 0)
+        if names[-1] in ("k", "v"):
+            kind = cfg.block_kind(int(names[-2][3:]))
+            tgt = pl.shape[2:] if stage_leaf else pl.shape[1:]
+            if stage_leaf:
+                tgt = (row.shape[0],) + tuple(tgt)
+            row = _align_kv_row(row, tgt, kind, cfg)
+        row = row.astype(pl.dtype)
+        return pl.at[:, slot].set(row) if stage_leaf else pl.at[slot].set(row)
+
+    return jax.tree_util.tree_map_with_path(one, pool, cache)
+
+
+class ContinuousBatchingEngine:
+    """Continuous batching over a fixed slot pool (per-sequence positions).
+
+    Requests are admitted into free KV slots, prefilled one at a time
+    (length-bucketed where exact), decoded concurrently — each sequence at
+    its own position ``t[slot]`` — and evicted on stop-token / length,
+    freeing the slot for the next queued request.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
+                 max_len: int = 512, temperature: float = 0.0,
+                 prefill_buckets: Optional[Sequence[int]] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        if prefill_buckets is not None and not can_bucket(cfg):
+            raise ValueError(
+                f"{cfg.name}: prefill bucketing pads prompts, which corrupts "
+                "ring-buffer/SSM state and gather-mode capacity — this "
+                "config requires exact-length prefill (prefill_buckets=None)")
+        if prefill_buckets is None and can_bucket(cfg):
+            prefill_buckets = default_buckets(max_len)
+        self.scheduler = Scheduler(max_slots, max_len,
+                                   buckets=prefill_buckets)
+        self._decode = jax.jit(partial(model_lib.decode_step, cfg=cfg),
+                               donate_argnums=(1,))
+        self._prefill = jax.jit(partial(model_lib.prefill, cfg=cfg,
+                                        pad_to=max_len))
+        self._insert = jax.jit(partial(pool_insert, cfg=cfg),
+                               donate_argnums=(0,))
+        self._uid = 0
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, tokens: np.ndarray, max_new_tokens: int,
+               stop_token: Optional[int] = None) -> int:
+        """Queue one prompt; returns its uid."""
+        uid = self._uid
+        self._uid += 1
+        self.scheduler.submit(Request(uid=uid,
+                                      tokens=np.asarray(tokens, np.int32),
+                                      max_new_tokens=max_new_tokens,
+                                      stop_token=stop_token))
+        return uid
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, rng: Optional[jax.Array] = None
+            ) -> Dict[str, object]:
+        """Drain the queue.  Returns {'results': {uid: RequestResult},
+        'stats': ServeStats}."""
+        cfg = self.cfg
+        sched = self.scheduler
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        stats = ServeStats()
+        results: Dict[int, RequestResult] = {}
+        L_attn = max(len(cfg.attention_layers), 1)
+        measure = cfg.skip.enabled and cfg.skip.kv_reuse
+
+        pool = init_pool(cfg, self.max_slots, self.max_len)
+        feed = np.zeros((self.max_slots,), np.int32)
+        pos = np.zeros((self.max_slots,), np.int32)
+        t_run = time.time()
+        keep_acc, keep_n = 0.0, 0.0
+
+        def finish(slot: int, reason: str) -> None:
+            st = sched.release(slot)
+            st.finish_reason = reason
+            results[st.req.uid] = RequestResult(
+                uid=st.req.uid,
+                tokens=np.asarray(st.out_tokens, np.int32),
+                prompt_len=st.req.prompt_len,
+                ttft_s=st.first_token_s - st.submit_s,
+                decode_s=st.decode_s,
+                finish_reason=reason,
+                kv_stored=st.kv_stored,
+                kv_dense=st.kv_dense,
+            )
+            stats.requests_completed += 1
+
+        while sched.has_work():
+            # -- admission: prefill queued requests into free slots --------
+            for slot, req in sched.admit():
+                padded, last = sched.pad_prompt(req.tokens)
+                t0 = time.time()
+                logits, cache, _ = self._prefill(
+                    self.params, {"tokens": jnp.asarray(padded[None])},
+                    last_index=jnp.asarray([last], jnp.int32))
+                pool = self._insert(pool, cache, jnp.int32(slot))
+                rng, sub = jax.random.split(rng)
+                tok = int(np.asarray(sample(logits, sub, self.temperature))[0])
+                now = time.time()
+                stats.prefill_s += now - t0
+                stats.prefill_tokens += req.prompt_len
+                stats.decode_tokens += 1
+                st = ActiveRequest(req=req, slot=slot, pos=req.prompt_len,
+                                   next_token=tok, out_tokens=[tok],
+                                   submit_s=t_run, first_token_s=now)
+                sched.activate(st)
+                if req.stop_token is not None and tok == req.stop_token:
+                    finish(slot, "stop")
+                elif req.max_new_tokens <= 1:
+                    finish(slot, "length")
+
+            if not sched.active:
+                continue
+
+            # -- one ragged decode step over the whole pool ----------------
+            for slot, st in sched.active.items():
+                feed[slot] = st.next_token
+                pos[slot] = st.pos
+            t0 = time.time()
+            logits, pool, dstats = self._decode(
+                self.params, pool, {"tokens": jnp.asarray(feed[:, None])},
+                jnp.asarray(pos))
+            rng, sub = jax.random.split(rng)
+            toks = np.asarray(sample(logits, sub, self.temperature))
+            gates = (np.asarray(dstats["attn_gate"], np.float32)
+                     if "attn_gate" in dstats else None)
+            step_s = time.time() - t0
+            stats.decode_s += step_s
+
+            for slot in list(sched.active):
+                st = sched.active[slot]
+                st.decode_s += step_s
+                # the fed token's KV was just written at st.pos
+                if gates is not None:
+                    keep_acc += float(gates[:, slot].sum())
+                    keep_n += L_attn
+                    st.kv_dense += L_attn
+                    st.kv_stored += (1 + int(gates[1:, slot].sum())
+                                     if measure else L_attn)
+                st.pos += 1
+                tok = int(toks[slot])
+                st.out_tokens.append(tok)
+                st.next_token = tok
+                stats.decode_tokens += 1
+                if st.req.stop_token is not None and tok == st.req.stop_token:
+                    finish(slot, "stop")
+                elif len(st.out_tokens) >= st.req.max_new_tokens:
+                    finish(slot, "length")
+                elif st.pos >= self.max_len:
+                    finish(slot, "max_len")
+
+        stats.attn_keep_frac = keep_acc / keep_n if keep_n else 1.0
+        tot_dense = sum(r.kv_dense for r in results.values())
+        tot_stored = sum(r.kv_stored for r in results.values())
+        stats.kv_saved_fraction = (1.0 - tot_stored / tot_dense
+                                   if tot_dense else 0.0)
+        stats.kv_saved_analytic = analytic_kv_saved(cfg)
+        return {"results": results, "stats": stats}

@@ -1,0 +1,148 @@
+"""Request scheduler for the continuous-batching serve engine.
+
+The scheduler is the software realization of SkipOPU's dynamically
+allocated compute: a fixed pool of KV-cache *slots* (the on-chip KV
+history buffer analogue — ``max_slots × max_len`` arrays allocated once)
+is multiplexed over an unbounded FIFO stream of requests.  A request is
+*admitted* when a slot frees up, prefilled into its slot, decoded
+interleaved with every other resident request (each at its own position
+``t[slot]``), and *evicted* on stop-token / length, immediately releasing
+the slot to the next queued request.
+
+Prefill length-bucketing: prompts are right-padded to a small set of
+bucket lengths so the jitted prefill compiles once per bucket instead of
+once per prompt length (the shape-polymorphism tax of XLA).  Bucketing is
+exact for masked-mode global-attention stacks — pads sit *after* the real
+tokens, so causal masking keeps every real position byte-identical — and
+is disabled (exact-length prefill) for stacks where padding perturbs
+state (SSM scans, ring-buffer local attention, gather-mode routing whose
+static capacity depends on T).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ATTN, ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request."""
+    uid: int
+    tokens: np.ndarray               # [T0] int32 prompt
+    max_new_tokens: int
+    stop_token: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[-1])
+
+
+@dataclasses.dataclass
+class ActiveRequest:
+    """Engine-side state of an admitted request."""
+    req: Request
+    slot: int
+    pos: int                         # cache position the next token writes to
+    next_token: int = 0              # token fed at ``pos`` next decode step
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    # measured compact-KV accounting (from the decode attn_gate log)
+    kv_stored: int = 0               # per-layer entries actually written
+    kv_dense: int = 0                # what a dense per-layer store would write
+    submit_s: float = 0.0
+    first_token_s: float = 0.0
+    # time spent in decode steps this request participated in (other
+    # requests' interleaved admission prefills excluded)
+    decode_s: float = 0.0
+    finish_reason: str = ""
+
+
+def default_buckets(max_len: int, lo: int = 16) -> Tuple[int, ...]:
+    """Powers of two from ``lo`` up to (and including) max_len."""
+    out: List[int] = []
+    b = lo
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
+def can_bucket(cfg: ModelConfig) -> bool:
+    """Padding-exactness condition (see module docstring)."""
+    all_global = all(k == ATTN for k in cfg.layer_pattern)
+    gather = cfg.skip.enabled and cfg.skip.mode == "gather"
+    return all_global and not gather
+
+
+class Scheduler:
+    """FIFO queue + slot free-list + prefill length-bucketing."""
+
+    def __init__(self, max_slots: int, max_len: int,
+                 buckets: Optional[Sequence[int]] = None):
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.buckets = tuple(sorted(buckets)) if buckets else None
+        self.queue: Deque[Request] = deque()
+        self._free: List[int] = list(range(max_slots - 1, -1, -1))
+        self.active: Dict[int, ActiveRequest] = {}
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.prompt_len < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if req.prompt_len + 1 > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt_len={req.prompt_len} leaves no "
+                f"decode headroom within max_len={self.max_len}")
+        self.queue.append(req)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+    # -- admission / eviction ---------------------------------------------
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Pop FIFO requests into free slots.  Returns [(slot, request)]."""
+        admitted: List[Tuple[int, Request]] = []
+        while self.queue and self._free:
+            slot = self._free.pop()
+            admitted.append((slot, self.queue.popleft()))
+        return admitted
+
+    def activate(self, state: ActiveRequest) -> None:
+        self.active[state.slot] = state
+
+    def release(self, slot: int) -> ActiveRequest:
+        """Evict the request in ``slot`` and return the slot to the pool."""
+        state = self.active.pop(slot)
+        self._free.append(slot)
+        return state
+
+    # -- bucketing ---------------------------------------------------------
+    def bucket_for(self, prompt_len: int) -> int:
+        """Padded prefill length for a prompt (identity when unbucketed)."""
+        if self.buckets is None:
+            return prompt_len
+        for b in self.buckets:
+            if b >= prompt_len:
+                return min(b, self.max_len)
+        return self.max_len
+
+    def pad_prompt(self, tokens: np.ndarray) -> Tuple[np.ndarray, int]:
+        """Right-pad to the bucket length.  Returns (padded [Tb], last_idx)."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        T0 = tokens.shape[0]
+        Tb = self.bucket_for(T0)
+        if Tb > T0:
+            tokens = np.pad(tokens, (0, Tb - T0))
+        return tokens, T0 - 1
