@@ -17,7 +17,8 @@ def main() -> None:
 
     from benchmarks import (bench_bandwidth, bench_end_to_end,
                             bench_kv_storage, bench_mha_dataflow,
-                            bench_pe_accuracy, bench_roofline, bench_serve)
+                            bench_paged_kv, bench_pe_accuracy,
+                            bench_roofline, bench_serve)
     suite = {
         "table1_pe_accuracy": bench_pe_accuracy,
         "fig8_mha_dataflow": bench_mha_dataflow,
@@ -25,6 +26,7 @@ def main() -> None:
         "kv_storage_25pct": bench_kv_storage,
         "table3_end_to_end": bench_end_to_end,
         "serve_continuous": bench_serve,
+        "paged_kv": bench_paged_kv,
         "roofline": bench_roofline,
     }
     only = set(args.only.split(",")) if args.only else None

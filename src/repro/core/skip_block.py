@@ -257,6 +257,70 @@ def routed_attention_decode(p: Params, x: jnp.ndarray,
     return x, k_cache, v_cache, (k_t, v_t), stats
 
 
+def routed_attention_decode_paged(p: Params, x: jnp.ndarray,
+                                  t: jnp.ndarray,
+                                  kv_prev: Optional[kv_reuse.KVPair],
+                                  positions: jnp.ndarray, cfg: ModelConfig,
+                                  *, paged: Dict, layer
+                                  ) -> Tuple[jnp.ndarray, kv_reuse.KVPair,
+                                             Stats]:
+    """One decode step against the paged entry stream (paper §4.4).
+
+    Instead of a per-layer dense cache, past tokens' KV lives in the shared
+    store-once entry stream; ``paged`` carries the step's gathered view
+    (metadata always, K/V on the jnp path) and this layer selects its valid
+    entries by *effective position* — the history-buffer indirection
+    (repro/kvcache/history.py).  The current token's view ``(k_t, v_t)``
+    rides along explicitly (it is committed to the stream only at the end
+    of the step) and is returned for the caller's commit buffer.
+
+    ``layer``: this layer's index over the attention stack (traced OK)."""
+    from repro.kvcache import history
+
+    B = x.shape[0]
+    t = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t, jnp.int32)), (B,))
+    routed = cfg.skip.enabled and cfg.skip.route_attention
+    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    gate, p_keep = _gate(logits[:, 0] if logits is not None else None,
+                         None, cfg, False, (B,), routed)
+    inner = p["inner"]
+
+    xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+    q = attn_mod.project_q(inner, xn, positions, cfg)
+    k_new, v_new = attn_mod.project_kv(inner, xn, positions, cfg)
+    if routed and cfg.skip.kv_reuse:
+        k_t, v_t = kv_reuse.merge_token_view(kv_prev, k_new, v_new, gate)
+    else:
+        k_t, v_t = k_new, v_new
+
+    eff_pos = history.effective_positions(
+        paged["pos"], paged["l0"], paged["l1"], paged["in_fill"], layer)
+    q_pos = _q_index_positions(positions)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        o = kops.paged_decode_attention(
+            q, paged["k_pages"], paged["v_pages"], paged["block_table"],
+            eff_pos, k_t, v_t, q_positions=q_pos)
+    else:
+        k_cat = jnp.concatenate(
+            [paged["k"], k_t.astype(paged["k"].dtype)], axis=1)
+        v_cat = jnp.concatenate(
+            [paged["v"], v_t.astype(paged["v"].dtype)], axis=1)
+        pos_cat = jnp.concatenate([eff_pos, t[:, None]], axis=1)
+        o = attn_mod.chunked_attention(
+            q, k_cat, v_cat, q_positions=q_pos, causal=True, window=0,
+            chunk=k_cat.shape[1], kv_positions=pos_cat)
+    y = attn_mod.output_proj(inner, o, cfg)
+    if routed:
+        y = y * gate.astype(y.dtype)[:, None, None]
+    x = x + y
+
+    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
+        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    stats["attn_gate"] = gate
+    return x, (k_t, v_t), stats
+
+
 def routed_ssm(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
                rng: Optional[jax.Array], train: bool,
                conv_state=None, ssm_state=None

@@ -1,0 +1,35 @@
+"""Version-compat shims for the distributed APIs that moved across JAX
+releases (the distributed tests run against whatever jax the host has):
+
+* ``shard_map``: ``jax.experimental.shard_map.shard_map(..., check_rep=)``
+  in 0.4.x, promoted to ``jax.shard_map(..., check_vma=)`` later;
+* ``AbstractMesh``: ``AbstractMesh(((name, size), ...))`` in 0.4.x,
+  ``AbstractMesh(axis_sizes, axis_names)`` later.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """Map ``f`` over ``mesh`` shards; ``check`` toggles the replication /
+    varying-manual-axes checker (named check_rep, then check_vma)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
+def abstract_mesh(axes: Sequence[Tuple[str, int]]) -> Any:
+    """AbstractMesh from ((axis_name, size), ...) pairs."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axes))
+    except TypeError:
+        names = tuple(n for n, _ in axes)
+        sizes = tuple(s for _, s in axes)
+        return AbstractMesh(sizes, names)

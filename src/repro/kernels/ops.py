@@ -18,6 +18,7 @@ from repro.kernels.flash_attention import flash_attention_packed
 from repro.kernels.fused_router_rmsnorm import (router_stats_pallas,
                                                 rmsnorm_matmul_pallas)
 from repro.kernels.int4_matmul import int4_matmul_pallas
+from repro.kernels.paged_attention import paged_attention_packed
 
 
 def _interpret() -> bool:
@@ -74,6 +75,57 @@ def decode_attention(q, k, v, *, q_positions, window: int = 0,
     return flash_attention(q, k, v, q_positions=q_positions, causal=True,
                            window=window, kv_valid_len=kv_valid_len,
                            softmax_scale=softmax_scale)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, eff_pos,
+                           k_tok, v_tok, *, q_positions,
+                           softmax_scale: Optional[float] = None
+                           ) -> jnp.ndarray:
+    """Single-token decode against the paged KV store.
+
+    The kernel walks each slot's block table (physical pages resolved via
+    scalar prefetch) with history-buffer masking by effective position and
+    returns raw online-softmax state; the in-flight token's KV — committed
+    to the store only at end-of-step — is folded in here with one more
+    online-softmax update.
+
+    q: [B, 1, Hq, dh]; k/v pages: [P, ps, Hkv, dh]; block_table: [B, J];
+    eff_pos: [B, J·ps]; k_tok/v_tok: [B, 1, Hkv, dh]; q_positions: [B, 1].
+    """
+    B, _, Hq, dh = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    J = block_table.shape[1]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None \
+        else 1.0 / math.sqrt(dh)
+
+    qp = (q.reshape(B, 1, Hkv, G, dh)
+          .transpose(0, 2, 3, 1, 4)
+          .reshape(B * Hkv, G, dh))
+    pos = jnp.broadcast_to(q_positions[:, None, :],
+                           (B, Hkv, G)).reshape(B * Hkv, G)
+    acc, m, l = paged_attention_packed(
+        qp, k_pages, v_pages, block_table.astype(jnp.int32),
+        eff_pos.reshape(B, J, ps), pos.astype(jnp.int32),
+        scale=scale, interpret=_interpret())
+
+    # fold in the current token (always causally valid: key pos == q pos)
+    kt = k_tok.reshape(B, Hkv, dh)
+    kt = jnp.broadcast_to(kt[:, :, None], (B, Hkv, G, dh)).reshape(
+        B * Hkv, G, dh)
+    vt = v_tok.astype(jnp.float32).reshape(B, Hkv, dh)
+    vt = jnp.broadcast_to(vt[:, :, None], (B, Hkv, G, dh)).reshape(
+        B * Hkv, G, dh)
+    s_tok = jnp.einsum("bgd,bgd->bg", qp.astype(jnp.float32) * scale,
+                       kt.astype(jnp.float32))
+    m2 = jnp.maximum(m, s_tok)
+    alpha = jnp.exp(m - m2)
+    p_tok = jnp.exp(s_tok - m2)
+    l2 = l * alpha + p_tok
+    out = (acc * alpha[..., None] + p_tok[..., None] * vt) \
+        / jnp.maximum(l2, 1e-20)[..., None]
+    return (out.reshape(B, Hkv, G, dh)
+            .reshape(B, 1, Hq, dh).astype(q.dtype))
 
 
 # ---------------------------------------------------------------------------

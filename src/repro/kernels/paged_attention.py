@@ -1,0 +1,131 @@
+"""Paged decode-attention Pallas kernel (TPU target; interpret=True on CPU).
+
+Decode attention against the paged KV store (``repro/kvcache/paged.py``):
+the grid's inner dimension walks one slot's *block table* — each step's KV
+tile is a physical page, resolved through the scalar-prefetched table in
+the BlockSpec index_map (the history-buffer indirection: the same physical
+page can appear in several layers' walks).  Masking is by *effective
+position* (``repro/kvcache/history.py``): entries invalid at the querying
+layer carry a sentinel position the causal test can never admit, so the
+pruned-token history is skipped without any per-entry gather.
+
+Online-softmax machinery (running max ``m``, running Σexp ``l`` in VMEM
+scratch) is the same dataflow as ``kernels/flash_attention.py``; this
+kernel returns the *raw* (acc, m, l) triple so the caller can fold in the
+current token's in-flight KV (which is only committed to the store at the
+end of the decode step) with one more online-softmax update.
+
+Layouts: q [BH, R, dh] where BH = B·Hkv and R packs the G = Hq/Hkv grouped
+query heads; k/v pages [P, ps, Hkv, dh]; block_table int32 [B, J];
+eff_pos int32 [B, J, ps]; q_pos int32 [BH, R].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _paged_kernel(bt_ref, qpos_ref, effpos_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale              # [R, dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)                # [ps, dh]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [R, ps]
+
+    kv_pos = effpos_ref[0, 0][None, :]                    # [1, ps]
+    mask = kv_pos <= qpos_ref[0][:, None]                 # [R, ps]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # [R, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    v = v_ref[0, :, 0].astype(jnp.float32)                # [ps, dh]
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        # raw triple — the caller merges the in-flight token and divides
+        o_ref[0] = acc_scr[...]
+        m_ref[0] = m_scr[..., 0]
+        l_ref[0] = l_scr[..., 0]
+
+
+def paged_attention_packed(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, block_table: jnp.ndarray,
+                           eff_pos: jnp.ndarray, q_pos: jnp.ndarray, *,
+                           scale: float, interpret: bool = False):
+    """q: [BH, R, dh]; k/v pages: [P, ps, Hkv, dh]; block_table: [B, J];
+    eff_pos: [B, J, ps]; q_pos: [BH, R] (-1 = padded row).
+
+    Returns the unnormalized online-softmax state over the paged history:
+    (acc [BH, R, dh] f32, m [BH, R] f32, l [BH, R] f32)."""
+    BH, R, dh = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    B, J = block_table.shape
+    assert BH == B * Hkv, (BH, B, Hkv)
+
+    Rp = max(8, R)                       # sublane-friendly row count
+    if Rp != R:
+        q = jnp.pad(q, ((0, 0), (0, Rp - R), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, Rp - R)), constant_values=-1)
+
+    grid = (BH, J)
+    kernel = functools.partial(_paged_kernel, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Rp), lambda b, j, bt: (b, 0)),          # q_pos
+            pl.BlockSpec((1, 1, ps),
+                         lambda b, j, bt: (b // Hkv, j, 0)),         # eff_pos
+            pl.BlockSpec((1, Rp, dh), lambda b, j, bt: (b, 0, 0)),   # q
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda b, j, bt: (bt[b // Hkv, j], 0,
+                                           b % Hkv, 0)),             # k page
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda b, j, bt: (bt[b // Hkv, j], 0,
+                                           b % Hkv, 0)),             # v page
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Rp, dh), lambda b, j, bt: (b, 0, 0)),
+            pl.BlockSpec((1, Rp), lambda b, j, bt: (b, 0)),
+            pl.BlockSpec((1, Rp), lambda b, j, bt: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Rp, 1), jnp.float32),    # m
+            pltpu.VMEM((Rp, 1), jnp.float32),    # l
+            pltpu.VMEM((Rp, dh), jnp.float32),   # acc
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Rp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Rp), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Rp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_table, q_pos, eff_pos, q, k_pages, v_pages)
+    return acc[:, :R], m[:, :R], l[:, :R]

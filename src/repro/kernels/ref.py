@@ -45,6 +45,40 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return o.reshape(B, Tq, Hq, dh).astype(q.dtype)
 
 
+def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, block_table: jnp.ndarray,
+                        eff_pos: jnp.ndarray, k_tok: jnp.ndarray,
+                        v_tok: jnp.ndarray, *, q_positions: jnp.ndarray,
+                        softmax_scale: Optional[float] = None) -> jnp.ndarray:
+    """Paged decode-attention oracle: dense gather of each slot's page
+    chain + the in-flight token, masked by effective position.
+
+    q: [B, 1, Hq, dh]; k/v pages: [P, ps, Hkv, dh]; block_table: [B, J];
+    eff_pos: [B, J·ps] (history-buffer validity, MASKED = int32 max);
+    k_tok/v_tok: [B, 1, Hkv, dh]; q_positions: [B, 1]."""
+    B, _, Hq, dh = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dh)
+    G = Hq // Hkv
+
+    def chain(pages):
+        flat = pages[block_table.reshape(-1)]            # [B·J, ps, Hkv, dh]
+        return flat.reshape(B, -1, Hkv, dh)
+
+    k = jnp.concatenate([chain(k_pages), k_tok.astype(k_pages.dtype)], 1)
+    v = jnp.concatenate([chain(v_pages), v_tok.astype(v_pages.dtype)], 1)
+    pos = jnp.concatenate(
+        [eff_pos, q_positions.astype(jnp.int32)], axis=1)  # [B, E+1]
+    qg = q.reshape(B, 1, Hkv, G, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    mask = pos[:, None, :] <= q_positions[..., None]       # [B, 1, E+1]
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1)[:, None, None, :, None], p, 0.0)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, dh).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # int4 × bf16 matmul
 # ---------------------------------------------------------------------------

@@ -1,2 +1,8 @@
 from repro.kvcache.cache import CompactKVStore, DenseKVStore  # noqa: F401
+from repro.kvcache.history import (HistoryAccounting,  # noqa: F401
+                                   effective_positions, fresh_mask,
+                                   next_fresh_layer)
 from repro.kvcache.layout import TokenWiseLayout, transaction_model  # noqa: F401
+from repro.kvcache.paged import (PageAllocator, PageStats,  # noqa: F401
+                                 can_page, commit_decode, gather_view,
+                                 init_store, pack_prefill)

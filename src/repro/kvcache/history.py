@@ -1,0 +1,137 @@
+"""Cross-layer history-buffer indirection + hit accounting (paper §4.4.2).
+
+The paged store (``repro/kvcache/paged.py``) keeps ONE physical entry per
+(token, executed-layer) pair.  This module owns the *indirection* that
+lets every attention layer read the right entry without an irregular
+cross-layer gather:
+
+* each entry's metadata is its token position ``pos`` and validity
+  interval ``[l0, l1)`` over the attention-layer index — ``l0`` is the
+  layer that wrote it (the token's execution), ``l1`` the token's next
+  execution (or ``n_layers``: still current);
+* attention at layer ``a`` turns metadata into *effective positions*:
+  a valid entry keeps its token position (so the ordinary causal mask
+  admits it), an invalid one is pushed to ``MASKED_POS`` (masked the same
+  way padded KV already is).  Exactly one entry per token is valid at any
+  layer, so masked attention over the full entry stream equals dense
+  attention over per-layer caches.
+
+Host-side ``HistoryAccounting`` measures the buffer's effect from the
+execution-gate log: a *hit* is a (layer, token) read served by an entry
+written at an earlier layer (the on-chip reuse that supplements HBM
+bandwidth in the paper's Fig. 9); the aggregate hit rate equals the
+compact store's storage-saved fraction by construction.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel "position" for invalid entries: the causal mask (kv_pos <= q_pos)
+# can never admit it.  Matches chunked_attention's padding sentinel.
+MASKED_POS = np.iinfo(np.int32).max
+
+
+def fresh_mask(gates: jnp.ndarray, reuse: bool) -> jnp.ndarray:
+    """[nA, ...] execution gates -> bool mask of layers that write a fresh
+    entry.  The first attention layer is the dense base (always fresh);
+    with reuse disabled every layer writes."""
+    g = jnp.asarray(gates).astype(bool)
+    if not reuse:
+        return jnp.ones_like(g)
+    return g.at[0].set(True)
+
+
+def next_fresh_layer(fresh: jnp.ndarray) -> jnp.ndarray:
+    """For each (layer a, ...) the index of the next fresh layer > a, or
+    ``nA`` when none (the entry stays current forever).  This is each
+    written entry's ``l1``; rows where ``fresh`` is False are don't-care
+    (their scatter is dropped)."""
+    nA = fresh.shape[0]
+    lead = jnp.arange(nA, dtype=jnp.int32).reshape(
+        (nA,) + (1,) * (fresh.ndim - 1))
+    idxs = jnp.where(fresh, lead, nA)
+    # suffix minimum, exclusive of the current layer
+    suffix = jax.lax.associative_scan(jnp.minimum, jnp.flip(idxs, 0), axis=0)
+    suffix = jnp.flip(suffix, 0)
+    return jnp.concatenate(
+        [suffix[1:], jnp.full_like(idxs[:1], nA)], axis=0)
+
+
+def effective_positions(pos: jnp.ndarray, l0: jnp.ndarray, l1: jnp.ndarray,
+                        in_fill: jnp.ndarray, layer: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """Entry metadata -> per-layer effective KV positions.
+
+    pos/l0/l1/in_fill: [S, E] gathered entry metadata (logical order);
+    ``layer``: scalar attention-layer index.  Valid entries keep their
+    token position; everything else becomes MASKED_POS."""
+    valid = in_fill & (l0 <= layer) & (layer < l1)
+    return jnp.where(valid, pos, MASKED_POS).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Host-side hit accounting
+# ---------------------------------------------------------------------------
+
+class HistoryAccounting:
+    """Per-layer history-buffer hit rates, fed from the live gate log.
+
+    For each decode step at layer ``a``, attention reads one entry per
+    context token; the read *hits* the history buffer when that token's
+    current entry was written at a layer < a (i.e. the token was pruned at
+    ``a`` — cross-layer invariance serves it on-chip).  ``fresh_count``
+    tracks, per slot and layer, how many context tokens are fresh at that
+    layer, so hits = context − fresh without replaying old gates."""
+
+    def __init__(self, n_layers: int, max_slots: int, reuse: bool = True):
+        self.nA = n_layers
+        self.reuse = reuse
+        self._fresh = np.zeros((max_slots, n_layers), np.int64)
+        self._ctx = np.zeros((max_slots,), np.int64)
+        self.hits = np.zeros((n_layers,), np.int64)
+        self.reads = np.zeros((n_layers,), np.int64)
+
+    def _fresh_of(self, gates: np.ndarray) -> np.ndarray:
+        g = (np.asarray(gates, np.float32) > 0.5)
+        if not self.reuse:
+            return np.ones_like(g)
+        g[0] = True
+        return g
+
+    def on_prefill(self, slot: int, gates: np.ndarray, valid_len: int
+                   ) -> None:
+        """gates: [nA, T] prompt execution gates (may include padding)."""
+        f = self._fresh_of(gates)[:, :valid_len]
+        self._fresh[slot] = f.sum(axis=1)
+        self._ctx[slot] = valid_len
+        # prefill attention at layer a reads a triangular number of
+        # entries; count the final-state reads only (decode is the regime
+        # the paper's buffer targets), i.e. start accounting at decode.
+
+    def on_decode_step(self, slot: int, gates_col: np.ndarray) -> None:
+        """gates_col: [nA] this step's gates for ``slot``.  Reads happen
+        against the pre-step context; then the new token's entries join."""
+        self.reads += self._ctx[slot]
+        self.hits += self._ctx[slot] - self._fresh[slot]
+        f = self._fresh_of(gates_col[:, None])[:, 0]
+        self._fresh[slot] += f
+        self._ctx[slot] += 1
+
+    def on_release(self, slot: int) -> None:
+        self._fresh[slot] = 0
+        self._ctx[slot] = 0
+
+    # -- results ------------------------------------------------------------
+    @property
+    def per_layer_hit_rate(self) -> List[float]:
+        return [float(h / r) if r else 0.0
+                for h, r in zip(self.hits, self.reads)]
+
+    @property
+    def hit_rate(self) -> float:
+        r = int(self.reads.sum())
+        return float(self.hits.sum() / r) if r else 0.0

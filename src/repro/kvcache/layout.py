@@ -23,6 +23,7 @@ class TokenWiseLayout:
     entry_bytes: int = 256 * 2            # one token-layer KV entry
     burst_bytes: int = 512                # AXI-equivalent burst granule
     page_miss_penalty: float = 2.5        # row-buffer thrash multiplier
+    page_size: int = 16                   # entries per KV page (paged store)
 
     def port_of(self, token: int) -> int:
         return token % self.num_ports
@@ -80,6 +81,35 @@ class TokenWiseLayout:
         fresh = sum(1 for r in reads if r["fresh"])
         return (fresh / self.num_ports) * bursts
 
+    # -- page-granular transactions (the paged entry-stream store) --------
+    def _page_walk_rounds(self, n_entries: int,
+                          page_size: int = 0) -> float:
+        """One sequential walk of the compact entry stream: entries pack
+        ``page_size`` per page, each page one full-burst chain in a single
+        port, pages round-robined across ports (no row misses, no
+        conflicts — the stream is append-ordered by construction)."""
+        ps = page_size or self.page_size
+        bursts_per_page = -(-ps * self.entry_bytes // self.burst_bytes)
+        pages = -(-n_entries // ps)
+        return (pages / self.num_ports) * bursts_per_page
+
+    def paged_transactions(self, gates: "np.ndarray", page_size: int = 0,
+                           on_chip_history: bool = True) -> float:
+        """HBM transaction time for decoding against the paged store.
+
+        gates: [L, T] execution mask.  The store holds one entry per
+        (token, executed layer) — ``E = T + Σ_{l>0} gates[l]`` entries.
+        Every layer's attention is a masked walk of the whole stream:
+        without the on-chip history buffer HBM replays the walk L times
+        (page-granular but L·E entry reads); with it the stream is read
+        once and later layers hit on-chip."""
+        L, T = gates.shape
+        fresh = np.asarray(gates, np.float64).copy()
+        fresh[0] = 1.0
+        E = int(T + fresh[1:].sum())
+        walk = self._page_walk_rounds(E, page_size)
+        return walk if on_chip_history else L * walk
+
 
 def transaction_model(gates: np.ndarray, layout: TokenWiseLayout
                       ) -> Dict[str, float]:
@@ -113,5 +143,36 @@ def transaction_model(gates: np.ndarray, layout: TokenWiseLayout
         "invariance_buffer": controller_eff * ideal / max(
             layout.invariance_buffer_transactions(reads) + 0.02 * ideal,
             1e-9),
+        # paged entry-stream store (serve-engine kv_mode="paged"): paging
+        # alone trades bandwidth for memory (each layer re-walks the
+        # stream); the on-chip history buffer reads it once and serves
+        # every later layer's reuse hits locally.
+        "paged_tokenwise": controller_eff * ideal / max(
+            layout.paged_transactions(gates, on_chip_history=False), 1e-9),
+        "paged_history": controller_eff * ideal / max(
+            layout.paged_transactions(gates, on_chip_history=True)
+            + 0.02 * ideal, 1e-9),
     }
     return out
+
+
+def history_hit_accounting(gates: np.ndarray) -> Dict[str, object]:
+    """History-buffer hit accounting from an execution-gate log.
+
+    gates: [L, T].  At layer l each context token costs one entry read;
+    the read *hits* the on-chip history when the token's current entry was
+    written at an earlier layer (gate off ⇒ inherited).  Returns per-layer
+    hit fractions plus the aggregate rate — which equals the compact
+    store's saved fraction by construction."""
+    g = (np.asarray(gates, np.float64) > 0.5)
+    L, T = g.shape
+    fresh = g.copy()
+    fresh[0] = True
+    hits = T - fresh.sum(axis=1)                  # per layer
+    reads = np.full((L,), float(T))
+    return {
+        "per_layer": (hits / reads).tolist(),
+        "hits": float(hits.sum()),
+        "reads": float(reads.sum()),
+        "hit_rate": float(hits.sum() / reads.sum()) if T else 0.0,
+    }

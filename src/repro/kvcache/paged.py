@@ -1,0 +1,362 @@
+"""Paged KV-cache with a proactive pruned-token history buffer (paper §4.4).
+
+The dense slot pool (``serve/engine.py::init_pool``) preallocates
+``max_slots × max_len`` KV rows *per attention layer* — the uniform/static
+layout the paper argues against.  This module replaces it with the paper's
+memory system:
+
+* **Entry stream** — the unit of storage is one *(token, layer)* KV entry,
+  and a token stores an entry only at the attention layers where it
+  actually executed (layer 0 is the dense base).  A pruned token's KV is
+  invariant until it re-executes (cross-layer KV invariance, §2.1 Eq. 2),
+  so one physical entry serves every layer in its validity interval —
+  store-once, reference-many.  Total entries ≈ ``T·(1 + keep·(L−1))``
+  instead of ``T·L``: the compact store's 25.4 % saving, realized in live
+  decode memory.
+
+* **Pages** — entries append token-major into fixed-size pages drawn from
+  a global free list (``PageAllocator``): alloc-on-demand during decode,
+  full release on eviction.  Per-slot *block tables* map logical entry
+  index → physical page, so slots never alias pages.
+
+* **History-buffer indirection** — each entry carries metadata
+  ``(pos, l0, l1)``: the token position and the half-open layer interval
+  ``[l0, l1)`` it is valid for.  Attention at layer *a* reads the whole
+  stream and masks by validity (``repro/kvcache/history.py``), which keeps
+  the HBM access pattern a *sequential page walk* (the high-locality
+  on-chip reuse the paper's URAM buffer provides) instead of an irregular
+  cross-layer gather.
+
+Device-side state (the "store") is a flat dict of arrays; the block
+tables, free list and fill counters are host-side (``PageAllocator``) and
+passed into each jitted step — the host is the FPGA-controller analogue
+that *proactively* guarantees page capacity before a step runs, so the
+jitted step never allocates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.kvcache import history
+
+Store = Dict[str, jnp.ndarray]
+
+
+def can_page(cfg: ModelConfig) -> bool:
+    """Paged mode covers the paper's target stacks: every layer's mixer is
+    global attention (LOCAL ring buffers are already window-bounded and SSM
+    state is O(1) — neither gains from paging), and routing is masked-mode
+    (gather-mode prefill executes the top-capacity set, which the logged
+    argmax gates do not describe, so entry freshness would be wrong)."""
+    all_global = all(k == ATTN for k in cfg.layer_pattern)
+    gather = cfg.skip.enabled and cfg.skip.mode == "gather"
+    return all_global and not gather
+
+
+def reuse_enabled(cfg: ModelConfig) -> bool:
+    """True when entry freshness follows the routing gates (layer 0 dense +
+    executed layers).  Otherwise every layer writes (dense storage)."""
+    return (cfg.skip.enabled and cfg.skip.kv_reuse
+            and cfg.skip.route_attention)
+
+
+def num_attention_layers(cfg: ModelConfig) -> int:
+    return len(cfg.attention_layers)
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PageStats:
+    pages_total: int = 0
+    pages_in_use: int = 0
+    pages_peak: int = 0
+    entries_appended: int = 0        # live compact-store writes
+    entries_dense: int = 0           # what per-layer dense stores would write
+
+
+class PageAllocator:
+    """Free-list page allocator + per-slot block tables (host side).
+
+    ``slot_entry_capacity`` bounds one slot's entry count (worst case:
+    ``max_len × n_attn_layers`` — every token fresh at every layer), fixing
+    the block-table width ``J``.  Pages are allocated on demand as a slot's
+    fill crosses page boundaries and returned to the free list wholesale on
+    eviction; a page is only ever owned by one slot at a time.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, max_slots: int,
+                 slot_entry_capacity: int):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError("num_pages and page_size must be >= 1")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_slots = max_slots
+        self.pages_per_slot = -(-slot_entry_capacity // page_size)
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._chains: Dict[int, List[int]] = {s: [] for s in range(max_slots)}
+        self.block_table = np.zeros((max_slots, self.pages_per_slot),
+                                    np.int32)
+        self.fill = np.zeros((max_slots,), np.int32)
+        self.stats = PageStats(pages_total=num_pages)
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def capacity(self, slot: int) -> int:
+        """Entry capacity currently backed by allocated pages."""
+        return len(self._chains[slot]) * self.page_size
+
+    def pages_for(self, n_entries: int) -> int:
+        return -(-n_entries // self.page_size)
+
+    def max_chain_pages(self) -> int:
+        """Longest allocated page chain — the live width of the stream
+        walk (decode only needs block-table columns up to this)."""
+        return max((len(c) for c in self._chains.values()), default=0)
+
+    def can_reserve(self, slot: int, n_entries: int) -> bool:
+        """Would ``ensure(slot, n_entries)`` succeed right now?"""
+        if n_entries > self.pages_per_slot * self.page_size:
+            return False
+        short = self.pages_for(n_entries) - len(self._chains[slot])
+        return short <= self.free_pages
+
+    # -- mutation -----------------------------------------------------------
+    def ensure(self, slot: int, n_entries: int) -> bool:
+        """Grow ``slot``'s chain until it can hold ``n_entries`` entries.
+        Returns False (no partial allocation) if the free list is short."""
+        if not self.can_reserve(slot, n_entries):
+            return False
+        chain = self._chains[slot]
+        while len(chain) * self.page_size < n_entries:
+            page = self._free.pop()
+            self.block_table[slot, len(chain)] = page
+            chain.append(page)
+        in_use = self.num_pages - len(self._free)
+        self.stats.pages_in_use = in_use
+        self.stats.pages_peak = max(self.stats.pages_peak, in_use)
+        return True
+
+    def append(self, slot: int, n_entries: int, dense_entries: int) -> None:
+        """Record ``n_entries`` committed writes (capacity must already be
+        ensured).  ``dense_entries`` is the per-layer-dense baseline count
+        for the same tokens (savings accounting)."""
+        self.fill[slot] += n_entries
+        if self.fill[slot] > self.capacity(slot):
+            raise RuntimeError(
+                f"slot {slot}: fill {self.fill[slot]} exceeds page capacity "
+                f"{self.capacity(slot)} — ensure() not called proactively")
+        self.stats.entries_appended += n_entries
+        self.stats.entries_dense += dense_entries
+
+    def release(self, slot: int) -> int:
+        """Evict: return every page of ``slot`` to the free list."""
+        chain = self._chains[slot]
+        n = len(chain)
+        self._free.extend(reversed(chain))
+        chain.clear()
+        self.block_table[slot] = 0
+        self.fill[slot] = 0
+        self.stats.pages_in_use = self.num_pages - len(self._free)
+        return n
+
+    @property
+    def saved_fraction(self) -> float:
+        """Live compact-store saving (matches CompactKVStore.saved_fraction
+        replayed over the same gate log)."""
+        if not self.stats.entries_dense:
+            return 0.0
+        return 1.0 - self.stats.entries_appended / self.stats.entries_dense
+
+
+# ---------------------------------------------------------------------------
+# Device-side store
+# ---------------------------------------------------------------------------
+
+def init_store(cfg: ModelConfig, num_pages: int, page_size: int,
+               dtype=None) -> Store:
+    """Unified page pool shared by every slot and every attention layer."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    Hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    P, ps = num_pages, page_size
+    return {
+        "k_pages": jnp.zeros((P, ps, Hkv, dh), dt),
+        "v_pages": jnp.zeros((P, ps, Hkv, dh), dt),
+        # per-entry history metadata: token position + validity [l0, l1)
+        "pos_pages": jnp.full((P, ps), history.MASKED_POS, jnp.int32),
+        "l0_pages": jnp.zeros((P, ps), jnp.int32),
+        "l1_pages": jnp.zeros((P, ps), jnp.int32),
+    }
+
+
+def store_bytes(store: Store, data_only: bool = True) -> int:
+    keys = ("k_pages", "v_pages") if data_only else tuple(store)
+    return sum(store[k].size * store[k].dtype.itemsize for k in keys)
+
+
+def gather_view(store: Store, block_table: jnp.ndarray,
+                with_kv: bool = True) -> Dict[str, jnp.ndarray]:
+    """Resolve each slot's page chain into logical entry order.
+
+    block_table: [S, J] int32.  Returns arrays of shape [S, J·ps(, ...)]
+    — the per-step read view (metadata always; K/V only on the jnp path,
+    the Pallas kernel walks the block table itself)."""
+    S, J = block_table.shape
+    ps = store["pos_pages"].shape[1]
+
+    def take(leaf):
+        return jnp.take(leaf, block_table.reshape(-1), axis=0).reshape(
+            (S, J * ps) + leaf.shape[2:])
+
+    out = {"pos": take(store["pos_pages"]),
+           "l0": take(store["l0_pages"]),
+           "l1": take(store["l1_pages"])}
+    if with_kv:
+        out["k"] = take(store["k_pages"])
+        out["v"] = take(store["v_pages"])
+    return out
+
+
+def _flat_targets(block_table: jnp.ndarray, e: jnp.ndarray,
+                  valid: jnp.ndarray, page_size: int,
+                  num_pages: int) -> jnp.ndarray:
+    """Logical per-slot entry index -> flat physical index into the pools
+    (out-of-range sentinel where invalid; scatters use mode='drop').
+    block_table: [S, J]; e, valid: [S, N] (slot-major)."""
+    J = block_table.shape[1]
+    j = jnp.clip(e // page_size, 0, J - 1)
+    pages = jnp.take_along_axis(block_table, j, axis=1)          # [S, N]
+    phys = pages * page_size + e % page_size
+    return jnp.where(valid, phys, num_pages * page_size)
+
+
+def _scatter(store: Store, idx: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+             pos: jnp.ndarray, l0: jnp.ndarray, l1: jnp.ndarray) -> Store:
+    """Write entries at flat physical indices (OOB indices dropped)."""
+    P, ps, Hkv, dh = store["k_pages"].shape
+    flat = idx.reshape(-1)
+
+    def put(pages, vals):
+        out = pages.reshape((P * ps,) + pages.shape[2:]).at[flat].set(
+            vals.reshape((-1,) + pages.shape[2:]), mode="drop")
+        return out.reshape(pages.shape)
+
+    return {
+        "k_pages": put(store["k_pages"], k.astype(store["k_pages"].dtype)),
+        "v_pages": put(store["v_pages"], v.astype(store["v_pages"].dtype)),
+        "pos_pages": put(store["pos_pages"], pos),
+        "l0_pages": put(store["l0_pages"], l0),
+        "l1_pages": put(store["l1_pages"], l1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Prefill packing (one slot)
+# ---------------------------------------------------------------------------
+
+def prefill_views_from_cache(cache: Dict, cfg: ModelConfig) -> jnp.ndarray:
+    """Stack the prefill cache's per-layer KV views into stack order.
+
+    cache: the pytree ``prefill`` collects (batch 1, possibly right-padded
+    prompt).  Returns (k_views, v_views): [nA, T, Hkv, dh]."""
+    def stage_kv(stage, lead):
+        ks, vs = [], []
+        for k_pos in range(cfg.stage_len):
+            entry = stage[f"pos{k_pos}"]
+            ks.append(entry["k"])
+            vs.append(entry["v"])
+        # each leaf: [1, T, H, d] (stage0) or [S-1, 1, T, H, d] (stages)
+        k = jnp.stack(ks, axis=1 if lead else 0)
+        v = jnp.stack(vs, axis=1 if lead else 0)
+        return k, v
+
+    k0, v0 = stage_kv(cache["stage0"], lead=False)      # [nAs, 1, T, H, d]
+    ks, vs = [k0[:, 0]], [v0[:, 0]]
+    if cfg.num_stages > 1:
+        kr, vr = stage_kv(cache["stages"], lead=True)   # [S-1, nAs, 1, T,..]
+        ks.append(kr.reshape((-1,) + kr.shape[2:])[:, 0])
+        vs.append(vr.reshape((-1,) + vr.shape[2:])[:, 0])
+    return jnp.concatenate(ks, 0), jnp.concatenate(vs, 0)
+
+
+def pack_prefill(store: Store, cache: Dict, gates: jnp.ndarray,
+                 valid_len: jnp.ndarray, block_table: jnp.ndarray,
+                 cfg: ModelConfig) -> Store:
+    """Scatter one prefilled prompt's compact entries into its pages.
+
+    gates: [nA, T] execution gates (T may include right-padding; tokens at
+    index >= valid_len are dropped).  Entries are token-major — token t's
+    fresh layers are contiguous — so decode appends simply continue the
+    stream.  Freshness: layer 0 dense + gated layers (or every layer when
+    reuse is disabled)."""
+    k_views, v_views = prefill_views_from_cache(cache, cfg)
+    nA, T = gates.shape
+    # the cache may carry decode headroom (pad_to); entries only exist for
+    # the gate-logged positions
+    k_views = k_views[:, :T]
+    v_views = v_views[:, :T]
+    ps = store["pos_pages"].shape[1]
+    P = store["pos_pages"].shape[0]
+
+    fresh = history.fresh_mask(gates, reuse_enabled(cfg))       # [nA, T]
+    fresh &= (jnp.arange(T)[None, :] < valid_len)
+    freshT = fresh.T                                            # [T, nA]
+    e = (jnp.cumsum(freshT.reshape(-1).astype(jnp.int32)) -
+         freshT.reshape(-1)).reshape(T, nA)                     # excl. cumsum
+    l1 = history.next_fresh_layer(fresh).T                      # [T, nA]
+
+    idx = _flat_targets(block_table[None], e.reshape(1, T * nA),
+                        freshT.reshape(1, T * nA), ps, P)       # [1, T·nA]
+    idx = idx.reshape(T, nA)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None], (T, nA))
+    l0 = jnp.broadcast_to(jnp.arange(nA, dtype=jnp.int32)[None, :], (T, nA))
+    return _scatter(store, idx,
+                    k_views.swapaxes(0, 1), v_views.swapaxes(0, 1),
+                    pos, l0, l1)
+
+
+def prefill_entry_count(gates: np.ndarray, valid_len: int,
+                        reuse: bool) -> int:
+    """Host-side mirror of ``pack_prefill``'s entry count."""
+    g = np.asarray(gates, np.float32)[:, :valid_len]
+    if not reuse:
+        return g.shape[0] * valid_len
+    return int(valid_len + g[1:].sum())
+
+
+# ---------------------------------------------------------------------------
+# Decode commit (all slots, one token each)
+# ---------------------------------------------------------------------------
+
+def commit_decode(store: Store, buf_k: jnp.ndarray, buf_v: jnp.ndarray,
+                  gates: jnp.ndarray, t: jnp.ndarray,
+                  block_table: jnp.ndarray, fill: jnp.ndarray,
+                  active: jnp.ndarray, cfg: ModelConfig) -> Store:
+    """Append this step's fresh entries for every active slot.
+
+    buf_k/buf_v: [nA, S, Hkv, dh] — each attention layer's token view
+    (fresh or inherited) collected during the stack pass; only fresh
+    layers' views are written.  gates: [nA, S]; t/fill/active: [S]."""
+    nA, S = gates.shape
+    ps = store["pos_pages"].shape[1]
+    P = store["pos_pages"].shape[0]
+
+    fresh = history.fresh_mask(gates, reuse_enabled(cfg))       # [nA, S]
+    fresh &= active[None, :]
+    e = fill[None, :] + jnp.cumsum(fresh.astype(jnp.int32), 0) - fresh
+    l1 = history.next_fresh_layer(fresh)                        # [nA, S]
+    idx = _flat_targets(block_table, e.swapaxes(0, 1),
+                        fresh.swapaxes(0, 1), ps, P).swapaxes(0, 1)
+    pos = jnp.broadcast_to(t[None, :], (nA, S))
+    l0 = jnp.broadcast_to(jnp.arange(nA, dtype=jnp.int32)[:, None], (nA, S))
+    return _scatter(store, idx, buf_k, buf_v, pos, l0, l1)

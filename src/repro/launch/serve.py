@@ -26,6 +26,10 @@ def main() -> None:
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching over a --batch-slot KV pool "
                          "(mixed prompt lengths; see docs/serving.md)")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="paged KV store + history buffer instead of the "
+                         "dense slot pool (see docs/kvcache.md)")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -47,9 +51,11 @@ def main() -> None:
     rng = np.random.default_rng(0)
     max_len = args.prompt_len + args.new_tokens
     if args.continuous:
-        eng = ContinuousBatchingEngine(cfg, params, max_slots=args.batch,
-                                       max_len=max_len,
-                                       temperature=args.temperature)
+        eng = ContinuousBatchingEngine(
+            cfg, params, max_slots=args.batch, max_len=max_len,
+            temperature=args.temperature,
+            kv_mode="paged" if args.paged_kv else "dense",
+            page_size=args.page_size)
         # mixed-length synthetic traffic: 2x oversubscribed slots
         for _ in range(2 * args.batch):
             ln = int(rng.integers(max(args.prompt_len // 4, 1),
@@ -62,6 +68,12 @@ def main() -> None:
               f"decode: {s.decode_tok_per_s:.1f} tok/s | "
               f"requests: {s.requests_completed} | "
               f"KV storage saved≈{s.kv_saved_fraction:.1%} (measured)")
+        if s.kv_mode == "paged":
+            print(f"paged KV: peak {s.pages_peak}/{s.pages_total} pages "
+                  f"(×{s.page_size} entries) | live entry "
+                  f"saving {s.kv_entries_saved_fraction:.1%} | history "
+                  f"hit rate {s.history_hit_rate:.1%} | "
+                  f"preemptions {s.preemptions}")
         for uid, r in sorted(out["results"].items()):
             print(f"  req {uid}: T0={r.prompt_len} +{r.decode_tokens} "
                   f"TTFT {r.ttft_s*1e3:.1f}ms ({r.finish_reason})")

@@ -87,6 +87,7 @@ def _apply_stack(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
     if cfg.remat:
         stage0_fn = jax.checkpoint(stage0_fn)
     x, view, stats, cache0 = stage0_fn(stack["stage0"], x)
+    gates = stats.pop("attn_gate", None)    # [nA_stage, B, T] or None
     cache: Optional[Dict] = {"stage0": cache0} if collect_cache else None
 
     if S > 1:
@@ -104,32 +105,45 @@ def _apply_stack(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
                 sp, k = xs, None
             x, view, s, c = transformer.stage_forward(
                 sp, x, view, positions, cfg, k, train, collect_cache, False)
+            g = s.pop("attn_gate", None)
             if view is not None:
                 view = (hint(view[0], "kv_view"), hint(view[1], "kv_view"))
-            return (hint(x, "residual"), view), (s, c)
+            return (hint(x, "residual"), view), (s, c, g)
 
         if cfg.remat:
             body = jax.checkpoint(body)
         if cfg.scan_layers:
             xs = (stack["stages"], keys) if keys is not None else stack["stages"]
-            (x, view), (s_scan, c_scan) = jax.lax.scan(body, (x, view), xs)
+            (x, view), (s_scan, c_scan, g_scan) = jax.lax.scan(
+                body, (x, view), xs)
             stats = jax.tree_util.tree_map(lambda a, b: a + b.sum(axis=0),
                                            stats, s_scan)
             if collect_cache:
                 cache["stages"] = c_scan
+            if gates is not None:
+                gates = jnp.concatenate([gates[None], g_scan], axis=0)
         else:
             # unrolled (dry-run accounting mode: XLA cost_analysis does not
             # multiply while-loop bodies by trip count)
-            c_list = []
+            c_list, g_list = [], []
             for i in range(S - 1):
                 sp = jax.tree_util.tree_map(lambda l: l[i], stack["stages"])
                 xs = (sp, keys[i]) if keys is not None else sp
-                (x, view), (s, c) = body((x, view), xs)
+                (x, view), (s, c, g) = body((x, view), xs)
                 stats = jax.tree_util.tree_map(lambda a, b: a + b, stats, s)
                 c_list.append(c)
+                g_list.append(g)
             if collect_cache:
                 cache["stages"] = jax.tree_util.tree_map(
                     lambda *ls: jnp.stack(ls), *c_list)
+            if gates is not None:
+                gates = jnp.concatenate(
+                    [gates[None]] + [g[None] for g in g_list], axis=0)
+        if gates is not None:
+            # [S, nA_stage, B, T] -> [L_attn, B, T] in stack order
+            gates = gates.reshape((-1,) + gates.shape[-2:])
+    if gates is not None:
+        stats["attn_gate"] = gates
     return x, stats, cache
 
 
@@ -356,3 +370,96 @@ def decode_step(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
     x = layers.norm_apply(params["final_norm"], x, cfg)
     logits = layers.unembed(params["embed"], params.get("lm_head"), x, cfg)
     return logits[:, 0], new_cache, stats
+
+
+def paged_decode_step(params: Params, store: Dict,
+                      batch: Dict[str, jnp.ndarray], t: jnp.ndarray,
+                      block_table: jnp.ndarray, fill: jnp.ndarray,
+                      cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """One token for every slot against the paged KV store.
+
+    The dense-pool twin of ``decode_step``: past tokens' KV lives in the
+    shared store-once entry stream (``repro/kvcache/paged.py``) instead of
+    per-layer ``[B, Tmax]`` caches.  ``block_table`` [B, J] and ``fill``
+    [B] come from the host-side ``PageAllocator`` (which has proactively
+    guaranteed page capacity for this step's ≤ n_attn_layers appends).
+    Slots with ``fill == 0`` are inactive: they decode garbage but commit
+    nothing.  Returns (logits [B, V], new store, stats) with
+    ``stats['attn_gate']`` as in ``decode_step``."""
+    from repro.kvcache import paged as paged_mod
+
+    assert paged_mod.can_page(cfg), f"{cfg.name}: not a pageable stack"
+    if cfg.frontend == "token":
+        B = batch["tokens"].shape[0]
+    else:
+        B = batch["embeds"].shape[0]
+    t = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t, jnp.int32)), (B,))
+    pos = t[:, None]
+    if cfg.pos_embedding == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, B, 1))
+    x = _embed_inputs(params, batch, pos, cfg)
+
+    # resolve the page chains once per step (the store is frozen until the
+    # end-of-step commit; the current token rides along as an explicit
+    # (k_t, v_t) pair inside each layer)
+    view = paged_mod.gather_view(store, block_table,
+                                 with_kv=not cfg.use_kernels)
+    E = view["pos"].shape[1]
+    paged_ctx = dict(view)
+    paged_ctx["in_fill"] = jnp.arange(E)[None, :] < fill[:, None]
+    if cfg.use_kernels:
+        paged_ctx["k_pages"] = store["k_pages"]
+        paged_ctx["v_pages"] = store["v_pages"]
+        paged_ctx["block_table"] = block_table
+
+    stack = params["stack"]
+    nA_stage = sum(1 for k in range(cfg.stage_len)
+                   if cfg.block_kind(k) != MAMBA)
+    x, kv_prev, s0 = transformer.stage_decode_paged(
+        stack["stage0"], x, None, t, pos, cfg, paged_ctx,
+        jnp.int32(0))
+    gates = s0.pop("attn_gate")
+    buf_k, buf_v = s0.pop("kv_token")
+    stats = s0
+
+    if cfg.num_stages > 1:
+        def body(carry, xs):
+            x, kv_prev = carry
+            sp, si = xs
+            x, kv_prev, s = transformer.stage_decode_paged(
+                sp, x, kv_prev, t, pos, cfg, paged_ctx, si * nA_stage)
+            g = s.pop("attn_gate")
+            kt = s.pop("kv_token")
+            return (x, kv_prev), (s, g, kt)
+
+        idxs = jnp.arange(1, cfg.num_stages, dtype=jnp.int32)
+        if cfg.scan_layers:
+            (x, kv_prev), (s_scan, g_scan, kt_scan) = jax.lax.scan(
+                body, (x, kv_prev), (stack["stages"], idxs))
+            stats = jax.tree_util.tree_map(lambda a, b: a + b.sum(axis=0),
+                                           stats, s_scan)
+            gates = jnp.concatenate([gates[None], g_scan], axis=0)
+            buf_k = jnp.concatenate([buf_k[None], kt_scan[0]], axis=0)
+            buf_v = jnp.concatenate([buf_v[None], kt_scan[1]], axis=0)
+        else:
+            g_list, k_list, v_list = [], [], []
+            for i in range(cfg.num_stages - 1):
+                sp = jax.tree_util.tree_map(lambda l: l[i], stack["stages"])
+                (x, kv_prev), (s, g, kt) = body((x, kv_prev), (sp, idxs[i]))
+                stats = jax.tree_util.tree_map(lambda a, b: a + b, stats, s)
+                g_list.append(g[None])
+                k_list.append(kt[0][None])
+                v_list.append(kt[1][None])
+            gates = jnp.concatenate([gates[None]] + g_list, axis=0)
+            buf_k = jnp.concatenate([buf_k[None]] + k_list, axis=0)
+            buf_v = jnp.concatenate([buf_v[None]] + v_list, axis=0)
+        gates = gates.reshape(-1, B)
+        buf_k = buf_k.reshape((-1,) + buf_k.shape[-3:])
+        buf_v = buf_v.reshape((-1,) + buf_v.shape[-3:])
+
+    store = paged_mod.commit_decode(store, buf_k, buf_v, gates, t,
+                                    block_table, fill, fill > 0, cfg)
+    stats["attn_gate"] = gates
+    x = layers.norm_apply(params["final_norm"], x, cfg)
+    logits = layers.unembed(params["embed"], params.get("lm_head"), x, cfg)
+    return logits[:, 0], store, stats

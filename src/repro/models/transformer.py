@@ -110,9 +110,12 @@ def stage_forward(stage_params: Params, x: jnp.ndarray,
                   cfg: ModelConfig, rng: Optional[jax.Array], train: bool,
                   collect_cache: bool, is_stage0: bool
                   ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict, Dict]:
-    """Apply one super-block.  Returns (x, view, stats, cache)."""
+    """Apply one super-block.  Returns (x, view, stats, cache); stats
+    carries ``attn_gate`` [n_attn_in_stage, B, T] — the per-layer execution
+    gates (the paged KV engine packs prefill entries from them)."""
     stats = _ZERO_STATS()
     cache: Dict[str, Any] = {}
+    gates: List[jnp.ndarray] = []
     T = x.shape[1]
     for k in range(cfg.stage_len):
         bp = stage_params[f"pos{k}"]
@@ -136,6 +139,7 @@ def stage_forward(stage_params: Params, x: jnp.ndarray,
             x, view, s = skip_block.routed_attention(
                 bp["mixer"], x, view, positions, cfg, rng=r_mix, train=train,
                 window=window)
+            gates.append(s["attn_gate"])
             stats = _acc_stats(stats, s, cfg.skip.route_attention)
             if collect_cache:
                 if kind == LOCAL and cfg.window_size and T > cfg.window_size:
@@ -150,6 +154,8 @@ def stage_forward(stage_params: Params, x: jnp.ndarray,
                 bp["ffn"], x, cfg, inner_fn=_ffn_inner(cfg, is_moe),
                 rng=r_ffn, train=train)
             stats = _acc_stats(stats, s, cfg.skip.route_mlp)
+    if gates:
+        stats["attn_gate"] = jnp.stack(gates)
     return x, view, stats, cache
 
 
@@ -224,6 +230,44 @@ def stage_decode(stage_params: Params, cache: Dict, x: jnp.ndarray,
     if gates:
         stats["attn_gate"] = jnp.stack(gates)
     return x, kv_prev, new_cache, stats
+
+
+def stage_decode_paged(stage_params: Params, x: jnp.ndarray,
+                       kv_prev: Optional[Tuple], t: jnp.ndarray,
+                       positions: jnp.ndarray, cfg: ModelConfig,
+                       paged: Dict, a_base: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict]:
+    """One super-block against the paged KV store (decode, one token per
+    sequence).  Requires ``kvcache.paged.can_page(cfg)`` — every mixer is
+    global attention, so there is no per-stage dense cache: reads resolve
+    through the shared entry stream in ``paged`` and writes are collected
+    into per-layer token views the caller commits once per step.
+
+    ``a_base``: attention-layer index of this stage's first layer (traced).
+    Returns (x, kv_prev, stats) with stats['attn_gate'] [nA_stage, B] and
+    stats['kv_token'] = (k_t, v_t) [nA_stage, B, Hkv, dh] stacks."""
+    stats = _ZERO_STATS()
+    gates: List[jnp.ndarray] = []
+    k_toks: List[jnp.ndarray] = []
+    v_toks: List[jnp.ndarray] = []
+    for k in range(cfg.stage_len):
+        bp = stage_params[f"pos{k}"]
+        kind = cfg.block_kind(k)
+        assert kind == ATTN, "paged decode requires an all-global-attn stack"
+        x, kv_prev, s = skip_block.routed_attention_decode_paged(
+            bp["mixer"], x, t, kv_prev, positions, cfg,
+            paged=paged, layer=a_base + len(gates))
+        gates.append(s.pop("attn_gate"))
+        k_toks.append(kv_prev[0][:, 0])
+        v_toks.append(kv_prev[1][:, 0])
+        stats = _acc_stats(stats, s, cfg.skip.route_attention)
+        if "ffn" in bp:
+            x, s = skip_block.routed_mlp_decode(
+                bp["ffn"], x, cfg, inner_fn=_ffn_inner(cfg, cfg.is_moe_layer(k)))
+            stats = _acc_stats(stats, s, cfg.skip.route_mlp)
+    stats["attn_gate"] = jnp.stack(gates)
+    stats["kv_token"] = (jnp.stack(k_toks), jnp.stack(v_toks))
+    return x, kv_prev, stats
 
 
 def _ring_attention_decode(p: Params, x, k_ring, v_ring, t, kv_prev,

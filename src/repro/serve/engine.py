@@ -32,6 +32,8 @@ import numpy as np
 
 from repro.configs.base import LOCAL, ModelConfig
 from repro.core import kv_reuse
+from repro.kvcache import history as history_mod
+from repro.kvcache import paged as paged_mod
 from repro.models import model as model_lib
 from repro.serve.sampling import sample
 from repro.serve.scheduler import (ActiveRequest, Request, Scheduler,
@@ -48,10 +50,29 @@ class ServeStats:
     kv_saved_fraction: float = 0.0        # measured from logged gates
     kv_saved_analytic: float = 0.0        # configured-keep-rate estimate
     requests_completed: int = 0
+    # -- paged-KV engine mode (kv_mode == "paged") -------------------------
+    kv_mode: str = "dense"
+    page_size: int = 0
+    pages_total: int = 0
+    pages_peak: int = 0                   # peak pages in use (live footprint)
+    preemptions: int = 0                  # OOM-safe mid-decode evictions
+    kv_entries_stored: int = 0            # live compact-store writes
+    kv_entries_dense: int = 0             # per-layer-dense baseline writes
+    history_hit_rate: float = 0.0         # reads served by the history buf
+    history_hits_per_layer: List[float] = dataclasses.field(
+        default_factory=list)
 
     @property
     def decode_tok_per_s(self) -> float:
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+    @property
+    def kv_entries_saved_fraction(self) -> float:
+        """Live storage saving of the paged history buffer (matches the
+        CompactKVStore accounting replayed over the same gates)."""
+        if not self.kv_entries_dense:
+            return 0.0
+        return 1.0 - self.kv_entries_stored / self.kv_entries_dense
 
 
 @dataclasses.dataclass
@@ -219,12 +240,21 @@ class ContinuousBatchingEngine:
 
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
                  max_len: int = 512, temperature: float = 0.0,
-                 prefill_buckets: Optional[Sequence[int]] = None):
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 kv_mode: str = "dense", page_size: int = 16,
+                 num_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.temperature = temperature
+        if kv_mode not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_mode {kv_mode!r}")
+        if kv_mode == "paged" and not paged_mod.can_page(cfg):
+            raise ValueError(
+                f"{cfg.name}: paged KV requires an all-global-attention "
+                "stack with masked-mode routing — use kv_mode='dense'")
+        self.kv_mode = kv_mode
         if prefill_buckets is not None and not can_bucket(cfg):
             raise ValueError(
                 f"{cfg.name}: prefill bucketing pads prompts, which corrupts "
@@ -240,6 +270,27 @@ class ContinuousBatchingEngine:
                                         pad_to=max_len))
         self._insert = jax.jit(partial(pool_insert, cfg=cfg),
                                donate_argnums=(0,))
+        if kv_mode == "paged":
+            self.n_attn = paged_mod.num_attention_layers(cfg)
+            self.page_size = page_size
+            # default pool: the dense pool's worst case (every token fresh
+            # at every layer) — alloc-on-demand still keeps the *live*
+            # footprint far below it; size it down to see backpressure.
+            cap = max_len * self.n_attn
+            self.num_pages = (num_pages if num_pages is not None
+                              else max_slots * -(-cap // page_size))
+            self.allocator = paged_mod.PageAllocator(
+                self.num_pages, page_size, max_slots,
+                slot_entry_capacity=cap)
+            # paged prefill keeps the exact (bucketed) length — pages
+            # replace the pool's max_len padding
+            self._prefill_paged = jax.jit(partial(model_lib.prefill,
+                                                  cfg=cfg))
+            self._pack = jax.jit(partial(paged_mod.pack_prefill, cfg=cfg),
+                                 donate_argnums=(0,))
+            self._decode_paged = jax.jit(
+                partial(model_lib.paged_decode_step, cfg=cfg),
+                donate_argnums=(1,))
         self._uid = 0
 
     # -- request intake ----------------------------------------------------
@@ -248,17 +299,111 @@ class ContinuousBatchingEngine:
         """Queue one prompt; returns its uid."""
         uid = self._uid
         self._uid += 1
-        self.scheduler.submit(Request(uid=uid,
-                                      tokens=np.asarray(tokens, np.int32),
-                                      max_new_tokens=max_new_tokens,
-                                      stop_token=stop_token))
+        req = Request(uid=uid, tokens=np.asarray(tokens, np.int32),
+                      max_new_tokens=max_new_tokens, stop_token=stop_token)
+        if self.kv_mode == "paged":
+            # must cover both the lifetime worst case AND the admission
+            # gate's requirement (prompt + one step of headroom) — a
+            # request _can_place can never pass would park the queue
+            # forever once accepted
+            worst = max(self._worst_case_entries(req),
+                        (req.prompt_len + 1) * self.n_attn)
+            if self.allocator.pages_for(worst) > self.num_pages:
+                raise ValueError(
+                    f"request {uid}: worst-case KV ({worst} entries) "
+                    f"exceeds the page pool ({self.num_pages} pages × "
+                    f"{self.page_size}) — OOM-safe admission impossible")
+        self.scheduler.submit(req)
         return uid
+
+    # -- paged-mode memory policy -------------------------------------------
+    def _worst_case_entries(self, req: Request) -> int:
+        """Upper bound on one request's lifetime entry count: every stored
+        token fresh at every attention layer (the last generated token is
+        emitted but never fed, so it stores nothing)."""
+        toks = min(self.max_len, req.prompt_len + req.max_new_tokens - 1)
+        return toks * self.n_attn
+
+    def _can_place(self, req: Request) -> bool:
+        """Admission gate: enough *free pages* for the prompt's worst-case
+        entries plus one decode step of headroom.  The run loop reserves
+        every resident's next-step headroom *before* admission, so the
+        free list seen here is what is genuinely spare — a newcomer is
+        never admitted into pages the residents are about to need (which
+        would just get it preempted back, throwing its prefill away).
+        (Admission allocates only the measured entries afterwards, so this
+        never over-commits.)"""
+        need = req.prompt_len * self.n_attn + self.n_attn
+        pages = self.allocator.pages_for(need)
+        return (pages <= self.allocator.pages_per_slot
+                and pages <= self.allocator.free_pages)
 
     # -- main loop ---------------------------------------------------------
     def run(self, rng: Optional[jax.Array] = None
             ) -> Dict[str, object]:
         """Drain the queue.  Returns {'results': {uid: RequestResult},
         'stats': ServeStats}."""
+        if self.kv_mode == "paged":
+            return self._run_paged(rng)
+        return self._run_dense(rng)
+
+    # -- run-loop bookkeeping shared by both KV modes ----------------------
+    @staticmethod
+    def _make_result(st: ActiveRequest, reason: str) -> RequestResult:
+        st.finish_reason = reason
+        return RequestResult(
+            uid=st.req.uid,
+            tokens=np.asarray(st.out_tokens, np.int32),
+            prompt_len=st.req.prompt_len,
+            ttft_s=st.first_token_s - st.submit_s,
+            decode_s=st.decode_s,
+            finish_reason=reason,
+            kv_stored=st.kv_stored,
+            kv_dense=st.kv_dense,
+        )
+
+    def _activate_prefilled(self, req: Request, slot: int, tok: int,
+                            t_run: float, now: float, stats: ServeStats):
+        """Register a freshly prefilled request.  Returns (state, reason):
+        reason is "stop"/"length" when the first token already ends the
+        request, else None."""
+        stats.prefill_tokens += req.prompt_len
+        stats.decode_tokens += 1
+        st = ActiveRequest(req=req, slot=slot, pos=req.prompt_len,
+                           next_token=tok, out_tokens=[tok],
+                           submit_s=t_run, first_token_s=now)
+        self.scheduler.activate(st)
+        if req.stop_token is not None and tok == req.stop_token:
+            return st, "stop"
+        if req.max_new_tokens <= 1:
+            return st, "length"
+        return st, None
+
+    def _advance_slot(self, st: ActiveRequest, tok: int,
+                      g: Optional[np.ndarray], step_s: float,
+                      stats: ServeStats, measure: bool,
+                      n_layers: int) -> Optional[str]:
+        """Post-decode bookkeeping for one resident (the fed token's KV
+        was just written at st.pos).  Returns the finish reason or None."""
+        st.decode_s += step_s
+        if g is not None:
+            st.kv_dense += n_layers
+            st.kv_stored += (1 + int(g[1:].sum()) if measure else n_layers)
+        st.pos += 1
+        st.out_tokens.append(tok)
+        st.next_token = tok
+        stats.decode_tokens += 1
+        if st.req.stop_token is not None and tok == st.req.stop_token:
+            return "stop"
+        if len(st.out_tokens) >= st.req.max_new_tokens:
+            return "length"
+        if st.pos >= self.max_len:
+            return "max_len"
+        return None
+
+    def _run_dense(self, rng: Optional[jax.Array] = None
+                   ) -> Dict[str, object]:
+        """Fixed ``max_slots × max_len`` pool (the original engine mode)."""
         cfg = self.cfg
         sched = self.scheduler
         rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -275,17 +420,7 @@ class ContinuousBatchingEngine:
 
         def finish(slot: int, reason: str) -> None:
             st = sched.release(slot)
-            st.finish_reason = reason
-            results[st.req.uid] = RequestResult(
-                uid=st.req.uid,
-                tokens=np.asarray(st.out_tokens, np.int32),
-                prompt_len=st.req.prompt_len,
-                ttft_s=st.first_token_s - st.submit_s,
-                decode_s=st.decode_s,
-                finish_reason=reason,
-                kv_stored=st.kv_stored,
-                kv_dense=st.kv_dense,
-            )
+            results[st.req.uid] = self._make_result(st, reason)
             stats.requests_completed += 1
 
         while sched.has_work():
@@ -301,16 +436,10 @@ class ContinuousBatchingEngine:
                 tok = int(np.asarray(sample(logits, sub, self.temperature))[0])
                 now = time.time()
                 stats.prefill_s += now - t0
-                stats.prefill_tokens += req.prompt_len
-                stats.decode_tokens += 1
-                st = ActiveRequest(req=req, slot=slot, pos=req.prompt_len,
-                                   next_token=tok, out_tokens=[tok],
-                                   submit_s=t_run, first_token_s=now)
-                sched.activate(st)
-                if req.stop_token is not None and tok == req.stop_token:
-                    finish(slot, "stop")
-                elif req.max_new_tokens <= 1:
-                    finish(slot, "length")
+                _, reason = self._activate_prefilled(req, slot, tok,
+                                                     t_run, now, stats)
+                if reason:
+                    finish(slot, reason)
 
             if not sched.active:
                 continue
@@ -332,25 +461,14 @@ class ContinuousBatchingEngine:
 
             for slot in list(sched.active):
                 st = sched.active[slot]
-                st.decode_s += step_s
-                # the fed token's KV was just written at st.pos
-                if gates is not None:
-                    keep_acc += float(gates[:, slot].sum())
+                g = gates[:, slot] if gates is not None else None
+                if g is not None:
+                    keep_acc += float(g.sum())
                     keep_n += L_attn
-                    st.kv_dense += L_attn
-                    st.kv_stored += (1 + int(gates[1:, slot].sum())
-                                     if measure else L_attn)
-                st.pos += 1
-                tok = int(toks[slot])
-                st.out_tokens.append(tok)
-                st.next_token = tok
-                stats.decode_tokens += 1
-                if st.req.stop_token is not None and tok == st.req.stop_token:
-                    finish(slot, "stop")
-                elif len(st.out_tokens) >= st.req.max_new_tokens:
-                    finish(slot, "length")
-                elif st.pos >= self.max_len:
-                    finish(slot, "max_len")
+                reason = self._advance_slot(st, int(toks[slot]), g, step_s,
+                                            stats, measure, L_attn)
+                if reason:
+                    finish(slot, reason)
 
         stats.attn_keep_frac = keep_acc / keep_n if keep_n else 1.0
         tot_dense = sum(r.kv_dense for r in results.values())
@@ -358,4 +476,162 @@ class ContinuousBatchingEngine:
         stats.kv_saved_fraction = (1.0 - tot_stored / tot_dense
                                    if tot_dense else 0.0)
         stats.kv_saved_analytic = analytic_kv_saved(cfg)
+        return {"results": results, "stats": stats}
+
+    def _run_paged(self, rng: Optional[jax.Array] = None
+                   ) -> Dict[str, object]:
+        """Paged-pool mode: KV lives in the store-once entry stream
+        (``repro/kvcache/paged.py``) with alloc-on-demand pages.
+
+        Per iteration: (1) admit while the head request's worst-case prompt
+        entries fit in free pages; (2) *proactively* guarantee one decode
+        step of page headroom for every resident slot — preempting the
+        youngest resident (requeued at the head of the FIFO) if the free
+        list runs dry, so the step itself can never OOM; (3) one ragged
+        decode step over all slots; (4) append the measured fresh entries
+        and the history-buffer hit accounting from the returned gate log.
+        """
+        cfg = self.cfg
+        sched = self.scheduler
+        alloc = self.allocator
+        nA = self.n_attn
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        reuse = paged_mod.reuse_enabled(cfg)
+        measure = cfg.skip.enabled and cfg.skip.kv_reuse
+        stats = ServeStats(kv_mode="paged", page_size=self.page_size,
+                           pages_total=self.num_pages)
+        hist = history_mod.HistoryAccounting(nA, self.max_slots, reuse)
+        results: Dict[int, RequestResult] = {}
+
+        store = paged_mod.init_store(cfg, self.num_pages, self.page_size)
+        feed = np.zeros((self.max_slots,), np.int32)
+        pos = np.zeros((self.max_slots,), np.int32)
+        t_run = time.time()
+        keep_acc, keep_n = 0.0, 0.0
+        admit_seq: Dict[int, int] = {}
+        seq = 0
+
+        def finish(slot: int, reason: str) -> None:
+            st = sched.release(slot)
+            alloc.release(slot)
+            hist.on_release(slot)
+            admit_seq.pop(slot, None)
+            results[st.req.uid] = self._make_result(st, reason)
+            stats.requests_completed += 1
+
+        def preempt_youngest(exclude: int) -> bool:
+            """OOM backpressure: evict the most recently admitted resident
+            (≠ ``exclude``) and requeue it — its pages return to the free
+            list and it will re-prefill from scratch later."""
+            victims = [s for s in sched.active if s != exclude]
+            if not victims:
+                return False
+            slot = max(victims, key=lambda s: admit_seq[s])
+            st = sched.release(slot)
+            alloc.release(slot)
+            hist.on_release(slot)
+            admit_seq.pop(slot, None)
+            sched.requeue_front(st.req)
+            stats.preemptions += 1
+            return True
+
+        while sched.has_work():
+            # -- proactive headroom first: every resident can absorb one
+            # full step before anyone new is let in (a newcomer admitted
+            # into pages the residents need would be preempted right back,
+            # throwing its prefill away)
+            for slot in sorted(sched.active):
+                if slot not in sched.active:     # preempted below
+                    continue
+                while not alloc.ensure(slot, int(alloc.fill[slot]) + nA):
+                    if not preempt_youngest(exclude=slot):
+                        raise RuntimeError(
+                            f"page pool exhausted with a single resident "
+                            f"request (slot {slot}) — submit() should have "
+                            "rejected it")
+
+            # -- admission: gated on free pages, not just free slots.
+            # One per iteration so each _can_place check sees the pages the
+            # previous admission actually consumed.  Admission itself
+            # reserves the newcomer's first-step headroom (the +nA below).
+            for slot, req in sched.admit(can_place=self._can_place,
+                                         limit=1):
+                padded, last = sched.pad_prompt(req.tokens)
+                T0 = req.prompt_len
+                t0 = time.time()
+                logits, cache, pstats = self._prefill_paged(
+                    self.params, {"tokens": jnp.asarray(padded[None])},
+                    last_index=jnp.asarray([last], jnp.int32))
+                gates = np.asarray(pstats["attn_gate"], np.float32)[:, 0]
+                n_ent = paged_mod.prefill_entry_count(gates, T0, reuse)
+                if not alloc.ensure(slot, n_ent + nA):
+                    raise RuntimeError(
+                        "page reservation failed after a successful "
+                        "_can_place worst-case check — allocator bug")
+                store = self._pack(store, cache,
+                                   jnp.asarray(gates), jnp.int32(T0),
+                                   jnp.asarray(alloc.block_table[slot]))
+                alloc.append(slot, n_ent, nA * T0)
+                hist.on_prefill(slot, gates, T0)
+                rng, sub = jax.random.split(rng)
+                tok = int(np.asarray(sample(logits, sub, self.temperature))[0])
+                now = time.time()
+                stats.prefill_s += now - t0
+                _, reason = self._activate_prefilled(req, slot, tok,
+                                                     t_run, now, stats)
+                admit_seq[slot] = seq
+                seq += 1
+                if reason:
+                    finish(slot, reason)
+
+            if not sched.active:
+                continue
+
+            # -- one ragged decode step over the whole pool ----------------
+            for slot, st in sched.active.items():
+                feed[slot] = st.next_token
+                pos[slot] = st.pos
+            # bound the stream walk to the live chains instead of the
+            # worst-case block-table width; power-of-two buckets keep the
+            # number of compiled decode shapes logarithmic (the same
+            # recompile-bounding trick as prefill length-bucketing)
+            j_live = max(1, alloc.max_chain_pages())
+            j_step = min(1 << (j_live - 1).bit_length(),
+                         alloc.pages_per_slot)
+            t0 = time.time()
+            logits, store, dstats = self._decode_paged(
+                self.params, store, {"tokens": jnp.asarray(feed[:, None])},
+                jnp.asarray(pos),
+                jnp.asarray(alloc.block_table[:, :j_step]),
+                jnp.asarray(alloc.fill))
+            rng, sub = jax.random.split(rng)
+            toks = np.asarray(sample(logits, sub, self.temperature))
+            gates = np.asarray(dstats["attn_gate"], np.float32)
+            step_s = time.time() - t0
+            stats.decode_s += step_s
+
+            for slot in list(sched.active):
+                st = sched.active[slot]
+                g = gates[:, slot]
+                fresh_n = int(1 + (g[1:] > 0.5).sum()) if reuse else nA
+                alloc.append(slot, fresh_n, nA)
+                hist.on_decode_step(slot, g)
+                keep_acc += float(g.sum())
+                keep_n += nA
+                reason = self._advance_slot(st, int(toks[slot]), g, step_s,
+                                            stats, measure, nA)
+                if reason:
+                    finish(slot, reason)
+
+        stats.attn_keep_frac = keep_acc / keep_n if keep_n else 1.0
+        tot_dense = sum(r.kv_dense for r in results.values())
+        tot_stored = sum(r.kv_stored for r in results.values())
+        stats.kv_saved_fraction = (1.0 - tot_stored / tot_dense
+                                   if tot_dense else 0.0)
+        stats.kv_saved_analytic = analytic_kv_saved(cfg)
+        stats.pages_peak = alloc.stats.pages_peak
+        stats.kv_entries_stored = alloc.stats.entries_appended
+        stats.kv_entries_dense = alloc.stats.entries_dense
+        stats.history_hit_rate = hist.hit_rate
+        stats.history_hits_per_layer = hist.per_layer_hit_rate
         return {"results": results, "stats": stats}

@@ -111,13 +111,32 @@ class Scheduler:
         return bool(self.queue or self.active)
 
     # -- admission / eviction ---------------------------------------------
-    def admit(self) -> List[Tuple[int, Request]]:
-        """Pop FIFO requests into free slots.  Returns [(slot, request)]."""
+    def admit(self, can_place=None,
+              limit: Optional[int] = None) -> List[Tuple[int, Request]]:
+        """Pop FIFO requests into free slots.  Returns [(slot, request)].
+
+        ``can_place(request) -> bool``: optional admission predicate beyond
+        slot availability — the paged KV engine passes its free-page check
+        here, so admission is gated on *memory*, not just slots.  FIFO
+        order is preserved: when the head of the queue cannot be placed,
+        admission stops (backpressure) rather than skipping ahead.
+        ``limit`` caps admissions per call (a stateful ``can_place`` that
+        only reflects *committed* allocations needs limit=1 so each check
+        sees the previous admission's consumption)."""
         admitted: List[Tuple[int, Request]] = []
         while self.queue and self._free:
+            if limit is not None and len(admitted) >= limit:
+                break
+            if can_place is not None and not can_place(self.queue[0]):
+                break
             slot = self._free.pop()
             admitted.append((slot, self.queue.popleft()))
         return admitted
+
+    def requeue_front(self, req: Request) -> None:
+        """Put a preempted request back at the head of the queue (it will
+        re-prefill from scratch when memory frees up)."""
+        self.queue.appendleft(req)
 
     def activate(self, state: ActiveRequest) -> None:
         self.active[state.slot] = state

@@ -5,7 +5,13 @@ Covers: sharded train step on a (4,2) mesh, reshard-on-restore onto a
 different mesh (elastic), shard_map int8-compressed mean, GPipe pipeline
 over a mesh axis, and AbstractMesh-based spec construction for every arch
 on the production meshes.
+
+Multi-device topologies are *simulated* with XLA host-device splitting;
+when the host cannot provide them (splitting unsupported / fewer simulated
+devices than required) the whole module skips instead of failing — tier-1
+must stay green on a 1-CPU host.
 """
+import functools
 import os
 import subprocess
 import sys
@@ -14,15 +20,36 @@ import textwrap
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+REQUIRED_DEVICES = 8
+
+
+def _env():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{REQUIRED_DEVICES}")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = SRC
+    return env
+
+
+@functools.lru_cache(maxsize=1)
+def _simulated_device_count() -> int:
+    r = subprocess.run(
+        [sys.executable, "-c", "import jax; print(jax.device_count())"],
+        capture_output=True, text=True, timeout=300, env=_env())
+    try:
+        return int(r.stdout.strip()) if r.returncode == 0 else 0
+    except ValueError:
+        return 0
 
 
 def _run(script: str):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["JAX_PLATFORMS"] = "cpu"
-    env["PYTHONPATH"] = SRC
+    if _simulated_device_count() < REQUIRED_DEVICES:
+        pytest.skip(f"host cannot simulate {REQUIRED_DEVICES} devices "
+                    f"(got {_simulated_device_count()})")
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
-                       capture_output=True, text=True, timeout=900, env=env)
+                       capture_output=True, text=True, timeout=900,
+                       env=_env())
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     return r.stdout
 
@@ -66,13 +93,14 @@ def test_compressed_mean_shard_map():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.distributed.compat import shard_map
     from repro.optim.compression import compressed_mean
     mesh = jax.make_mesh((8,), ("data",))
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 1024)) * 0.01
     def f(xs):
         return compressed_mean(xs[0], "data")
-    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
-                  out_specs=P(), check_vma=False))(x)
+    out = jax.jit(shard_map(f, mesh, in_specs=P("data"),
+                  out_specs=P(), check=False))(x)
     ref = x.mean(axis=0)
     err = float(jnp.abs(out - ref).max())
     assert err < 2e-4, err
@@ -105,17 +133,15 @@ def test_pipeline_over_axis():
 def test_param_specs_all_archs_production_meshes():
     _run("""
     import jax
-    from jax.sharding import AbstractMesh
     from repro.configs import ASSIGNED_ARCHS, get_config
+    from repro.distributed.compat import abstract_mesh
     from repro.distributed.sharding import ShardingPolicy
     from repro.models import model as M
     from functools import partial
 
     for axes in ((("data", 16), ("model", 16)),
                  (("pod", 2), ("data", 16), ("model", 16))):
-        names = tuple(a for a, _ in axes)
-        sizes = tuple(s for _, s in axes)
-        mesh = AbstractMesh(sizes, names)
+        mesh = abstract_mesh(axes)
         for arch in ASSIGNED_ARCHS:
             cfg = get_config(arch)
             for mode in ("train", "serve"):

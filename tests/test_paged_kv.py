@@ -1,0 +1,383 @@
+"""Paged KV-cache subsystem: page allocator, history-buffer indirection,
+paged decode correctness vs. the dense pool, the Pallas paged-attention
+kernel vs. its oracle, and OOM-safe engine behaviour."""
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.routing import neutral_router_bias
+from repro.kernels import ops as kops, ref
+from repro.kvcache import history, paged
+from repro.kvcache.cache import CompactKVStore
+from repro.models import model as M
+from repro.serve.engine import ContinuousBatchingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(name="llama2-7b", **over):
+    cfg = get_config(name).smoke()
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def _params(cfg):
+    return neutral_router_bias(M.init_params(KEY, cfg))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (l,), dtype=np.int32)
+            for l in lens]
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_free_list_reuse_and_no_aliasing():
+    a = paged.PageAllocator(num_pages=8, page_size=4, max_slots=3,
+                            slot_entry_capacity=16)
+    assert a.ensure(0, 6) and a.ensure(1, 9)      # 2 + 3 pages
+    assert a.free_pages == 3
+    owned0 = set(a.block_table[0][:2])
+    owned1 = set(a.block_table[1][:3])
+    assert not owned0 & owned1                    # no cross-slot aliasing
+    # eviction returns pages; the next slot reuses exactly those
+    released = a.release(0)
+    assert released == 2 and a.free_pages == 5
+    assert a.ensure(2, 16)                        # 4 pages incl. recycled
+    owned2 = set(a.block_table[2][:4])
+    assert owned0 <= owned2 | set(a._free)        # recycled, not leaked
+    assert not owned2 & owned1
+    # block-table round-trip: release everything -> all pages free
+    a.release(1)
+    a.release(2)
+    assert a.free_pages == 8
+    assert (a.fill == 0).all() and (a.block_table == 0).all()
+
+
+def test_allocator_backpressure_and_capacity():
+    a = paged.PageAllocator(num_pages=2, page_size=4, max_slots=2,
+                            slot_entry_capacity=16)
+    assert not a.can_reserve(0, 12)               # 3 pages > pool
+    assert a.ensure(0, 8)
+    assert not a.ensure(1, 4)                     # free list empty
+    a.release(0)
+    assert a.ensure(1, 4)
+
+
+def test_allocator_overflow_guard():
+    a = paged.PageAllocator(num_pages=4, page_size=4, max_slots=1,
+                            slot_entry_capacity=16)
+    assert a.ensure(0, 4)
+    with pytest.raises(RuntimeError, match="proactively"):
+        a.append(0, 5, 5)
+
+
+# ---------------------------------------------------------------------------
+# History metadata
+# ---------------------------------------------------------------------------
+
+def test_next_fresh_layer_intervals():
+    fresh = jnp.asarray(np.array([[1, 1], [0, 1], [1, 0], [0, 1]],
+                                 np.bool_))
+    l1 = np.asarray(history.next_fresh_layer(fresh))
+    # column 0: fresh at 0, 2 -> l1 = 2, -, 4, -
+    assert l1[0, 0] == 2 and l1[2, 0] == 4
+    # column 1: fresh at 0, 1, 3 -> l1 = 1, 3, -, 4
+    assert l1[0, 1] == 1 and l1[1, 1] == 3 and l1[3, 1] == 4
+
+
+def test_effective_positions_exactly_one_entry_per_token():
+    """Each token has exactly one valid entry at every layer."""
+    cfg = _cfg()
+    params = _params(cfg)
+    (p,) = _prompts(cfg, [11])
+    _, cache, stats = M.prefill(params, {"tokens": jnp.asarray(p[None])}, cfg)
+    gates = np.asarray(stats["attn_gate"])[:, 0]
+    nA = gates.shape[0]
+    store = paged.init_store(cfg, 16, 4)
+    alloc = paged.PageAllocator(16, 4, 1, slot_entry_capacity=32 * nA)
+    n = paged.prefill_entry_count(gates, 11, paged.reuse_enabled(cfg))
+    assert alloc.ensure(0, n)
+    store = paged.pack_prefill(store, cache, jnp.asarray(gates),
+                               jnp.int32(11),
+                               jnp.asarray(alloc.block_table[0]), cfg)
+    alloc.append(0, n, nA * 11)
+    view = paged.gather_view(store, jnp.asarray(alloc.block_table))
+    E = view["pos"].shape[1]
+    in_fill = jnp.arange(E)[None] < jnp.asarray(alloc.fill)[:, None]
+    for a in range(nA):
+        eff = np.asarray(history.effective_positions(
+            view["pos"], view["l0"], view["l1"], in_fill, a))[0]
+        valid = eff[eff < history.MASKED_POS]
+        assert sorted(valid) == list(range(11)), (a, valid)
+
+
+def test_paged_view_matches_dense_prefill_views():
+    """Store + indirection reconstructs every layer's dense KV view."""
+    cfg = _cfg()
+    params = _params(cfg)
+    (p,) = _prompts(cfg, [13])
+    _, cache, stats = M.prefill(params, {"tokens": jnp.asarray(p[None])}, cfg)
+    gates = np.asarray(stats["attn_gate"])[:, 0]
+    nA, T0 = gates.shape[0], 13
+    store = paged.init_store(cfg, 32, 8)
+    alloc = paged.PageAllocator(32, 8, 1, slot_entry_capacity=64 * nA)
+    n = paged.prefill_entry_count(gates, T0, paged.reuse_enabled(cfg))
+    assert alloc.ensure(0, n)
+    store = paged.pack_prefill(store, cache, jnp.asarray(gates),
+                               jnp.int32(T0),
+                               jnp.asarray(alloc.block_table[0]), cfg)
+    alloc.append(0, n, nA * T0)
+    assert alloc.saved_fraction > 0.0
+
+    view = paged.gather_view(store, jnp.asarray(alloc.block_table))
+    k_views, _ = paged.prefill_views_from_cache(cache, cfg)
+    E = view["pos"].shape[1]
+    in_fill = jnp.arange(E)[None] < jnp.asarray(alloc.fill)[:, None]
+    for a in range(nA):
+        eff = np.asarray(history.effective_positions(
+            view["pos"], view["l0"], view["l1"], in_fill, a))[0]
+        sel = eff < history.MASKED_POS
+        got = np.zeros((T0,) + k_views.shape[2:], np.float32)
+        got[eff[sel]] = np.asarray(view["k"][0], np.float32)[sel]
+        np.testing.assert_allclose(got, np.asarray(k_views[a],
+                                                   np.float32)[:T0],
+                                   rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode == dense decode (model level) + CompactKVStore accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_paged_decode_matches_dense_and_compact_store(use_kernels):
+    cfg = _cfg(use_kernels=use_kernels) if use_kernels else _cfg()
+    params = _params(cfg)
+    nA = len(cfg.attention_layers)
+    max_len, lens = 32, [10, 6]
+    prompts = _prompts(cfg, lens)
+
+    from repro.serve.engine import init_pool, pool_insert
+    pool = init_pool(cfg, 2, max_len)
+    store = paged.init_store(cfg, 64, 8)
+    alloc = paged.PageAllocator(64, 8, 2, slot_entry_capacity=max_len * nA)
+    comp = CompactKVStore(nA, cfg.num_kv_heads, cfg.resolved_head_dim)
+    zero = np.zeros((cfg.num_kv_heads, cfg.resolved_head_dim), np.float32)
+    toks = []
+    for i, p in enumerate(prompts):
+        lg, c, st = M.prefill(params, {"tokens": jnp.asarray(p[None])}, cfg,
+                              pad_to=max_len)
+        pool = pool_insert(pool, c, i, cfg)
+        g = np.asarray(st["attn_gate"])[:, 0]
+        n = paged.prefill_entry_count(g, lens[i], paged.reuse_enabled(cfg))
+        assert alloc.ensure(i, n + nA)
+        store = paged.pack_prefill(store, c, jnp.asarray(g),
+                                   jnp.int32(lens[i]),
+                                   jnp.asarray(alloc.block_table[i]), cfg)
+        alloc.append(i, n, nA * lens[i])
+        for t_idx in range(lens[i]):
+            for a in range(nA):
+                comp.append(a, zero, zero, executed=bool(g[a, t_idx] > 0.5))
+        toks.append(int(jnp.argmax(lg[0])))
+
+    dec = jax.jit(partial(M.decode_step, cfg=cfg))
+    pdec = jax.jit(partial(M.paged_decode_step, cfg=cfg))
+    t = np.array(lens, np.int32)
+    tok = np.array(toks, np.int32)
+    for step in range(5):
+        lg_d, pool, _ = dec(params, pool,
+                            {"tokens": jnp.asarray(tok[:, None])},
+                            jnp.asarray(t))
+        for s in range(2):
+            assert alloc.ensure(s, int(alloc.fill[s]) + nA)
+        lg_p, store, sp = pdec(params, store,
+                               {"tokens": jnp.asarray(tok[:, None])},
+                               jnp.asarray(t), jnp.asarray(alloc.block_table),
+                               jnp.asarray(alloc.fill))
+        g = np.asarray(sp["attn_gate"])
+        for s in range(2):
+            alloc.append(s, int(1 + (g[1:, s] > 0.5).sum()), nA)
+            for a in range(nA):
+                comp.append(a, zero, zero, executed=bool(g[a, s] > 0.5))
+        assert (np.asarray(jnp.argmax(lg_p, -1))
+                == np.asarray(jnp.argmax(lg_d, -1))).all(), step
+        np.testing.assert_allclose(np.asarray(lg_p, np.float32),
+                                   np.asarray(lg_d, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+        tok = np.asarray(jnp.argmax(lg_d, -1), np.int32)
+        t = t + 1
+
+    # the live history-buffer measurement equals the CompactKVStore
+    # accounting replayed over the same gate log
+    assert comp.stats.saved_fraction > 0.0
+    assert abs(alloc.saved_fraction - comp.stats.saved_fraction) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+def test_paged_attention_kernel_matches_ref():
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, dh = 3, 4, 2, 32
+    P, ps, J = 16, 4, 3
+    E = J * ps
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, dh)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((P, ps, Hkv, dh)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((P, ps, Hkv, dh)), jnp.float32)
+    kt = jnp.asarray(rng.standard_normal((B, 1, Hkv, dh)), jnp.float32)
+    vt = jnp.asarray(rng.standard_normal((B, 1, Hkv, dh)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, P, (B, J)), jnp.int32)
+    pos = rng.integers(0, 9, (B, E)).astype(np.int32)
+    pos[rng.random((B, E)) < 0.4] = history.MASKED_POS
+    qpos = jnp.asarray(np.full((B, 1), 9, np.int32))
+    o_k = kops.paged_decode_attention(q, kp, vp, bt, jnp.asarray(pos),
+                                      kt, vt, q_positions=qpos)
+    o_r = ref.paged_attention_ref(q, kp, vp, bt, jnp.asarray(pos),
+                                  kt, vt, q_positions=qpos)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_kernel_empty_history():
+    """A fresh slot (no committed entries) degrades to self-attention."""
+    rng = np.random.default_rng(1)
+    B, Hq, Hkv, dh = 2, 2, 1, 16
+    P, ps, J = 4, 4, 2
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, dh)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((P, ps, Hkv, dh)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((P, ps, Hkv, dh)), jnp.float32)
+    kt = jnp.asarray(rng.standard_normal((B, 1, Hkv, dh)), jnp.float32)
+    vt = jnp.asarray(rng.standard_normal((B, 1, Hkv, dh)), jnp.float32)
+    bt = jnp.zeros((B, J), jnp.int32)
+    pos = jnp.full((B, J * ps), history.MASKED_POS, jnp.int32)
+    qpos = jnp.zeros((B, 1), jnp.int32)
+    o_k = kops.paged_decode_attention(q, kp, vp, bt, pos, kt, vt,
+                                      q_positions=qpos)
+    o_r = ref.paged_attention_ref(q, kp, vp, bt, pos, kt, vt,
+                                  q_positions=qpos)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Engine: paged mode
+# ---------------------------------------------------------------------------
+
+def test_paged_engine_token_identity_mixed_lengths():
+    cfg = _cfg()
+    params = _params(cfg)
+    prompts = _prompts(cfg, [9, 16, 5, 21])
+    dense = ContinuousBatchingEngine(cfg, params, max_slots=2, max_len=48)
+    ud = [dense.submit(p, max_new_tokens=5) for p in prompts]
+    outd = dense.run()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_len=48,
+                                   kv_mode="paged", page_size=8)
+    up = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    outp = eng.run()
+    for a, b in zip(ud, up):
+        np.testing.assert_array_equal(outd["results"][a].tokens,
+                                      outp["results"][b].tokens)
+    s = outp["stats"]
+    assert s.kv_mode == "paged"
+    assert s.requests_completed == 4
+    assert s.history_hit_rate > 0.0
+    assert len(s.history_hits_per_layer) == len(cfg.attention_layers)
+    assert s.history_hits_per_layer[0] == 0.0          # dense base layer
+    assert 0.0 < s.kv_entries_saved_fraction < 0.5
+    assert 0 < s.pages_peak <= s.pages_total
+    # full release on eviction: every page back on the free list
+    assert eng.allocator.free_pages == eng.num_pages
+    assert (eng.allocator.fill == 0).all()
+
+
+def test_paged_engine_preemption_under_page_pressure():
+    """A pool too small for both residents forces a mid-decode preemption;
+    the preempted request re-prefills and tokens stay identical (greedy)."""
+    cfg = _cfg()
+    params = _params(cfg)
+    prompts = _prompts(cfg, [8, 8], seed=1)
+    dense = ContinuousBatchingEngine(cfg, params, max_slots=2, max_len=48)
+    ud = [dense.submit(p, max_new_tokens=16) for p in prompts]
+    outd = dense.run()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_len=48,
+                                   kv_mode="paged", page_size=8,
+                                   num_pages=6)
+    up = [eng.submit(p, max_new_tokens=16) for p in prompts]
+    outp = eng.run()
+    assert outp["stats"].preemptions >= 1
+    assert outp["stats"].requests_completed == 2
+    for a, b in zip(ud, up):
+        np.testing.assert_array_equal(outd["results"][a].tokens,
+                                      outp["results"][b].tokens)
+
+
+def test_paged_engine_rejects_unservable_request():
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_len=48,
+                                   kv_mode="paged", page_size=8,
+                                   num_pages=6)
+    with pytest.raises(ValueError, match="worst-case KV"):
+        eng.submit(_prompts(cfg, [40])[0], max_new_tokens=8)
+
+
+def test_paged_engine_submit_bound_covers_admission_gate():
+    """Livelock regression: with max_new_tokens=1 the lifetime worst case
+    is prompt_len·nA, one step below the admission gate's (prompt_len+1)·nA
+    — submit must reject rather than accept a request that _can_place can
+    never pass (run() would otherwise spin forever)."""
+    cfg = _cfg()                                  # nA = 2
+    params = _params(cfg)
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_len=48,
+                                   kv_mode="paged", page_size=8,
+                                   num_pages=2)   # exactly 8·2 = prompt·nA
+    with pytest.raises(ValueError, match="worst-case KV"):
+        eng.submit(_prompts(cfg, [8])[0], max_new_tokens=1)
+    # one page smaller than the gate's requirement still fits fine
+    eng2 = ContinuousBatchingEngine(cfg, params, max_slots=1, max_len=48,
+                                    kv_mode="paged", page_size=8,
+                                    num_pages=3)
+    uid = eng2.submit(_prompts(cfg, [8])[0], max_new_tokens=1)
+    out = eng2.run()
+    assert out["results"][uid].finish_reason == "length"
+
+
+def test_paged_engine_max_len_boundary_all_fresh():
+    """Worst storage case: warm-start router (keeps everything => every
+    entry fresh at every layer) with the longest admissible prompt
+    (max_len - 1).  The per-slot block table must hold it and the run must
+    finish by max_len without tripping the headroom loop."""
+    cfg = _cfg()
+    params = M.init_params(KEY, cfg)          # warm-start bias: no skipping
+    max_len = 16
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=1,
+                                   max_len=max_len, kv_mode="paged",
+                                   page_size=8)
+    uid = eng.submit(_prompts(cfg, [max_len - 1])[0], max_new_tokens=8)
+    out = eng.run()
+    r = out["results"][uid]
+    assert r.finish_reason == "max_len"
+    assert out["stats"].kv_entries_saved_fraction == 0.0   # all fresh
+    assert eng.allocator.free_pages == eng.num_pages
+
+
+def test_paged_engine_rejects_unpageable_config():
+    cfg = get_config("gemma3-12b").smoke()       # local ring layers
+    params = M.init_params(KEY, cfg)
+    with pytest.raises(ValueError, match="paged KV"):
+        ContinuousBatchingEngine(cfg, params, max_slots=1, max_len=32,
+                                 kv_mode="paged")
+    assert not paged.can_page(cfg)
+    g = _cfg()
+    g = dataclasses.replace(g, skip=dataclasses.replace(g.skip,
+                                                        mode="gather"))
+    assert not paged.can_page(g)
+    assert paged.can_page(_cfg())
