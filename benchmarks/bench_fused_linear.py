@@ -1,0 +1,126 @@
+"""Fused hybrid linear pipeline (Alg. 1 fusion + §4.2 BFP path).
+
+Two measurements per weight path (dense bf16 / int4-BFP):
+
+  * wall-clock of the composed op-by-op dispatch (norm → separate q/k/v
+    and gate/up matmuls → GLU combine → residual add → next reduction)
+    vs the fused kernels — relative CPU timing, like the other benches;
+  * the ``roofline.linear_bytes`` HBM accounting of one decode step:
+    modeled activation round-trip bytes must drop ≥ 20 % and total bytes
+    (weights included) must be strictly below the unfused dispatch —
+    asserted here so bench-smoke CI fails on regression.
+
+The per-step byte counts are exported via ``Rows.meta`` into
+``BENCH_fused_linear.json`` (the CI perf artifact).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, time_fn
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.quant import quantize_rtn
+from repro.roofline import fusion_report
+
+MIN_ACT_DROP = 0.20
+
+
+def _unfused_block(x, ms, gamma, w_gu, w_down, res, gate, eps):
+    """The composed dispatch the fused pipeline replaces (jnp ops):
+    norm round-trip, one merged [gate|up] matmul, GLU combine, down
+    projection, then the gate/residual write — mirroring
+    ``layers.mlp_apply`` on merged weights."""
+    xf = x.astype(jnp.float32)
+    xn = (xf * jax.lax.rsqrt(ms[:, None] + eps)
+          * gamma.astype(jnp.float32)).astype(x.dtype)
+    F = w_gu.shape[1] // 2
+    gu = xn @ w_gu.astype(x.dtype)
+    h = jax.nn.silu(gu[:, :F]) * gu[:, F:]
+    y = h @ w_down.astype(x.dtype)
+    out = y * gate.astype(y.dtype)[:, None] + res
+    of = out.astype(jnp.float32)
+    return out, (of * of).mean(-1)
+
+
+def _fused_block(x, ms, gamma, pg, pd, res, gate, eps):
+    h, _ = ops.fused_linear(pg, x, mean_sq=ms, gamma=gamma, eps=eps,
+                            glu=True, act="silu")
+    out, sq = ops.fused_linear(pd, h, residual=res, gate_mul=gate,
+                               emit_sq=True)
+    return out, sq / x.shape[-1]
+
+
+def run(quick: bool = False) -> Rows:
+    rows = Rows()
+    M, D, F = (64, 256, 512) if quick else (256, 1024, 2048)
+    eps = 1e-5
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = jax.random.normal(ks[0], (M, D), jnp.float32).astype(jnp.bfloat16)
+    gamma = 1.0 + 0.1 * jax.random.normal(ks[1], (D,))
+    ms = (x.astype(jnp.float32) ** 2).mean(-1)
+    w_gu = jax.random.normal(ks[2], (D, 2 * F), jnp.float32) * 0.03
+    w_down = jax.random.normal(ks[3], (F, D), jnp.float32) * 0.03
+    res = jax.random.normal(ks[4], (M, D), jnp.float32).astype(jnp.bfloat16)
+    gate = (jax.random.uniform(ks[5], (M,)) > 0.25).astype(jnp.float32)
+
+    # --- wall-clock: dense ---------------------------------------------------
+    unf = jax.jit(lambda: _unfused_block(x, ms, gamma, w_gu, w_down, res,
+                                         gate, eps))
+    t_unf = time_fn(unf, iters=3)
+    pg = {"w": w_gu}
+    pd = {"w": w_down}
+    fus = jax.jit(lambda: _fused_block(x, ms, gamma, pg, pd, res, gate, eps))
+    t_fus = time_fn(fus, iters=3)
+    o_u, sq_u = unf()
+    o_f, sq_f = fus()
+    err = float(jnp.abs(o_u.astype(jnp.float32)
+                        - o_f.astype(jnp.float32)).max())
+    # off-TPU the kernels execute in the Pallas *interpreter*, so absolute
+    # wall-clock only validates correctness plumbing; the modeled HBM
+    # bytes below are the metric that transfers to hardware.
+    backend = jax.default_backend()
+    rows.add("fused_linear/dense/unfused_us", t_unf, f"backend={backend}")
+    rows.add("fused_linear/dense/fused_us", t_fus,
+             f"backend={backend};interpreted={backend != 'tpu'};"
+             f"max_err={err:.2e}")
+
+    # --- wall-clock: int4-BFP ------------------------------------------------
+    cg, sg = quantize_rtn(w_gu, 128, pow2_scales=True)
+    cd, sd = quantize_rtn(w_down, 128, pow2_scales=True)
+    pgq = {"w_int": cg, "scale": sg}
+    pdq = {"w_int": cd, "scale": sd}
+    fq = jax.jit(lambda: _fused_block(x, ms, gamma, pgq, pdq, res, gate, eps))
+    t_fq = time_fn(fq, iters=3)
+    rows.add("fused_linear/int4_bfp/fused_us", t_fq, "")
+
+    # --- modeled HBM bytes per decode step (the measured win) ----------------
+    meta = {"min_activation_drop": MIN_ACT_DROP, "reports": {}}
+    for arch, quant in (("llama2-7b", False), ("llama2-7b", True),
+                        ("qwen3-8b", False)):
+        cfg = get_config(arch)
+        cfg = dataclasses.replace(
+            cfg, quant=dataclasses.replace(cfg.quant, enabled=quant))
+        rep = fusion_report(cfg, batch=128)
+        tag = f"{arch}{'/int4' if quant else ''}"
+        meta["reports"][tag] = rep
+        act_drop = rep["activation_bytes_drop_frac"]
+        tot_drop = rep["total_bytes_drop_frac"]
+        rows.add(f"fused_linear/bytes/{tag}", 0.0,
+                 f"act_drop={act_drop:.3f};total_drop={tot_drop:.4f};"
+                 f"fused_total={rep['fused']['total_bytes']:.3e};"
+                 f"unfused_total={rep['unfused']['total_bytes']:.3e}")
+        # CI gate: the fused dispatch must beat the unfused one
+        assert rep["fused"]["total_bytes"] < rep["unfused"]["total_bytes"], \
+            f"{tag}: fused total bytes not below unfused"
+        assert act_drop >= MIN_ACT_DROP, \
+            f"{tag}: activation-byte drop {act_drop:.3f} < {MIN_ACT_DROP}"
+    rows.meta = meta
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True).emit()

@@ -25,6 +25,9 @@ def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 class Rows:
     def __init__(self):
         self.rows: List[Tuple[str, float, str]] = []
+        # optional machine-readable payload (roofline byte counts etc.)
+        # written alongside the CSV rows into BENCH_<name>.json
+        self.meta: dict = {}
 
     def add(self, name: str, us: float, derived: str = ""):
         self.rows.append((name, us, derived))
@@ -32,3 +35,11 @@ class Rows:
     def emit(self):
         for name, us, derived in self.rows:
             print(f"{name},{us:.1f},{derived}")
+
+    def to_json(self, suite: str) -> dict:
+        return {
+            "suite": suite,
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in self.rows],
+            "meta": self.meta,
+        }

@@ -124,6 +124,10 @@ class ModelConfig:
     xent_chunk: int = 1024           # sequence-block size of the chunked softmax-xent
     remat: bool = True
     use_kernels: bool = False        # Pallas kernels (TPU); False => pure-jnp path
+    # Fused linear pipeline (norm-prologue × matmul × epilogue kernels +
+    # the incremental-reduction carry).  Only meaningful with use_kernels;
+    # False keeps the per-op kernel dispatch (parity/debug lever).
+    fuse_linear: bool = True
     scan_layers: bool = True
 
     # ------------------------------------------------------------------ helpers

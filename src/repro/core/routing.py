@@ -80,6 +80,14 @@ def scatter_tokens(y: jnp.ndarray, idx: jnp.ndarray, T: int) -> jnp.ndarray:
     return jax.vmap(lambda o, i, u: o.at[i].set(u))(out, idx, y)
 
 
+def scatter_set_tokens(x: jnp.ndarray, idx: jnp.ndarray,
+                       u: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, T, ...] with rows ``idx`` [B, C] *replaced* by u [B, C, ...]
+    (the fused-epilogue gather path: the kernel already produced
+    ``y·gate + x_row``, so the scatter overwrites instead of adding)."""
+    return jax.vmap(lambda o, i, v: o.at[i].set(v))(x, idx, u)
+
+
 def neutral_router_bias(params: Params) -> Params:
     """Zero every router's keep-warm-start bias so an *untrained* model
     actually skips tokens (~50 % keep) — the regime the measured KV-storage

@@ -44,9 +44,17 @@ def _q_index_positions(positions: jnp.ndarray) -> jnp.ndarray:
 
 
 def _router_and_stats(p: Params, x: jnp.ndarray, cfg: ModelConfig,
-                      routed: bool):
+                      routed: bool,
+                      carried_sq: Optional[jnp.ndarray] = None):
     """One pass producing (router logits, norm reduction stats) — Alg. 1
-    lines 4–7.  Dispatches to the fused Pallas kernel when enabled."""
+    lines 4–7.  Dispatches to the fused Pallas kernel when enabled.
+
+    ``carried_sq``: the previous block's fused-epilogue Σy²/D carry (the
+    incremental-reduction carry) — when present the norm reduction is
+    free and only the (tiny) router matmul touches the activation."""
+    if carried_sq is not None and cfg.norm_type == "rmsnorm":
+        logits = routing.router_logits(p["router"], x) if routed else None
+        return logits, carried_sq
     if cfg.use_kernels and routed and cfg.norm_type == "rmsnorm":
         from repro.kernels import ops as kops
         logits, stats = kops.fused_router_rmsnorm_stats(
@@ -72,16 +80,25 @@ def routed_attention(p: Params, x: jnp.ndarray,
                      view: Optional[kv_reuse.KVPair],
                      positions: jnp.ndarray, cfg: ModelConfig, *,
                      rng: Optional[jax.Array], train: bool,
-                     window: int = 0
+                     window: int = 0,
+                     carried_sq: Optional[jnp.ndarray] = None
                      ) -> Tuple[jnp.ndarray, kv_reuse.KVPair, Stats]:
-    """x: [B, T, D].  Returns (x + routed_attn(x), new KV view, stats)."""
-    B, T, _ = x.shape
+    """x: [B, T, D].  Returns (x + routed_attn(x), new KV view, stats).
+
+    On the fused pipeline (``layers.fuse_norm_linear``): the norm's
+    elementwise phase runs inside the widened wqkv projection's k-loop,
+    the o-projection fuses the gate/residual write, and the emitted Σy²/D
+    rides out in ``stats['res_sq']`` — the next block consumes it via
+    ``carried_sq`` so its own reduction pass disappears."""
+    B, T, D = x.shape
     routed = cfg.skip.enabled and cfg.skip.route_attention
-    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    logits, nstats = _router_and_stats(p, x, cfg, routed, carried_sq)
     gate, p_keep = _gate(logits, rng, cfg, train, (B, T), routed)
     gate = hint(gate, "gate")
     q_pos_idx = _q_index_positions(positions)
     inner = p["inner"]
+    fuse = layers.fuse_norm_linear(cfg)
+    out_sq = None
 
     use_gather = routed and cfg.skip.mode == "gather" and not train
     if use_gather:
@@ -91,32 +108,58 @@ def routed_attention(p: Params, x: jnp.ndarray,
         xg = hint(routing.gather_tokens(x, idx), "activation")
         sg = jax.tree_util.tree_map(
             lambda s: jnp.take_along_axis(s, idx, axis=1), nstats)
-        xng = hint(layers.norm_apply(p["norm"], xg, cfg, stats=sg),
-                   "activation")
         pos_g = _gather_positions(positions, idx)
-        q = attn_mod.project_q(inner, xng, pos_g, cfg)
-        if view is None or not cfg.skip.kv_reuse:
-            # dense KV generation: view base case, or the paper's
-            # "PartialSkip" ablation (KV recomputed for skipped tokens too)
-            xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
-            k, v = attn_mod.project_kv(inner, xn, positions, cfg)
-            view = kv_reuse.init_view(k, v)
+        if fuse:
+            if view is None or not cfg.skip.kv_reuse:
+                # dense KV base case / "PartialSkip" ablation: q from the
+                # gathered tile, KV from all tokens — both norm-fused.
+                q = attn_mod.project_q(inner, xg, pos_g, cfg,
+                                       norm=p["norm"], stats=sg)
+                k, v = attn_mod.project_kv(inner, x, positions, cfg,
+                                           norm=p["norm"], stats=nstats)
+                view = kv_reuse.init_view(k, v)
+            else:
+                q, kg, vg = attn_mod.project_qkv(inner, xg, pos_g, cfg,
+                                                 norm=p["norm"], stats=sg)
+                view = kv_reuse.merge_view_gathered(view, kg, vg, idx, T)
         else:
-            kg, vg = attn_mod.project_kv(inner, xng, pos_g, cfg)
-            view = kv_reuse.merge_view_gathered(view, kg, vg, idx, T)
+            xng = hint(layers.norm_apply(p["norm"], xg, cfg, stats=sg),
+                       "activation")
+            q = attn_mod.project_q(inner, xng, pos_g, cfg)
+            if view is None or not cfg.skip.kv_reuse:
+                # dense KV generation: view base case, or the paper's
+                # "PartialSkip" ablation (KV recomputed for skipped tokens)
+                xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+                k, v = attn_mod.project_kv(inner, xn, positions, cfg)
+                view = kv_reuse.init_view(k, v)
+            else:
+                kg, vg = attn_mod.project_kv(inner, xng, pos_g, cfg)
+                view = kv_reuse.merge_view_gathered(view, kg, vg, idx, T)
         view = (hint(view[0], "kv_view"), hint(view[1], "kv_view"))
         o = attn_mod.attention_core(q, view[0], view[1],
                                     q_positions=jnp.take_along_axis(
                                         q_pos_idx, idx, axis=1),
                                     cfg=cfg, window=window)
-        y = attn_mod.output_proj(inner, o, cfg)
         gate_g = jnp.take_along_axis(gate, idx, axis=1)
-        y = hint(y * gate_g.astype(y.dtype)[..., None], "activation")
-        x = x + hint(routing.scatter_tokens(y, idx, T), "activation")
+        if fuse:
+            # gate/residual epilogue fused into the o-projection; the
+            # unselected rows keep their carried reduction unchanged.
+            yg, sq_g = attn_mod.output_proj_fused(
+                inner, o, cfg, residual=xg, gate_mul=gate_g, emit_sq=True)
+            x = hint(routing.scatter_set_tokens(x, idx, yg), "activation")
+            out_sq = routing.scatter_set_tokens(nstats, idx, sq_g / D)
+        else:
+            y = attn_mod.output_proj(inner, o, cfg)
+            y = hint(y * gate_g.astype(y.dtype)[..., None], "activation")
+            x = x + hint(routing.scatter_tokens(y, idx, T), "activation")
     else:
-        xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
-        q = attn_mod.project_q(inner, xn, positions, cfg)
-        k, v = attn_mod.project_kv(inner, xn, positions, cfg)
+        if fuse:
+            q, k, v = attn_mod.project_qkv(inner, x, positions, cfg,
+                                           norm=p["norm"], stats=nstats)
+        else:
+            xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+            q = attn_mod.project_q(inner, xn, positions, cfg)
+            k, v = attn_mod.project_kv(inner, xn, positions, cfg)
         if routed and cfg.skip.kv_reuse:
             view = kv_reuse.merge_view(view, k, v, gate)
         else:
@@ -125,14 +168,23 @@ def routed_attention(p: Params, x: jnp.ndarray,
         o = attn_mod.attention_core(q, view[0], view[1],
                                     q_positions=q_pos_idx, cfg=cfg,
                                     window=window)
-        y = attn_mod.output_proj(inner, o, cfg)
-        if routed:
-            y = y * gate.astype(y.dtype)[..., None]
-        x = x + hint(y, "activation")
+        if fuse:
+            x, sq = attn_mod.output_proj_fused(
+                inner, o, cfg, residual=x,
+                gate_mul=gate if routed else None, emit_sq=True)
+            x = hint(x, "activation")
+            out_sq = sq / D
+        else:
+            y = attn_mod.output_proj(inner, o, cfg)
+            if routed:
+                y = y * gate.astype(y.dtype)[..., None]
+            x = x + hint(y, "activation")
 
     stats = routing.router_stats(p_keep, gate, cfg) if routed else {
         "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
     stats["attn_gate"] = gate
+    if out_sq is not None:
+        stats["res_sq"] = out_sq
     return x, view, stats
 
 
@@ -142,13 +194,21 @@ def routed_attention(p: Params, x: jnp.ndarray,
 
 def routed_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
                inner_fn: Callable[[Params, jnp.ndarray], Tuple[jnp.ndarray, Stats]],
-               rng: Optional[jax.Array], train: bool
+               rng: Optional[jax.Array], train: bool,
+               carried_sq: Optional[jnp.ndarray] = None
                ) -> Tuple[jnp.ndarray, Stats]:
-    """inner_fn(params, xn) -> (y, aux); covers dense MLP and MoE."""
-    B, T, _ = x.shape
+    """inner_fn(params, xn) -> (y, aux); covers dense MLP and MoE.
+
+    Dense MLPs on the fused pipeline skip inner_fn entirely: the
+    norm-prologue × [gate|up] × GLU and down × gate/residual/Σy² kernels
+    run instead (MoE keeps its scatter dispatch)."""
+    B, T, D = x.shape
     routed = cfg.skip.enabled and cfg.skip.route_mlp
-    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    logits, nstats = _router_and_stats(p, x, cfg, routed, carried_sq)
     gate, p_keep = _gate(logits, rng, cfg, train, (B, T), routed)
+    fuse = layers.fuse_norm_linear(cfg) and layers.mlp_fusable(p["inner"])
+    out_sq = None
+    aux: Stats = {}
 
     use_gather = routed and cfg.skip.mode == "gather" and not train
     if use_gather:
@@ -158,28 +218,62 @@ def routed_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
         xg = hint(routing.gather_tokens(x, idx), "activation")
         sg = jax.tree_util.tree_map(
             lambda s: jnp.take_along_axis(s, idx, axis=1), nstats)
-        xng = hint(layers.norm_apply(p["norm"], xg, cfg, stats=sg),
-                   "activation")
-        y, aux = inner_fn(p["inner"], xng)
         gate_g = jnp.take_along_axis(gate, idx, axis=1)
-        y = hint(y * gate_g.astype(y.dtype)[..., None], "activation")
-        x = x + hint(routing.scatter_tokens(y, idx, T), "activation")
+        if fuse:
+            yg, sq_g = layers.mlp_apply_fused(
+                p["inner"], xg, cfg, norm=p["norm"], stats=sg,
+                residual=xg, gate_mul=gate_g, emit_sq=True)
+            x = hint(routing.scatter_set_tokens(x, idx, yg), "activation")
+            out_sq = routing.scatter_set_tokens(nstats, idx, sq_g / D)
+        else:
+            xng = hint(layers.norm_apply(p["norm"], xg, cfg, stats=sg),
+                       "activation")
+            y, aux = inner_fn(p["inner"], xng)
+            y = hint(y * gate_g.astype(y.dtype)[..., None], "activation")
+            x = x + hint(routing.scatter_tokens(y, idx, T), "activation")
     else:
-        xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
-        y, aux = inner_fn(p["inner"], xn)
-        if routed:
-            y = y * gate.astype(y.dtype)[..., None]
-        x = x + hint(y, "activation")
+        if fuse:
+            x, sq = layers.mlp_apply_fused(
+                p["inner"], x, cfg, norm=p["norm"], stats=nstats,
+                residual=x, gate_mul=gate if routed else None, emit_sq=True)
+            x = hint(x, "activation")
+            out_sq = sq / D
+        else:
+            xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+            y, aux = inner_fn(p["inner"], xn)
+            if routed:
+                y = y * gate.astype(y.dtype)[..., None]
+            x = x + hint(y, "activation")
 
     stats = routing.router_stats(p_keep, gate, cfg) if routed else {
         "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
     stats.update(aux)
+    if out_sq is not None:
+        stats["res_sq"] = out_sq
     return x, stats
 
 
 # ---------------------------------------------------------------------------
 # Decode-step variants (single new token, per-layer KV cache)
 # ---------------------------------------------------------------------------
+
+def _decode_output_epilogue(inner: Params, o: jnp.ndarray, x: jnp.ndarray,
+                            gate: jnp.ndarray, routed: bool, fuse: bool,
+                            cfg: ModelConfig, stats: Stats) -> jnp.ndarray:
+    """Shared decode o-projection epilogue (dense / ring / paged paths):
+    fused — (o·Wo)·gate + x in one kernel, Σy²/D carry into
+    ``stats['res_sq']``; composed — the plain op sequence.  x: [B, 1, D];
+    gate: [B]."""
+    if fuse:
+        x, sq = attn_mod.output_proj_fused(
+            inner, o, cfg, residual=x,
+            gate_mul=gate[:, None] if routed else None, emit_sq=True)
+        stats["res_sq"] = sq / x.shape[-1]
+        return x
+    y = attn_mod.output_proj(inner, o, cfg)
+    if routed:
+        y = y * gate.astype(y.dtype)[:, None, None]
+    return x + y
 
 def _row_update(cache: jnp.ndarray, new: jnp.ndarray, t: jnp.ndarray,
                 time_axis: int) -> jnp.ndarray:
@@ -198,24 +292,32 @@ def routed_attention_decode(p: Params, x: jnp.ndarray,
                             t: jnp.ndarray,
                             kv_prev: Optional[kv_reuse.KVPair],
                             positions: jnp.ndarray, cfg: ModelConfig, *,
-                            window: int = 0
+                            window: int = 0,
+                            carried_sq: Optional[jnp.ndarray] = None
                             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
                                        kv_reuse.KVPair, Stats]:
     """One decode step.  x: [B, 1, D]; k/v_cache: [B, Tmax, Hkv, dh];
     t: [B] int32 per-sequence positions (a scalar broadcasts — lock-step);
     kv_prev: the carried single-token KV view (the proactive
-    invariance-buffer update, §4.4.2)."""
+    invariance-buffer update, §4.4.2).  On the fused pipeline the qkv
+    projection carries the norm prologue and the o-projection emits the
+    next block's reduction (``stats['res_sq']``)."""
     B = x.shape[0]
     t = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t, jnp.int32)), (B,))
     routed = cfg.skip.enabled and cfg.skip.route_attention
-    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    logits, nstats = _router_and_stats(p, x, cfg, routed, carried_sq)
     gate, p_keep = _gate(logits[:, 0] if logits is not None else None,
                          None, cfg, False, (B,), routed)
     inner = p["inner"]
+    fuse = layers.fuse_norm_linear(cfg)
 
-    xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
-    q = attn_mod.project_q(inner, xn, positions, cfg)
-    k_new, v_new = attn_mod.project_kv(inner, xn, positions, cfg)
+    if fuse:
+        q, k_new, v_new = attn_mod.project_qkv(
+            inner, x, positions, cfg, norm=p["norm"], stats=nstats)
+    else:
+        xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+        q = attn_mod.project_q(inner, xn, positions, cfg)
+        k_new, v_new = attn_mod.project_kv(inner, xn, positions, cfg)
     if routed and cfg.skip.kv_reuse:
         k_t, v_t = kv_reuse.merge_token_view(kv_prev, k_new, v_new, gate)
     else:
@@ -246,13 +348,9 @@ def routed_attention_decode(p: Params, x: jnp.ndarray,
             q, k_cache, v_cache,
             q_positions=_q_index_positions(positions),
             cfg=cfg, window=window, kv_valid_len=valid)
-    y = attn_mod.output_proj(inner, o, cfg)
-    if routed:
-        y = y * gate.astype(y.dtype)[:, None, None]
-    x = x + y
-
     stats = routing.router_stats(p_keep, gate, cfg) if routed else {
         "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    x = _decode_output_epilogue(inner, o, x, gate, routed, fuse, cfg, stats)
     stats["attn_gate"] = gate
     return x, k_cache, v_cache, (k_t, v_t), stats
 
@@ -261,7 +359,8 @@ def routed_attention_decode_paged(p: Params, x: jnp.ndarray,
                                   t: jnp.ndarray,
                                   kv_prev: Optional[kv_reuse.KVPair],
                                   positions: jnp.ndarray, cfg: ModelConfig,
-                                  *, paged: Dict, layer
+                                  *, paged: Dict, layer,
+                                  carried_sq: Optional[jnp.ndarray] = None
                                   ) -> Tuple[jnp.ndarray, kv_reuse.KVPair,
                                              Stats]:
     """One decode step against the paged entry stream (paper §4.4).
@@ -280,14 +379,19 @@ def routed_attention_decode_paged(p: Params, x: jnp.ndarray,
     B = x.shape[0]
     t = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t, jnp.int32)), (B,))
     routed = cfg.skip.enabled and cfg.skip.route_attention
-    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    logits, nstats = _router_and_stats(p, x, cfg, routed, carried_sq)
     gate, p_keep = _gate(logits[:, 0] if logits is not None else None,
                          None, cfg, False, (B,), routed)
     inner = p["inner"]
+    fuse = layers.fuse_norm_linear(cfg)
 
-    xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
-    q = attn_mod.project_q(inner, xn, positions, cfg)
-    k_new, v_new = attn_mod.project_kv(inner, xn, positions, cfg)
+    if fuse:
+        q, k_new, v_new = attn_mod.project_qkv(
+            inner, x, positions, cfg, norm=p["norm"], stats=nstats)
+    else:
+        xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+        q = attn_mod.project_q(inner, xn, positions, cfg)
+        k_new, v_new = attn_mod.project_kv(inner, xn, positions, cfg)
     if routed and cfg.skip.kv_reuse:
         k_t, v_t = kv_reuse.merge_token_view(kv_prev, k_new, v_new, gate)
     else:
@@ -310,29 +414,27 @@ def routed_attention_decode_paged(p: Params, x: jnp.ndarray,
         o = attn_mod.chunked_attention(
             q, k_cat, v_cat, q_positions=q_pos, causal=True, window=0,
             chunk=k_cat.shape[1], kv_positions=pos_cat)
-    y = attn_mod.output_proj(inner, o, cfg)
-    if routed:
-        y = y * gate.astype(y.dtype)[:, None, None]
-    x = x + y
-
     stats = routing.router_stats(p_keep, gate, cfg) if routed else {
         "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    x = _decode_output_epilogue(inner, o, x, gate, routed, fuse, cfg, stats)
     stats["attn_gate"] = gate
     return x, (k_t, v_t), stats
 
 
 def routed_ssm(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
                rng: Optional[jax.Array], train: bool,
-               conv_state=None, ssm_state=None
+               conv_state=None, ssm_state=None,
+               carried_sq: Optional[jnp.ndarray] = None
                ) -> Tuple[jnp.ndarray, Tuple, Stats]:
     """Mamba block with masked-contribution routing (DESIGN.md
     §Arch-applicability): a skipped token's dt is zeroed inside the SSD scan
-    so it neither updates the state nor produces output."""
+    so it neither updates the state nor produces output.  Consumes (but
+    does not produce) the incremental-reduction carry."""
     from repro.models import ssm as ssm_mod
 
     B, T, _ = x.shape
     routed = cfg.skip.enabled and cfg.skip.route_ssm
-    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    logits, nstats = _router_and_stats(p, x, cfg, routed, carried_sq)
     gate, p_keep = _gate(logits, rng, cfg, train, (B, T), routed)
     xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
     y, states = ssm_mod.ssm_apply(p["inner"], xn, cfg,
@@ -345,13 +447,14 @@ def routed_ssm(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
 
 
 def routed_ssm_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
-                      conv_state, ssm_state
+                      conv_state, ssm_state,
+                      carried_sq: Optional[jnp.ndarray] = None
                       ) -> Tuple[jnp.ndarray, Tuple, Stats]:
     from repro.models import ssm as ssm_mod
 
     B = x.shape[0]
     routed = cfg.skip.enabled and cfg.skip.route_ssm
-    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    logits, nstats = _router_and_stats(p, x, cfg, routed, carried_sq)
     gate, p_keep = _gate(logits[:, 0] if logits is not None else None,
                          None, cfg, False, (B,), routed)
     xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
@@ -363,18 +466,26 @@ def routed_ssm_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
 
 
 def routed_mlp_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
-                      inner_fn) -> Tuple[jnp.ndarray, Stats]:
+                      inner_fn,
+                      carried_sq: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, Stats]:
     """Decode-time MLP routing is the masked path with T=1."""
-    B = x.shape[0]
+    B, _, D = x.shape
     routed = cfg.skip.enabled and cfg.skip.route_mlp
-    logits, nstats = _router_and_stats(p, x, cfg, routed)
+    logits, nstats = _router_and_stats(p, x, cfg, routed, carried_sq)
     gate, p_keep = _gate(logits[:, 0] if logits is not None else None,
                          None, cfg, False, (B,), routed)
+    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
+        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    if layers.fuse_norm_linear(cfg) and layers.mlp_fusable(p["inner"]):
+        x, sq = layers.mlp_apply_fused(
+            p["inner"], x, cfg, norm=p["norm"], stats=nstats, residual=x,
+            gate_mul=gate[:, None] if routed else None, emit_sq=True)
+        stats["res_sq"] = sq / D
+        return x, stats
     xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
     y, aux = inner_fn(p["inner"], xn)
     if routed:
         y = y * gate.astype(y.dtype)[:, None, None]
-    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
-        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
     stats.update(aux)
     return x + y, stats

@@ -149,7 +149,22 @@ class ShardingPolicy:
         if "router" in path:
             return P(None, None)
         # --- attention ---
-        if path.endswith("wq/w"):
+        if path.endswith("wqkv/w"):
+            # merged [q|k|v]: the column split is (ai, ki, ki) — shard the
+            # output dim only when every slice divides the axis cleanly
+            if (cfg.attn_inner_dim % self.model_size == 0
+                    and cfg.kv_inner_dim % self.model_size == 0
+                    and cfg.num_kv_heads >= self.model_size):
+                return P(fsdp, "model")
+            # GQA fallback (kv heads < model axis): the q/k/v boundaries
+            # can't split column-wise, so go row-parallel over the input
+            # dim — memory-balanced (1/model_size per device) instead of
+            # replicating the large q projection with the legacy split
+            # layout's column rules.
+            row = ((fsdp if isinstance(fsdp, tuple) else (fsdp,))
+                   if fsdp else ()) + ("model",)
+            return P(row, None)
+        if path.endswith("wq/w"):                          # legacy split
             return P(fsdp, "model")
         if path.endswith(("wk/w", "wv/w")):
             # kv_inner usually < model size heads; shard when divisible
@@ -159,7 +174,7 @@ class ShardingPolicy:
         if path.endswith("wo/w"):
             return P("model", fsdp)
         # --- MLP ---
-        if path.endswith(("up/w", "gate/w")):
+        if path.endswith(("gu/w", "up/w", "gate/w")):
             return P(fsdp, "model")
         if path.endswith("down/w"):
             return P("model", fsdp)

@@ -1,16 +1,15 @@
-"""Fused router + RMSNorm-statistics Pallas kernels (paper Alg. 1).
+"""Fused router + RMSNorm-statistics Pallas kernel (paper Alg. 1 ll. 4–7).
 
-Two kernels realize the paper's decoupled-reduction dataflow:
+``router_stats``: one pass over each activation tile produces BOTH the
+router logits (X·W_θ) and the RMSNorm reduction (Σx²).  The router weight
+is lane-padded to 128 columns so the matmul is MXU-shaped; the caller
+slices the 2 real logits.
 
-1. ``router_stats``: one pass over each activation tile produces BOTH the
-   router logits (X·W_θ) and the RMSNorm reduction (Σx²) — lines 4–7 of
-   Alg. 1.  The router weight is lane-padded to 128 columns so the matmul
-   is MXU-shaped; the caller slices the 2 real logits.
-
-2. ``rmsnorm_matmul``: the element-wise normalization phase is applied to
-   the X tile *inside* the k-loop of the following projection matmul
-   (prologue fusion) — lines 11–15 of Alg. 1: the normalized tile never
-   round-trips to HBM.
+The matching *elementwise* phase (Alg. 1 ll. 11–15 — normalization applied
+inside the k-loop of the following projection) lives in
+``repro/kernels/fused_linear.py``, which subsumed the old standalone
+``rmsnorm_matmul`` kernel and extends it to the int4-BFP weight path and
+the SwiGLU/residual epilogues.
 """
 from __future__ import annotations
 
@@ -93,68 +92,3 @@ def router_stats_pallas(x: jnp.ndarray, w: jnp.ndarray, *,
         interpret=interpret,
     )(x, wp)
     return logits[:T, :2], sq[:T, 0]
-
-
-# ---------------------------------------------------------------------------
-# Kernel 2: normalization fused into the following matmul's k-loop
-# ---------------------------------------------------------------------------
-
-def _rmsnorm_matmul_kernel(x_ref, ms_ref, g_ref, w_ref, o_ref, acc_scr, *,
-                           eps: float, out_dtype):
-    k = pl.program_id(2)
-    nk = pl.num_programs(2)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
-    x = x_ref[...].astype(jnp.float32)                    # [bm, bk]
-    ms = ms_ref[...]                                      # [bm, 1]
-    g = g_ref[...].astype(jnp.float32)                    # [1, bk]
-    xn = x * jax.lax.rsqrt(ms + eps) * g
-    w = w_ref[...].astype(jnp.float32)                    # [bk, bn]
-    acc_scr[...] += jax.lax.dot_general(
-        xn, w, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-
-    @pl.when(k == nk - 1)
-    def _fin():
-        o_ref[...] = acc_scr[...].astype(out_dtype)
-
-
-def rmsnorm_matmul_pallas(x: jnp.ndarray, mean_sq: jnp.ndarray,
-                          gamma: jnp.ndarray, w: jnp.ndarray, *,
-                          eps: float = 1e-5, bm: int = 128, bn: int = 128,
-                          bk: int = 512, interpret: bool = False
-                          ) -> jnp.ndarray:
-    """x: [M, K]; mean_sq: [M]; gamma: [K]; w: [K, N] -> rmsnorm(x)·w."""
-    M, K = x.shape
-    N = w.shape[1]
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-    Mp, Np, Kp = (-(-M // bm) * bm, -(-N // bn) * bn, -(-K // bk) * bk)
-    if Mp != M:
-        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
-        mean_sq = jnp.pad(mean_sq, (0, Mp - M), constant_values=1.0)
-    if Kp != K:
-        x = jnp.pad(x, ((0, 0), (0, Kp - K)))
-        gamma = jnp.pad(gamma, (0, Kp - K))
-        w = jnp.pad(w, ((0, Kp - K), (0, 0)))
-    if Np != N:
-        w = jnp.pad(w, ((0, 0), (0, Np - N)))
-
-    grid = (Mp // bm, Np // bn, Kp // bk)
-    out = pl.pallas_call(
-        functools.partial(_rmsnorm_matmul_kernel, eps=eps, out_dtype=x.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((1, bk), lambda i, j, k: (0, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        interpret=interpret,
-    )(x, mean_sq[:, None], gamma[None, :], w)
-    return out[:M, :N]

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_packed
-from repro.kernels.fused_router_rmsnorm import (router_stats_pallas,
-                                                rmsnorm_matmul_pallas)
+from repro.kernels.fused_linear import fused_linear_pallas
+from repro.kernels.fused_router_rmsnorm import router_stats_pallas
 from repro.kernels.int4_matmul import int4_matmul_pallas
 from repro.kernels.paged_attention import paged_attention_packed
 
@@ -134,20 +134,26 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, eff_pos,
 
 def int4_matmul(x: jnp.ndarray, w_codes: jnp.ndarray, scale: jnp.ndarray,
                 use_kernel: bool = False) -> jnp.ndarray:
-    """x: [..., K] × int4-coded [K, N] -> [..., N]."""
+    """x: [..., K] × int4-coded [Kw, N] -> [..., N].
+
+    ``Kw >= K`` covers group-padded quantized weights (quantize_rtn pads
+    the final group with zero codes when K is not a group multiple); the
+    activation is zero-padded to match."""
     lead = x.shape[:-1]
     K = x.shape[-1]
-    N = w_codes.shape[1]
+    Kw, N = w_codes.shape
     x2 = x.reshape(-1, K)
+    if Kw != K:
+        x2 = jnp.pad(x2, ((0, 0), (0, Kw - K)))
     if use_kernel:
         out = int4_matmul_pallas(x2, w_codes, scale, interpret=_interpret())
     else:
         # jnp fallback: dequantize-and-matmul; XLA keeps the int8 weight
         # feed (weight HBM bytes = 1/2 of bf16; accounted at 4-bit in the
         # roofline, DESIGN.md).
-        G = K // scale.shape[0]
-        w = (w_codes.astype(x.dtype).reshape(K // G, G, N)
-             * scale[:, None, :].astype(x.dtype)).reshape(K, N)
+        G = Kw // scale.shape[0]
+        w = (w_codes.astype(x.dtype).reshape(Kw // G, G, N)
+             * scale[:, None, :].astype(x.dtype)).reshape(Kw, N)
         out = x2 @ w
     return out.reshape(*lead, N)
 
@@ -172,18 +178,39 @@ def fused_router_rmsnorm_stats(x: jnp.ndarray, w: jnp.ndarray,
     return logits.reshape(B, T, 2) + b, ms.reshape(B, T)
 
 
-def rmsnorm_matmul(x: jnp.ndarray, mean_sq: jnp.ndarray, gamma: jnp.ndarray,
-                   w: jnp.ndarray, eps: float = 1e-5,
-                   use_kernel: bool = True) -> jnp.ndarray:
-    """Normalization fused into the following projection (Alg. 1 ll. 11-15).
-    x: [..., K]; mean_sq: [...]; w: [K, N]."""
+def fused_linear(params, x: jnp.ndarray, *, mean_sq=None, gamma=None,
+                 eps: float = 1e-5, glu: bool = False, act=None,
+                 residual=None, gate_mul=None, emit_sq: bool = False,
+                 use_kernel: bool = True):
+    """Fused linear pipeline over a (possibly quantized) linear param dict.
+
+    x: [..., K]; params: {"w"} (dense) or {"w_int", "scale"} (int4-BFP).
+    ``mean_sq`` [...] + ``gamma`` [K] fuse the RMSNorm elementwise phase
+    into the k-loop (Alg. 1 ll. 11–15); ``glu``/``act`` apply the
+    SwiGLU/GeGLU epilogue over a widened [gate|up] weight; ``gate_mul``
+    [...] and ``residual`` [..., F] fuse the routed-residual write; with
+    ``emit_sq`` the second return is Σy² per row (f32) — the next block's
+    norm reduction (incremental-reduction carry).  Returns (out, sq|None).
+    """
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
-    ms2 = mean_sq.reshape(-1)
-    if use_kernel:
-        out = rmsnorm_matmul_pallas(x2, ms2, gamma, w, eps=eps,
-                                    interpret=_interpret())
+    kw = dict(
+        mean_sq=None if mean_sq is None else mean_sq.reshape(-1),
+        gamma=gamma, eps=eps, glu=glu, act=act,
+        residual=None if residual is None
+        else residual.reshape(-1, residual.shape[-1]),
+        gate_mul=None if gate_mul is None else gate_mul.reshape(-1),
+        emit_sq=emit_sq)
+    if "w_int" in params:
+        args = dict(w_codes=params["w_int"], scale=params["scale"])
     else:
-        out = ref.rmsnorm_matmul_ref(x2, ms2, gamma, w, eps)
-    return out.reshape(*lead, w.shape[1])
+        args = dict(w=params["w"])
+    if use_kernel:
+        out, sq = fused_linear_pallas(x2, **args, **kw,
+                                      interpret=_interpret())
+    else:
+        out, sq = ref.fused_linear_ref(x2, **args, **kw)
+    F = out.shape[-1]
+    out = out.reshape(*lead, F)
+    return out, (None if sq is None else sq.reshape(*lead))

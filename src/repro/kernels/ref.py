@@ -93,25 +93,36 @@ def int4_matmul_ref(x: jnp.ndarray, w_codes: jnp.ndarray,
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
 
 
-def bfp_matmul_ref(x: jnp.ndarray, w_codes: jnp.ndarray,
-                   scale: jnp.ndarray) -> jnp.ndarray:
-    """Bit-accurate emulation of the kernel's BFP fixed-point accumulation
+def _bfp_matmul_f32(xf: jnp.ndarray, w_codes: jnp.ndarray,
+                    scale: jnp.ndarray) -> jnp.ndarray:
+    """fp32-in/fp32-out emulation of the BFP fixed-point accumulation
     (shared per-row-per-group exponent, int8 mantissas, int32 accumulate,
-    one FP reconstruction per group).  The kernel must match this closely."""
-    M, K = x.shape
+    one FP reconstruction per group).  ``w_codes`` may be group-padded
+    (Kw >= K, trailing rows zero); xf is zero-padded to match."""
+    M, K = xf.shape
     Kw, N = w_codes.shape
-    G = K // scale.shape[0]
-    xg = x.astype(jnp.float32).reshape(M, K // G, G)
+    G = Kw // scale.shape[0]
+    if Kw != K:
+        xf = jnp.pad(xf, ((0, 0), (0, Kw - K)))
+    xg = xf.reshape(M, Kw // G, G)
     amax = jnp.abs(xg).max(axis=-1, keepdims=True)
     e = jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30)))
     e = jnp.where(amax == 0, 0.0, e)
     pe = jnp.exp2(e)                                       # [M, K/G, 1]
     mant = jnp.clip(jnp.round(xg * (2.0 ** MBITS) / pe), -128, 127)
-    wg = w_codes.reshape(K // G, G, N).astype(jnp.int32)
+    wg = w_codes.reshape(Kw // G, G, N).astype(jnp.int32)
     prod = jnp.einsum("mcg,cgn->mcn", mant.astype(jnp.int32), wg)  # int32
     recon = (prod.astype(jnp.float32) * pe * (2.0 ** -MBITS)
              * scale[None, :, :])                          # [M, K/G, N]
-    return recon.sum(axis=1).astype(x.dtype)
+    return recon.sum(axis=1)
+
+
+def bfp_matmul_ref(x: jnp.ndarray, w_codes: jnp.ndarray,
+                   scale: jnp.ndarray) -> jnp.ndarray:
+    """Bit-accurate BFP oracle in the input dtype (the kernel must match
+    this closely)."""
+    return _bfp_matmul_f32(x.astype(jnp.float32), w_codes,
+                           scale).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -124,9 +135,38 @@ def router_stats_ref(x: jnp.ndarray, w: jnp.ndarray):
     return xf @ w.astype(jnp.float32), (xf * xf).mean(axis=-1)
 
 
-def rmsnorm_matmul_ref(x: jnp.ndarray, mean_sq: jnp.ndarray,
-                       gamma: jnp.ndarray, w: jnp.ndarray,
-                       eps: float = 1e-5) -> jnp.ndarray:
+# ---------------------------------------------------------------------------
+# Fused linear pipeline (norm prologue × {dense, int4-BFP} × epilogue)
+# ---------------------------------------------------------------------------
+
+def fused_linear_ref(x, w=None, w_codes=None, scale=None, *, mean_sq=None,
+                     gamma=None, eps: float = 1e-5, glu: bool = False,
+                     act=None, residual=None, gate_mul=None,
+                     emit_sq: bool = False):
+    """Oracle for ``fused_linear_pallas``: same arithmetic pipeline in
+    plain jnp — RMSNorm elementwise phase from injected ``mean_sq``, the
+    matmul (exact fp32 for dense weights, the bit-level BFP emulation for
+    int4 codes), GLU / activation epilogue, gate multiplier, residual add
+    and the Σy² reduction of the written rows."""
+    from repro.kernels.fused_linear import _act
+
     xf = x.astype(jnp.float32)
-    xn = xf * jax.lax.rsqrt(mean_sq[:, None] + eps) * gamma.astype(jnp.float32)
-    return (xn @ w.astype(jnp.float32)).astype(x.dtype)
+    if mean_sq is not None:
+        xf = xf * jax.lax.rsqrt(mean_sq[:, None] + eps) \
+                * gamma.astype(jnp.float32)
+    if w_codes is not None:
+        y = _bfp_matmul_f32(xf, w_codes, scale)
+    else:
+        y = xf @ w.astype(jnp.float32)
+
+    if glu:
+        F = y.shape[-1] // 2
+        y = _act(y[:, :F], act) * y[:, F:]
+    else:
+        y = _act(y, act)
+    if gate_mul is not None:
+        y = y * gate_mul.astype(jnp.float32)[:, None]
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    sq = (y * y).sum(axis=-1) if emit_sq else None
+    return y.astype(x.dtype), sq

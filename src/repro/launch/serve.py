@@ -30,6 +30,10 @@ def main() -> None:
                     help="paged KV store + history buffer instead of the "
                          "dense slot pool (see docs/kvcache.md)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="Pallas kernel path incl. the fused linear "
+                         "pipeline (interpret mode off-TPU — slow on "
+                         "CPU, for end-to-end validation)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -39,6 +43,8 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    if args.use_kernels:
+        cfg = dataclasses.replace(cfg, use_kernels=True)
     if args.gather:
         cfg = dataclasses.replace(
             cfg, skip=dataclasses.replace(cfg.skip, mode="gather"))

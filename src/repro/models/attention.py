@@ -30,13 +30,13 @@ NEG_INF = -1.0e30
 # ---------------------------------------------------------------------------
 
 def attention_init(key, cfg: ModelConfig) -> Params:
-    ks = jax.random.split(key, 4)
+    ks = jax.random.split(key, 2)
     d, ai, ki = cfg.d_model, cfg.attn_inner_dim, cfg.kv_inner_dim
     p: Params = {
-        "wq": layers.linear_init(ks[0], d, ai, cfg),
-        "wk": layers.linear_init(ks[1], d, ki, cfg),
-        "wv": layers.linear_init(ks[2], d, ki, cfg),
-        "wo": layers.linear_init(ks[3], ai, d, cfg),
+        # widened [q | k | v] projection: one k-loop serves all three
+        # (the fused norm-prologue then runs once per block, not thrice)
+        "wqkv": layers.linear_init(ks[0], d, ai + 2 * ki, cfg),
+        "wo": layers.linear_init(ks[1], ai, d, cfg),
     }
     if cfg.qk_norm:
         p["qnorm"] = layers.rms_head_norm_init(cfg.resolved_head_dim, cfg)
@@ -44,24 +44,30 @@ def attention_init(key, cfg: ModelConfig) -> Params:
     return p
 
 
-def project_q(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
-              cfg: ModelConfig) -> jnp.ndarray:
-    """x: [B, T, D] -> q: [B, T, Hq, dh] (rope'd, qk-normed)."""
-    B, T, _ = x.shape
-    q = layers.linear_apply(params["wq"], x, cfg)
+def _wq(params: Params, cfg: ModelConfig) -> Params:
+    if "wqkv" in params:
+        return layers.slice_linear(params["wqkv"], 0, cfg.attn_inner_dim)
+    return params["wq"]                                   # legacy split
+
+
+def _wkv(params: Params, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ai, ki = cfg.attn_inner_dim, cfg.kv_inner_dim
+    if "wqkv" in params:
+        return (layers.slice_linear(params["wqkv"], ai, ai + ki),
+                layers.slice_linear(params["wqkv"], ai + ki, ai + 2 * ki))
+    return params["wk"], params["wv"]                     # legacy split
+
+
+def _finish_q(params, q, positions, cfg: ModelConfig) -> jnp.ndarray:
+    B, T = q.shape[:2]
     q = q.reshape(B, T, cfg.num_heads, cfg.resolved_head_dim)
     if cfg.qk_norm:
         q = layers.rms_head_norm(params["qnorm"], q, cfg.norm_eps)
     return layers.apply_rope(q, positions, cfg)
 
 
-def project_kv(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
-               cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: [B, T, D] -> (k, v): [B, T, Hkv, dh].  K is stored post-RoPE so that
-    cross-layer KV reuse (paper §2.1) inherits rotated keys unchanged."""
-    B, T, _ = x.shape
-    k = layers.linear_apply(params["wk"], x, cfg)
-    v = layers.linear_apply(params["wv"], x, cfg)
+def _finish_kv(params, k, v, positions, cfg: ModelConfig):
+    B, T = k.shape[:2]
     k = k.reshape(B, T, cfg.num_kv_heads, cfg.resolved_head_dim)
     v = v.reshape(B, T, cfg.num_kv_heads, cfg.resolved_head_dim)
     if cfg.qk_norm:
@@ -70,9 +76,94 @@ def project_kv(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
     return k, v
 
 
+def project_q(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+              cfg: ModelConfig, *, norm: Optional[Params] = None,
+              stats: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x: [B, T, D] -> q: [B, T, Hq, dh] (rope'd, qk-normed).
+
+    With ``norm``/``stats`` the RMSNorm elementwise phase fuses into the
+    projection's k-loop (x is un-normalized; stats is the injected
+    reduction).  Without them x must already be normalized."""
+    if norm is not None and layers.fuse_norm_linear(cfg):
+        q, _ = layers.linear_fused(_wq(params, cfg), x, cfg,
+                                   norm=norm, stats=stats)
+    else:
+        if norm is not None:
+            x = layers.norm_apply(norm, x, cfg, stats=stats)
+        q = layers.linear_apply(_wq(params, cfg), x, cfg)
+    return _finish_q(params, q, positions, cfg)
+
+
+def project_kv(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+               cfg: ModelConfig, *, norm: Optional[Params] = None,
+               stats: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, T, D] -> (k, v): [B, T, Hkv, dh].  K is stored post-RoPE so that
+    cross-layer KV reuse (paper §2.1) inherits rotated keys unchanged.
+    ``norm``/``stats`` fuse the norm prologue as in ``project_q``."""
+    wk, wv = _wkv(params, cfg)
+    if norm is not None and layers.fuse_norm_linear(cfg):
+        ki = cfg.kv_inner_dim
+        if "wqkv" in params:
+            ai = cfg.attn_inner_dim
+            wkv = layers.slice_linear(params["wqkv"], ai, ai + 2 * ki)
+            kv, _ = layers.linear_fused(wkv, x, cfg, norm=norm, stats=stats)
+            k, v = kv[..., :ki], kv[..., ki:]
+        else:
+            # legacy split weights: two prologue-fused calls (a merged
+            # view would re-concatenate the weights on every step)
+            k, _ = layers.linear_fused(wk, x, cfg, norm=norm, stats=stats)
+            v, _ = layers.linear_fused(wv, x, cfg, norm=norm, stats=stats)
+    else:
+        if norm is not None:
+            x = layers.norm_apply(norm, x, cfg, stats=stats)
+        k = layers.linear_apply(wk, x, cfg)
+        v = layers.linear_apply(wv, x, cfg)
+    return _finish_kv(params, k, v, positions, cfg)
+
+
+def project_qkv(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ModelConfig, *, norm: Optional[Params] = None,
+                stats: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single widened projection producing q, k, v in one k-loop pass —
+    with ``norm``/``stats``, the normalized activation lives only in VMEM
+    (Alg. 1 prologue fusion; composes with int4-BFP weights)."""
+    ai, ki = cfg.attn_inner_dim, cfg.kv_inner_dim
+    if "wqkv" not in params:                              # legacy split
+        q = project_q(params, x, positions, cfg, norm=norm, stats=stats)
+        k, v = project_kv(params, x, positions, cfg, norm=norm, stats=stats)
+        return q, k, v
+    if norm is not None and layers.fuse_norm_linear(cfg):
+        qkv, _ = layers.linear_fused(params["wqkv"], x, cfg,
+                                     norm=norm, stats=stats)
+    else:
+        if norm is not None:
+            x = layers.norm_apply(norm, x, cfg, stats=stats)
+        qkv = layers.linear_apply(params["wqkv"], x, cfg)
+    q = _finish_q(params, qkv[..., :ai], positions, cfg)
+    k, v = _finish_kv(params, qkv[..., ai:ai + ki], qkv[..., ai + ki:],
+                      positions, cfg)
+    return q, k, v
+
+
 def output_proj(params: Params, o: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     B, T = o.shape[:2]
     return layers.linear_apply(params["wo"], o.reshape(B, T, cfg.attn_inner_dim), cfg)
+
+
+def output_proj_fused(params: Params, o: jnp.ndarray, cfg: ModelConfig, *,
+                      residual: jnp.ndarray,
+                      gate_mul: Optional[jnp.ndarray] = None,
+                      emit_sq: bool = False):
+    """Fused o-projection epilogue: y = (o·Wo)·gate + residual in one
+    kernel, optionally emitting Σy² of the written residual stream — the
+    next block's norm reduction (incremental-reduction carry).  Returns
+    (new residual stream, Σy²|None)."""
+    B, T = o.shape[:2]
+    return layers.linear_fused(
+        params["wo"], o.reshape(B, T, cfg.attn_inner_dim), cfg,
+        residual=residual, gate_mul=gate_mul, emit_sq=emit_sq)
 
 
 # ---------------------------------------------------------------------------

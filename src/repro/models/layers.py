@@ -51,6 +51,45 @@ def linear_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarra
     return x @ params["w"]
 
 
+def slice_linear(params: Params, lo: int, hi: int) -> Params:
+    """Output-column slice of a (possibly quantized) linear param dict —
+    the legacy split views over merged wqkv / w_gu weights.  Per-group
+    scales index output columns, so slicing preserves the BFP grouping."""
+    if "w_int" in params:
+        return {"w_int": params["w_int"][:, lo:hi],
+                "scale": params["scale"][:, lo:hi]}
+    return {"w": params["w"][:, lo:hi]}
+
+
+def fuse_norm_linear(cfg: ModelConfig) -> bool:
+    """True when the fused norm-prologue linear pipeline dispatches: the
+    Pallas path is on and the norm is RMS (the carried reduction is a
+    single Σx²; layernorm's (μ, σ²) pair stays on the unfused path)."""
+    return cfg.use_kernels and cfg.fuse_linear and cfg.norm_type == "rmsnorm"
+
+
+def linear_fused(params: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                 norm: Optional[Params] = None,
+                 stats: Optional[jnp.ndarray] = None,
+                 glu: bool = False, act: Optional[str] = None,
+                 residual: Optional[jnp.ndarray] = None,
+                 gate_mul: Optional[jnp.ndarray] = None,
+                 emit_sq: bool = False):
+    """One fused-pipeline matmul (norm-prologue × weight × epilogue).
+
+    Callers pass the *un-normalized* activation plus the injected norm
+    reduction (``stats`` == mean(x²)); the elementwise phase runs inside
+    the kernel's k-loop.  Only dispatched when ``fuse_norm_linear(cfg)``
+    (callers keep the composed norm_apply + linear_apply path otherwise)."""
+    from repro.kernels import ops as kops
+    return kops.fused_linear(
+        params, x,
+        mean_sq=None if norm is None else stats,
+        gamma=None if norm is None else norm["gamma"],
+        eps=cfg.norm_eps, glu=glu, act=act, residual=residual,
+        gate_mul=gate_mul, emit_sq=emit_sq)
+
+
 # ---------------------------------------------------------------------------
 # Norms
 # ---------------------------------------------------------------------------
@@ -88,12 +127,16 @@ def norm_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig,
 
 
 def norm_stats(x: jnp.ndarray, cfg: ModelConfig):
-    """The reduction phase alone (paper Alg. 1 line 6)."""
+    """The reduction phase alone (paper Alg. 1 line 6).
+
+    Layernorm variance uses the two-pass mean((x−μ)²) form — the one-pass
+    E[x²]−μ² form cancels catastrophically for large-offset activations
+    and diverged from ``norm_apply``'s own unfused computation."""
     xf = x.astype(jnp.float32)
     if cfg.norm_type == "rmsnorm":
         return jnp.mean(xf * xf, axis=-1)
     mu = jnp.mean(xf, axis=-1)
-    var = jnp.mean(xf * xf, axis=-1) - mu * mu
+    var = jnp.mean(jnp.square(xf - mu[..., None]), axis=-1)
     return (mu, var)
 
 
@@ -169,26 +212,109 @@ def sinusoidal_positions(positions: jnp.ndarray, dim: int) -> jnp.ndarray:
 
 def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
     d_ff = d_ff or cfg.d_ff
-    k1, k2, k3 = jax.random.split(key, 3)
+    k1, k2 = jax.random.split(key, 2)
     glu = cfg.mlp_act in ("swiglu", "geglu")
-    p = {
-        "up": linear_init(k1, cfg.d_model, d_ff, cfg),
-        "down": linear_init(k2, d_ff, cfg.d_model, cfg),
-    }
     if glu:
-        p["gate"] = linear_init(k3, cfg.d_model, d_ff, cfg)
+        # widened [gate | up] projection: one matmul feeds the GLU epilogue
+        p = {"gu": linear_init(k1, cfg.d_model, 2 * d_ff, cfg)}
+    else:
+        p = {"up": linear_init(k1, cfg.d_model, d_ff, cfg)}
+    p["down"] = linear_init(k2, d_ff, cfg.d_model, cfg)
     return p
 
 
+def mlp_act_name(cfg: ModelConfig) -> Optional[str]:
+    return {"swiglu": "silu", "geglu": "gelu", "gelu_mlp": "gelu"}.get(
+        cfg.mlp_act, "gelu")
+
+
 def mlp_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
-    up = linear_apply(params["up"], x, cfg)
-    if cfg.mlp_act == "swiglu":
-        h = jax.nn.silu(linear_apply(params["gate"], x, cfg)) * up
-    elif cfg.mlp_act == "geglu":
-        h = jax.nn.gelu(linear_apply(params["gate"], x, cfg)) * up
+    """Dense MLP on an already-normalized activation (unfused path).
+    Accepts both the merged ``gu`` layout and legacy split gate/up."""
+    if "gu" in params:
+        gu = linear_apply(params["gu"], x, cfg)
+        F = gu.shape[-1] // 2
+        g, up = gu[..., :F], gu[..., F:]
+        h = (jax.nn.silu(g) if cfg.mlp_act == "swiglu"
+             else jax.nn.gelu(g)) * up
     else:
-        h = jax.nn.gelu(up)
+        up = linear_apply(params["up"], x, cfg)
+        if cfg.mlp_act == "swiglu":
+            h = jax.nn.silu(linear_apply(params["gate"], x, cfg)) * up
+        elif cfg.mlp_act == "geglu":
+            h = jax.nn.gelu(linear_apply(params["gate"], x, cfg)) * up
+        else:
+            h = jax.nn.gelu(up)
     return linear_apply(params["down"], h, cfg)
+
+
+def mlp_apply_fused(params: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                    norm: Params, stats: jnp.ndarray,
+                    residual: Optional[jnp.ndarray] = None,
+                    gate_mul: Optional[jnp.ndarray] = None,
+                    emit_sq: bool = False):
+    """Fused-pipeline dense MLP on the *un-normalized* activation:
+    norm-prologue × widened [gate|up] × GLU epilogue, then the down
+    projection with the gate-multiplier/residual/Σy² epilogue.  The
+    normalized activation and the GLU intermediate never round-trip HBM
+    separately from their matmuls.  Returns (y_or_residual_out, Σy²|None).
+    """
+    glu = "gu" in params
+    h, _ = linear_fused(params["gu"] if glu else params["up"], x, cfg,
+                        norm=norm, stats=stats, glu=glu,
+                        act=mlp_act_name(cfg))
+    return linear_fused(params["down"], h, cfg, residual=residual,
+                        gate_mul=gate_mul, emit_sq=emit_sq)
+
+
+def mlp_fusable(params: Params) -> bool:
+    """Dense-MLP param dicts the fused pipeline understands: merged
+    [gate|up] or plain up/down.  MoE keeps its scatter-dispatch path and
+    legacy *split* GLU params fall back to the composed ops (run them
+    through ``merge_legacy_linear_params`` to enable fusion)."""
+    return "gu" in params or ("up" in params and "down" in params
+                              and "gate" not in params)
+
+
+def _concat_linears(parts) -> Params:
+    """Column-concat linear param dicts.  All-quantized parts concat in
+    the code domain; a mixed dense/int4 list (quantize_params' size
+    threshold can split a legacy wq/wk/wv trio) is dequantized to a dense
+    merge — correctness over storage for that corner."""
+    if all("w_int" in p for p in parts) and len(
+            {p["w_int"].shape[0] for p in parts}) == 1:
+        return {"w_int": jnp.concatenate([p["w_int"] for p in parts], 1),
+                "scale": jnp.concatenate([p["scale"] for p in parts], 1)}
+    from repro.quant import dequantize
+
+    dense = [p for p in parts if "w" in p]
+    k = dense[0]["w"].shape[0] if dense else parts[0]["w_int"].shape[0]
+    dt = dense[0]["w"].dtype if dense else jnp.float32
+    ws = [p["w"] if "w" in p
+          else dequantize(p["w_int"], p["scale"], k=k).astype(dt)
+          for p in parts]
+    return {"w": jnp.concatenate(ws, axis=1)}
+
+
+def merge_legacy_linear_params(params: Params) -> Params:
+    """Weight-merge shim: convert legacy split projections — attention
+    {wq, wk, wv} and GLU-MLP {gate, up} — into the merged ``wqkv`` /
+    ``gu`` layouts the fused pipeline uses.  Works on dense and
+    int4-quantized trees (checkpoints from either era load fine)."""
+    def walk(tree):
+        if not isinstance(tree, dict):
+            return tree
+        out = {k: walk(v) for k, v in tree.items()}
+        if {"wq", "wk", "wv"} <= set(out):
+            out["wqkv"] = _concat_linears(
+                [out.pop("wq"), out.pop("wk"), out.pop("wv")])
+        if {"gate", "up", "down"} <= set(out) and isinstance(
+                out["gate"], dict) and ("w" in out["gate"]
+                                        or "w_int" in out["gate"]):
+            out["gu"] = _concat_linears([out.pop("gate"), out.pop("up")])
+        return out
+
+    return walk(params)
 
 
 # ---------------------------------------------------------------------------

@@ -74,7 +74,11 @@ def _embed_inputs(params: Params, batch: Dict[str, jnp.ndarray],
 def _apply_stack(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
                  cfg: ModelConfig, rng: Optional[jax.Array], train: bool,
                  collect_cache: bool
-                 ) -> Tuple[jnp.ndarray, Dict, Optional[Dict]]:
+                 ) -> Tuple[jnp.ndarray, Dict, Optional[Dict],
+                            Optional[jnp.ndarray]]:
+    """Returns (x, stats, cache, carried_sq) — the trailing element is the
+    fused pipeline's incremental-reduction carry of the final residual
+    stream (mean-square per token; feeds the final norm for free)."""
     stack = params["stack"]
     S = cfg.num_stages
     r0 = jax.random.fold_in(rng, 0) if rng is not None else None
@@ -86,7 +90,7 @@ def _apply_stack(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
 
     if cfg.remat:
         stage0_fn = jax.checkpoint(stage0_fn)
-    x, view, stats, cache0 = stage0_fn(stack["stage0"], x)
+    x, view, stats, cache0, sq = stage0_fn(stack["stage0"], x)
     gates = stats.pop("attn_gate", None)    # [nA_stage, B, T] or None
     cache: Optional[Dict] = {"stage0": cache0} if collect_cache else None
 
@@ -95,7 +99,7 @@ def _apply_stack(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
                 if rng is not None else None)
 
         def body(carry, xs):
-            x, view = carry
+            x, view, sq = carry
             x = hint(x, "residual")
             if view is not None:
                 view = (hint(view[0], "kv_view"), hint(view[1], "kv_view"))
@@ -103,19 +107,20 @@ def _apply_stack(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
                 sp, k = xs
             else:
                 sp, k = xs, None
-            x, view, s, c = transformer.stage_forward(
-                sp, x, view, positions, cfg, k, train, collect_cache, False)
+            x, view, s, c, sq = transformer.stage_forward(
+                sp, x, view, positions, cfg, k, train, collect_cache, False,
+                carried_sq=sq)
             g = s.pop("attn_gate", None)
             if view is not None:
                 view = (hint(view[0], "kv_view"), hint(view[1], "kv_view"))
-            return (hint(x, "residual"), view), (s, c, g)
+            return (hint(x, "residual"), view, sq), (s, c, g)
 
         if cfg.remat:
             body = jax.checkpoint(body)
         if cfg.scan_layers:
             xs = (stack["stages"], keys) if keys is not None else stack["stages"]
-            (x, view), (s_scan, c_scan, g_scan) = jax.lax.scan(
-                body, (x, view), xs)
+            (x, view, sq), (s_scan, c_scan, g_scan) = jax.lax.scan(
+                body, (x, view, sq), xs)
             stats = jax.tree_util.tree_map(lambda a, b: a + b.sum(axis=0),
                                            stats, s_scan)
             if collect_cache:
@@ -129,7 +134,7 @@ def _apply_stack(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
             for i in range(S - 1):
                 sp = jax.tree_util.tree_map(lambda l: l[i], stack["stages"])
                 xs = (sp, keys[i]) if keys is not None else sp
-                (x, view), (s, c, g) = body((x, view), xs)
+                (x, view, sq), (s, c, g) = body((x, view, sq), xs)
                 stats = jax.tree_util.tree_map(lambda a, b: a + b, stats, s)
                 c_list.append(c)
                 g_list.append(g)
@@ -144,7 +149,7 @@ def _apply_stack(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
             gates = gates.reshape((-1,) + gates.shape[-2:])
     if gates is not None:
         stats["attn_gate"] = gates
-    return x, stats, cache
+    return x, stats, cache, sq
 
 
 # ---------------------------------------------------------------------------
@@ -201,8 +206,8 @@ def train_loss(params: Params, batch: Dict[str, jnp.ndarray],
         B, T = batch["embeds"].shape[:2]
     positions = _positions(batch, B, T, cfg)
     x = _embed_inputs(params, batch, positions, cfg)
-    x, stats, _ = _apply_stack(params, x, positions, cfg, rng, True, False)
-    x = layers.norm_apply(params["final_norm"], x, cfg)
+    x, stats, _, sq = _apply_stack(params, x, positions, cfg, rng, True, False)
+    x = layers.norm_apply(params["final_norm"], x, cfg, stats=sq)
 
     labels = batch["labels"]
     weights = batch.get("loss_weights",
@@ -253,8 +258,9 @@ def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
         B, T = batch["embeds"].shape[:2]
     positions = _positions(batch, B, T, cfg)
     x = _embed_inputs(params, batch, positions, cfg)
-    x, stats, cache = _apply_stack(params, x, positions, cfg, None, False, True)
-    x = layers.norm_apply(params["final_norm"], x, cfg)
+    x, stats, cache, sq = _apply_stack(params, x, positions, cfg, None,
+                                       False, True)
+    x = layers.norm_apply(params["final_norm"], x, cfg, stats=sq)
     if last_index is None:
         xl = x[:, -1:, :]
     else:
@@ -323,7 +329,7 @@ def decode_step(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
     x = _embed_inputs(params, batch, pos, cfg)
 
     stack = params["stack"]
-    x, kv_prev, c0, stats = transformer.stage_decode(
+    x, kv_prev, c0, stats, sq = transformer.stage_decode(
         stack["stage0"], cache["stage0"], x, None, t, pos, cfg)
     g0 = stats.pop("attn_gate", None)
     gates = g0                      # [nA, B] or None (attention-free stage)
@@ -331,16 +337,16 @@ def decode_step(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
 
     if cfg.num_stages > 1:
         def body(carry, xs):
-            x, kv_prev = carry
+            x, kv_prev, sq = carry
             sp, ce = xs
-            x, kv_prev, c, s = transformer.stage_decode(
-                sp, ce, x, kv_prev, t, pos, cfg)
+            x, kv_prev, c, s, sq = transformer.stage_decode(
+                sp, ce, x, kv_prev, t, pos, cfg, carried_sq=sq)
             g = s.pop("attn_gate", None)
-            return (x, kv_prev), (c, s, g)
+            return (x, kv_prev, sq), (c, s, g)
 
         if cfg.scan_layers:
-            (x, kv_prev), (cs, s_scan, g_scan) = jax.lax.scan(
-                body, (x, kv_prev), (stack["stages"], cache["stages"]))
+            (x, kv_prev, sq), (cs, s_scan, g_scan) = jax.lax.scan(
+                body, (x, kv_prev, sq), (stack["stages"], cache["stages"]))
             new_cache["stages"] = cs
             stats = jax.tree_util.tree_map(lambda a, b: a + b.sum(axis=0),
                                            stats, s_scan)
@@ -352,7 +358,7 @@ def decode_step(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
                 sl = lambda l: l[i]
                 xs = (jax.tree_util.tree_map(sl, stack["stages"]),
                       jax.tree_util.tree_map(sl, cache["stages"]))
-                (x, kv_prev), (c, s, g) = body((x, kv_prev), xs)
+                (x, kv_prev, sq), (c, s, g) = body((x, kv_prev, sq), xs)
                 stats = jax.tree_util.tree_map(lambda a, b: a + b, stats, s)
                 c_list.append(c)
                 g_list.append(g)
@@ -367,7 +373,9 @@ def decode_step(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
 
     if gates is not None:
         stats["attn_gate"] = gates
-    x = layers.norm_apply(params["final_norm"], x, cfg)
+    # the last block's fused epilogue already produced the final norm's
+    # reduction (incremental-reduction carry)
+    x = layers.norm_apply(params["final_norm"], x, cfg, stats=sq)
     logits = layers.unembed(params["embed"], params.get("lm_head"), x, cfg)
     return logits[:, 0], new_cache, stats
 
@@ -415,7 +423,7 @@ def paged_decode_step(params: Params, store: Dict,
     stack = params["stack"]
     nA_stage = sum(1 for k in range(cfg.stage_len)
                    if cfg.block_kind(k) != MAMBA)
-    x, kv_prev, s0 = transformer.stage_decode_paged(
+    x, kv_prev, s0, sq = transformer.stage_decode_paged(
         stack["stage0"], x, None, t, pos, cfg, paged_ctx,
         jnp.int32(0))
     gates = s0.pop("attn_gate")
@@ -424,18 +432,19 @@ def paged_decode_step(params: Params, store: Dict,
 
     if cfg.num_stages > 1:
         def body(carry, xs):
-            x, kv_prev = carry
+            x, kv_prev, sq = carry
             sp, si = xs
-            x, kv_prev, s = transformer.stage_decode_paged(
-                sp, x, kv_prev, t, pos, cfg, paged_ctx, si * nA_stage)
+            x, kv_prev, s, sq = transformer.stage_decode_paged(
+                sp, x, kv_prev, t, pos, cfg, paged_ctx, si * nA_stage,
+                carried_sq=sq)
             g = s.pop("attn_gate")
             kt = s.pop("kv_token")
-            return (x, kv_prev), (s, g, kt)
+            return (x, kv_prev, sq), (s, g, kt)
 
         idxs = jnp.arange(1, cfg.num_stages, dtype=jnp.int32)
         if cfg.scan_layers:
-            (x, kv_prev), (s_scan, g_scan, kt_scan) = jax.lax.scan(
-                body, (x, kv_prev), (stack["stages"], idxs))
+            (x, kv_prev, sq), (s_scan, g_scan, kt_scan) = jax.lax.scan(
+                body, (x, kv_prev, sq), (stack["stages"], idxs))
             stats = jax.tree_util.tree_map(lambda a, b: a + b.sum(axis=0),
                                            stats, s_scan)
             gates = jnp.concatenate([gates[None], g_scan], axis=0)
@@ -445,7 +454,8 @@ def paged_decode_step(params: Params, store: Dict,
             g_list, k_list, v_list = [], [], []
             for i in range(cfg.num_stages - 1):
                 sp = jax.tree_util.tree_map(lambda l: l[i], stack["stages"])
-                (x, kv_prev), (s, g, kt) = body((x, kv_prev), (sp, idxs[i]))
+                (x, kv_prev, sq), (s, g, kt) = body((x, kv_prev, sq),
+                                                    (sp, idxs[i]))
                 stats = jax.tree_util.tree_map(lambda a, b: a + b, stats, s)
                 g_list.append(g[None])
                 k_list.append(kt[0][None])
@@ -460,6 +470,6 @@ def paged_decode_step(params: Params, store: Dict,
     store = paged_mod.commit_decode(store, buf_k, buf_v, gates, t,
                                     block_table, fill, fill > 0, cfg)
     stats["attn_gate"] = gates
-    x = layers.norm_apply(params["final_norm"], x, cfg)
+    x = layers.norm_apply(params["final_norm"], x, cfg, stats=sq)
     logits = layers.unembed(params["embed"], params.get("lm_head"), x, cfg)
     return logits[:, 0], store, stats

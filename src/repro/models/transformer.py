@@ -108,11 +108,16 @@ def _ffn_inner(cfg: ModelConfig, is_moe: bool):
 def stage_forward(stage_params: Params, x: jnp.ndarray,
                   view: Optional[Tuple], positions: jnp.ndarray,
                   cfg: ModelConfig, rng: Optional[jax.Array], train: bool,
-                  collect_cache: bool, is_stage0: bool
-                  ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict, Dict]:
-    """Apply one super-block.  Returns (x, view, stats, cache); stats
-    carries ``attn_gate`` [n_attn_in_stage, B, T] — the per-layer execution
-    gates (the paged KV engine packs prefill entries from them)."""
+                  collect_cache: bool, is_stage0: bool,
+                  carried_sq: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict, Dict,
+                             Optional[jnp.ndarray]]:
+    """Apply one super-block.  Returns (x, view, stats, cache, carried_sq);
+    stats carries ``attn_gate`` [n_attn_in_stage, B, T] — the per-layer
+    execution gates (the paged KV engine packs prefill entries from them).
+    ``carried_sq`` threads the fused-epilogue Σy²/D of the residual stream
+    between blocks (the incremental-reduction carry): each fused block's
+    norm reduction is paid for by the previous block's epilogue."""
     stats = _ZERO_STATS()
     cache: Dict[str, Any] = {}
     gates: List[jnp.ndarray] = []
@@ -126,7 +131,9 @@ def stage_forward(stage_params: Params, x: jnp.ndarray,
 
         if kind == MAMBA:
             x, states, s = skip_block.routed_ssm(
-                bp["mixer"], x, cfg, rng=r_mix, train=train)
+                bp["mixer"], x, cfg, rng=r_mix, train=train,
+                carried_sq=carried_sq)
+            carried_sq = None            # SSM blocks don't emit the carry
             stats = _acc_stats(stats, s, cfg.skip.route_ssm)
             if collect_cache:
                 cache[f"pos{k}"] = {"conv_x": states[0][0],
@@ -138,7 +145,8 @@ def stage_forward(stage_params: Params, x: jnp.ndarray,
             # cross-layer reuse chain only threads through matching kinds.
             x, view, s = skip_block.routed_attention(
                 bp["mixer"], x, view, positions, cfg, rng=r_mix, train=train,
-                window=window)
+                window=window, carried_sq=carried_sq)
+            carried_sq = s.pop("res_sq", None)
             gates.append(s["attn_gate"])
             stats = _acc_stats(stats, s, cfg.skip.route_attention)
             if collect_cache:
@@ -152,11 +160,12 @@ def stage_forward(stage_params: Params, x: jnp.ndarray,
         if "ffn" in bp:
             x, s = skip_block.routed_mlp(
                 bp["ffn"], x, cfg, inner_fn=_ffn_inner(cfg, is_moe),
-                rng=r_ffn, train=train)
+                rng=r_ffn, train=train, carried_sq=carried_sq)
+            carried_sq = s.pop("res_sq", None)
             stats = _acc_stats(stats, s, cfg.skip.route_mlp)
     if gates:
         stats["attn_gate"] = jnp.stack(gates)
-    return x, view, stats, cache
+    return x, view, stats, cache, carried_sq
 
 
 def _ring_from_linear(kv: jnp.ndarray, W: int) -> jnp.ndarray:
@@ -183,13 +192,15 @@ def ring_positions(t: jnp.ndarray, W: int) -> jnp.ndarray:
 
 def stage_decode(stage_params: Params, cache: Dict, x: jnp.ndarray,
                  kv_prev: Optional[Tuple], t: jnp.ndarray,
-                 positions: jnp.ndarray, cfg: ModelConfig
-                 ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict, Dict]:
+                 positions: jnp.ndarray, cfg: ModelConfig,
+                 carried_sq: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict, Dict,
+                            Optional[jnp.ndarray]]:
     """One super-block, one token per sequence.  ``t``: [B] int32 (or scalar,
-    broadcast — lock-step decode).  Returns (x, kv_prev, new_cache, stats);
-    stats carries ``attn_gate`` [n_attn_in_stage, B] — the per-layer
-    execution gates the serve engine logs for measured KV-storage
-    accounting."""
+    broadcast — lock-step decode).  Returns (x, kv_prev, new_cache, stats,
+    carried_sq); stats carries ``attn_gate`` [n_attn_in_stage, B] — the
+    per-layer execution gates the serve engine logs for measured KV-storage
+    accounting.  ``carried_sq`` is the fused-epilogue reduction carry."""
     stats = _ZERO_STATS()
     new_cache: Dict[str, Any] = {}
     gates: List[jnp.ndarray] = []
@@ -202,14 +213,17 @@ def stage_decode(stage_params: Params, cache: Dict, x: jnp.ndarray,
         if kind == MAMBA:
             x, states, s = skip_block.routed_ssm_decode(
                 bp["mixer"], x, cfg, conv_state=(ce["conv_x"], ce["conv_bc"]),
-                ssm_state=ce["ssm"])
+                ssm_state=ce["ssm"], carried_sq=carried_sq)
+            carried_sq = None
             new_cache[f"pos{k}"] = {"conv_x": states[0][0],
                                     "conv_bc": states[0][1],
                                     "ssm": states[1]}
             stats = _acc_stats(stats, s, cfg.skip.route_ssm)
         elif kind == LOCAL and ce["k"].shape[1] == cfg.window_size:
             x, kc, vc, kv_prev_l, s = _ring_attention_decode(
-                bp["mixer"], x, ce["k"], ce["v"], t, kv_prev, positions, cfg)
+                bp["mixer"], x, ce["k"], ce["v"], t, kv_prev, positions, cfg,
+                carried_sq=carried_sq)
+            carried_sq = s.pop("res_sq", None)
             new_cache[f"pos{k}"] = {"k": kc, "v": vc}
             kv_prev = kv_prev_l
             gates.append(s["attn_gate"])
@@ -218,25 +232,30 @@ def stage_decode(stage_params: Params, cache: Dict, x: jnp.ndarray,
             window = cfg.window_size if kind == LOCAL else 0
             x, kc, vc, kv_prev, s = skip_block.routed_attention_decode(
                 bp["mixer"], x, ce["k"], ce["v"], t, kv_prev, positions, cfg,
-                window=window)
+                window=window, carried_sq=carried_sq)
+            carried_sq = s.pop("res_sq", None)
             new_cache[f"pos{k}"] = {"k": kc, "v": vc}
             gates.append(s["attn_gate"])
             stats = _acc_stats(stats, s, cfg.skip.route_attention)
 
         if "ffn" in bp:
             x, s = skip_block.routed_mlp_decode(
-                bp["ffn"], x, cfg, inner_fn=_ffn_inner(cfg, is_moe))
+                bp["ffn"], x, cfg, inner_fn=_ffn_inner(cfg, is_moe),
+                carried_sq=carried_sq)
+            carried_sq = s.pop("res_sq", None)
             stats = _acc_stats(stats, s, cfg.skip.route_mlp)
     if gates:
         stats["attn_gate"] = jnp.stack(gates)
-    return x, kv_prev, new_cache, stats
+    return x, kv_prev, new_cache, stats, carried_sq
 
 
 def stage_decode_paged(stage_params: Params, x: jnp.ndarray,
                        kv_prev: Optional[Tuple], t: jnp.ndarray,
                        positions: jnp.ndarray, cfg: ModelConfig,
-                       paged: Dict, a_base: jnp.ndarray
-                       ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict]:
+                       paged: Dict, a_base: jnp.ndarray,
+                       carried_sq: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict,
+                                  Optional[jnp.ndarray]]:
     """One super-block against the paged KV store (decode, one token per
     sequence).  Requires ``kvcache.paged.can_page(cfg)`` — every mixer is
     global attention, so there is no per-stage dense cache: reads resolve
@@ -244,8 +263,9 @@ def stage_decode_paged(stage_params: Params, x: jnp.ndarray,
     into per-layer token views the caller commits once per step.
 
     ``a_base``: attention-layer index of this stage's first layer (traced).
-    Returns (x, kv_prev, stats) with stats['attn_gate'] [nA_stage, B] and
-    stats['kv_token'] = (k_t, v_t) [nA_stage, B, Hkv, dh] stacks."""
+    Returns (x, kv_prev, stats, carried_sq) with stats['attn_gate']
+    [nA_stage, B] and stats['kv_token'] = (k_t, v_t) [nA_stage, B, Hkv, dh]
+    stacks."""
     stats = _ZERO_STATS()
     gates: List[jnp.ndarray] = []
     k_toks: List[jnp.ndarray] = []
@@ -256,22 +276,25 @@ def stage_decode_paged(stage_params: Params, x: jnp.ndarray,
         assert kind == ATTN, "paged decode requires an all-global-attn stack"
         x, kv_prev, s = skip_block.routed_attention_decode_paged(
             bp["mixer"], x, t, kv_prev, positions, cfg,
-            paged=paged, layer=a_base + len(gates))
+            paged=paged, layer=a_base + len(gates), carried_sq=carried_sq)
+        carried_sq = s.pop("res_sq", None)
         gates.append(s.pop("attn_gate"))
         k_toks.append(kv_prev[0][:, 0])
         v_toks.append(kv_prev[1][:, 0])
         stats = _acc_stats(stats, s, cfg.skip.route_attention)
         if "ffn" in bp:
             x, s = skip_block.routed_mlp_decode(
-                bp["ffn"], x, cfg, inner_fn=_ffn_inner(cfg, cfg.is_moe_layer(k)))
+                bp["ffn"], x, cfg, inner_fn=_ffn_inner(cfg, cfg.is_moe_layer(k)),
+                carried_sq=carried_sq)
+            carried_sq = s.pop("res_sq", None)
             stats = _acc_stats(stats, s, cfg.skip.route_mlp)
     stats["attn_gate"] = jnp.stack(gates)
     stats["kv_token"] = (jnp.stack(k_toks), jnp.stack(v_toks))
-    return x, kv_prev, stats
+    return x, kv_prev, stats, carried_sq
 
 
 def _ring_attention_decode(p: Params, x, k_ring, v_ring, t, kv_prev,
-                           positions, cfg: ModelConfig):
+                           positions, cfg: ModelConfig, carried_sq=None):
     """Sliding-window decode against a ring buffer cache [B, W, H, d].
     ``t``: [B] per-sequence positions (scalar broadcasts)."""
     from repro.core import kv_reuse, routing
@@ -280,14 +303,20 @@ def _ring_attention_decode(p: Params, x, k_ring, v_ring, t, kv_prev,
     W = cfg.window_size
     t = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t, jnp.int32)), (B,))
     routed = cfg.skip.enabled and cfg.skip.route_attention
-    logits, nstats = skip_block._router_and_stats(p, x, cfg, routed)
+    logits, nstats = skip_block._router_and_stats(p, x, cfg, routed,
+                                                  carried_sq)
     gate, p_keep = skip_block._gate(
         logits[:, 0] if logits is not None else None, None, cfg, False, (B,),
         routed)
     inner = p["inner"]
-    xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
-    q = attn_mod.project_q(inner, xn, positions, cfg)
-    k_new, v_new = attn_mod.project_kv(inner, xn, positions, cfg)
+    fuse = layers.fuse_norm_linear(cfg)
+    if fuse:
+        q, k_new, v_new = attn_mod.project_qkv(
+            inner, x, positions, cfg, norm=p["norm"], stats=nstats)
+    else:
+        xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+        q = attn_mod.project_q(inner, xn, positions, cfg)
+        k_new, v_new = attn_mod.project_kv(inner, xn, positions, cfg)
     if routed and cfg.skip.kv_reuse:
         k_t, v_t = kv_reuse.merge_token_view(kv_prev, k_new, v_new, gate)
     else:
@@ -310,11 +339,9 @@ def _ring_attention_decode(p: Params, x, k_ring, v_ring, t, kv_prev,
         q_positions=q_pos, causal=True, window=0,
         chunk=W, softmax_scale=None,
         kv_positions=eff_pos)
-    y = attn_mod.output_proj(inner, o, cfg)
-    if routed:
-        y = y * gate.astype(y.dtype)[:, None, None]
-    x = x + y
     stats = routing.router_stats(p_keep, gate, cfg) if routed else {
         "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    x = skip_block._decode_output_epilogue(inner, o, x, gate, routed, fuse,
+                                           cfg, stats)
     stats["attn_gate"] = gate
     return x, k_ring, v_ring, (k_t, v_t), stats

@@ -21,12 +21,21 @@ INT4_MIN, INT4_MAX = -8, 7
 
 def quantize_rtn(w: jnp.ndarray, group_size: int = 128,
                  pow2_scales: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """w: [K, N] -> (codes int8 in [-8, 7] of shape [K, N],
-    scales fp32 [K/G, N])."""
+    """w: [K, N] -> (codes int8 in [-8, 7] of shape [ceil(K/G)·G, N],
+    scales fp32 [ceil(K/G), N]).
+
+    When K is not a group multiple the final group is zero-padded: the
+    padding rows can never raise a group's amax (masked-amax equivalent —
+    |0| <= any real amax) and the zero codes contribute nothing to the
+    accumulation, so matmuls just zero-pad the activation's K to match
+    (``kernels/ops.int4_matmul`` / ``fused_linear`` do this)."""
     K, N = w.shape
     G = min(group_size, K)
-    assert K % G == 0, (K, G)
-    wg = w.astype(jnp.float32).reshape(K // G, G, N)
+    Kp = -(-K // G) * G
+    wf = w.astype(jnp.float32)
+    if Kp != K:
+        wf = jnp.pad(wf, ((0, Kp - K), (0, 0)))
+    wg = wf.reshape(Kp // G, G, N)
     amax = jnp.abs(wg).max(axis=1)                       # [K/G, N]
     scale = amax / INT4_MAX
     if pow2_scales:
@@ -34,27 +43,34 @@ def quantize_rtn(w: jnp.ndarray, group_size: int = 128,
         scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(scale, 1e-12))))
     scale = jnp.where(amax == 0, 1.0, scale)
     codes = jnp.clip(jnp.round(wg / scale[:, None, :]), INT4_MIN, INT4_MAX)
-    return codes.reshape(K, N).astype(jnp.int8), scale
+    return codes.reshape(Kp, N).astype(jnp.int8), scale
 
 
-def dequantize(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    K, N = codes.shape
-    G = K // scale.shape[0]
-    wg = codes.astype(jnp.float32).reshape(K // G, G, N) * scale[:, None, :]
-    return wg.reshape(K, N)
+def dequantize(codes: jnp.ndarray, scale: jnp.ndarray,
+               k: int = 0) -> jnp.ndarray:
+    """codes: [Kw, N] (possibly group-padded) -> [k or Kw, N] fp32."""
+    Kw, N = codes.shape
+    G = Kw // scale.shape[0]
+    wg = codes.astype(jnp.float32).reshape(Kw // G, G, N) * scale[:, None, :]
+    w = wg.reshape(Kw, N)
+    return w[:k] if k else w
 
 
 def quantize_params(params: Params, group_size: int = 128,
                     pow2_scales: bool = True,
                     min_size: int = 1 << 16) -> Params:
     """Replace every 2-D linear weight leaf named ``w`` with
-    {w_int, scale} (large matrices only — routers/norms stay fp)."""
+    {w_int, scale} (large matrices only — routers/norms stay fp).
+
+    Weights whose input dim is not a group multiple are group-padded by
+    ``quantize_rtn`` (the matmul wrappers zero-pad the activation), so no
+    eligible weight is silently skipped."""
     def walk(tree):
         if isinstance(tree, dict):
             out = {}
             for k, v in tree.items():
                 if (k == "w" and hasattr(v, "ndim") and v.ndim == 2
-                        and v.size >= min_size and v.shape[0] % group_size == 0):
+                        and v.size >= min_size):
                     codes, scale = quantize_rtn(v, group_size, pow2_scales)
                     out["w_int"] = codes
                     out["scale"] = scale

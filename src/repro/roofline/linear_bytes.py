@@ -1,0 +1,151 @@
+"""HBM byte accounting for the routed block's *linear pipeline*
+(paper Alg. 1 / §4.2), in the style of ``kvcache/layout.py``'s
+transaction model: an explicit per-op tally of what the dispatch
+strategy makes the memory system move, so the fusion win is measured
+rather than asserted.
+
+Two dispatch strategies over identical weights:
+
+  * **unfused** — the composed op-by-op path: the norm reduction pass
+    reads x; ``norm_apply`` reads x and writes the normalized activation;
+    each of q/k/v (and gate/up) re-reads it; the GLU combine round-trips
+    both halves; the submodule output y round-trips before the residual
+    add re-reads x and writes the new stream; the next block's reduction
+    reads it again.
+  * **fused** — the ``kernels/fused_linear.py`` pipeline: one widened
+    qkv (and [gate|up]) matmul reads x once with the norm's elementwise
+    phase in its k-loop; the GLU epilogue keeps both halves in VMEM; the
+    o/down projection folds gate · y + x in its epilogue and emits Σy²,
+    so the next block's reduction pass disappears.
+
+Weight traffic is identical under both strategies (every weight is read
+exactly once per step) and reported separately: the fusion's win is the
+eliminated *activation* round-trips, which is what the ≥20 % acceptance
+gate is asserted on; total bytes (weights included) must still be
+strictly below the unfused dispatch.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import MAMBA, ModelConfig
+
+STAT_BYTES = 4          # fp32 reduction carry / Σy² emission
+
+
+def _weight_bytes(cfg: ModelConfig, k: int, n: int) -> float:
+    """One [k, n] linear's HBM weight bytes (int4 codes at 4 bit + fp32
+    per-group scales when the quant path is on, else activation dtype)."""
+    if cfg.quant.enabled:
+        groups = -(-k // cfg.quant.group_size)
+        return k * n * 0.5 + groups * n * STAT_BYTES
+    return k * n * 2.0
+
+
+def linear_pipeline_bytes(cfg: ModelConfig, batch: int, *,
+                          fused: bool) -> Dict[str, float]:
+    """Modeled HBM bytes for ONE decode step's linear pipeline.
+
+    batch: decode rows (M).  Attention-core and KV-cache traffic is out of
+    scope (identical under both strategies — see kvcache/layout.py for
+    that model); Mamba mixers are skipped (their in/out projections are
+    not routed through the fused pipeline yet)."""
+    M = batch
+    D = cfg.d_model
+    AI, KI, F = cfg.attn_inner_dim, cfg.kv_inner_dim, cfg.d_ff
+    a = 2.0                                   # activation bytes (bf16)
+    glu = cfg.mlp_act in ("swiglu", "geglu")
+
+    ops: Dict[str, float] = {}
+
+    def add(name: str, elems: float, bytes_per: float = a):
+        ops[name] = ops.get(name, 0.0) + elems * bytes_per
+
+    weight = 0.0
+    for layer in range(cfg.num_layers):
+        kind = cfg.block_kind(layer)
+        if kind == MAMBA:
+            continue
+        moe = cfg.is_moe_layer(layer)
+        # ---- attention block --------------------------------------------
+        weight += _weight_bytes(cfg, D, AI + 2 * KI)      # wqkv
+        weight += _weight_bytes(cfg, AI, D)               # wo
+        add("router_read_x", M * D)                       # logits (+stats)
+        if fused:
+            add("qkv_read_x", M * D)                      # norm in k-loop
+            add("qkv_write", M * (AI + 2 * KI))
+            add("oproj_read_o", M * AI)
+            add("oproj_read_residual", M * D)
+            add("oproj_write_x", M * D)
+            add("sq_emit", M, STAT_BYTES)
+        else:
+            add("norm_read_x", M * D)
+            add("norm_write_xn", M * D)
+            add("qkv_read_xn", 3 * M * D)                 # separate q/k/v
+            add("qkv_write", M * (AI + 2 * KI))
+            add("oproj_read_o", M * AI)
+            add("oproj_write_y", M * D)
+            add("residual_read_y", M * D)
+            add("residual_read_x", M * D)
+            add("residual_write_x", M * D)
+
+        # ---- FFN block --------------------------------------------------
+        if not cfg.d_ff or moe:
+            # MoE keeps its scatter dispatch under both strategies; its
+            # identical traffic cancels out of the comparison.
+            continue
+        nw = 2 * F if glu else F
+        weight += _weight_bytes(cfg, D, nw)               # [gate|up] / up
+        weight += _weight_bytes(cfg, F, D)                # down
+        add("router_read_x", M * D)
+        if fused:
+            add("gu_read_x", M * D)
+            add("h_write", M * F)                         # GLU in epilogue
+            add("down_read_h", M * F)
+            add("down_read_residual", M * D)
+            add("down_write_x", M * D)
+            add("sq_emit", M, STAT_BYTES)
+        else:
+            add("norm_read_x", M * D)
+            add("norm_write_xn", M * D)
+            # one read: the unfused dispatch also uses the merged [gate|up]
+            # weight (a single matmul) — the legacy split-weight dispatch
+            # would charge 2 reads here
+            add("gu_read_xn", M * D)
+            if glu:
+                add("g_u_write", 2 * M * F)
+                add("glu_read_g_u", 2 * M * F)
+            else:
+                add("g_u_write", M * F)
+                add("glu_read_g_u", M * F)
+            add("h_write", M * F)
+            add("down_read_h", M * F)
+            add("down_write_y", M * D)
+            add("residual_read_y", M * D)
+            add("residual_read_x", M * D)
+            add("residual_write_x", M * D)
+
+    act = sum(ops.values())
+    return {
+        "batch": M,
+        "fused": fused,
+        "weight_bytes": weight,
+        "activation_bytes": act,
+        "total_bytes": weight + act,
+        "breakdown": ops,
+    }
+
+
+def fusion_report(cfg: ModelConfig, batch: int) -> Dict[str, object]:
+    """Side-by-side fused/unfused accounting + the drop fractions the
+    bench records and CI asserts on."""
+    un = linear_pipeline_bytes(cfg, batch, fused=False)
+    fu = linear_pipeline_bytes(cfg, batch, fused=True)
+    act_drop = 1.0 - fu["activation_bytes"] / max(un["activation_bytes"], 1.0)
+    tot_drop = 1.0 - fu["total_bytes"] / max(un["total_bytes"], 1.0)
+    return {
+        "unfused": un,
+        "fused": fu,
+        "activation_bytes_drop_frac": act_drop,
+        "total_bytes_drop_frac": tot_drop,
+    }

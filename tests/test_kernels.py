@@ -124,12 +124,43 @@ def test_router_stats_kernel(T, D):
 
 
 @pytest.mark.parametrize("M,K,N", [(64, 300, 128), (128, 512, 256), (9, 70, 30)])
-def test_rmsnorm_matmul_kernel(M, K, N):
+def test_fused_linear_norm_prologue(M, K, N):
+    """The prologue-only configuration (the old rmsnorm_matmul kernel,
+    now subsumed by fused_linear)."""
     ks = jax.random.split(KEY, 3)
     x = jax.random.normal(ks[0], (M, K), jnp.float32).astype(jnp.bfloat16)
     g = 1.0 + 0.1 * jax.random.normal(ks[1], (K,))
     w = jax.random.normal(ks[2], (K, N), jnp.float32) * 0.05
     ms = (x.astype(jnp.float32) ** 2).mean(-1)
-    out = ops.rmsnorm_matmul(x, ms, g, w)
-    oref = ref.rmsnorm_matmul_ref(x, ms, g, w)
+    out, _ = ops.fused_linear({"w": w}, x, mean_sq=ms, gamma=g)
+    oref, _ = ref.fused_linear_ref(x, w=w, mean_sq=ms, gamma=g)
     assert _mx(out, oref) < 1e-4
+
+
+def test_fused_linear_full_pipeline_int4():
+    """Prologue × int4-BFP × SwiGLU, then down-proj with gate/residual/Σy²
+    epilogue — the complete hybrid pipeline against its oracle."""
+    ks = jax.random.split(KEY, 6)
+    M, K, F = 48, 256, 96
+    x = jax.random.normal(ks[0], (M, K), jnp.float32).astype(jnp.bfloat16)
+    g = 1.0 + 0.1 * jax.random.normal(ks[1], (K,))
+    ms = (x.astype(jnp.float32) ** 2).mean(-1)
+    w_gu = jax.random.normal(ks[2], (K, 2 * F), jnp.float32) * 0.05
+    w_dn = jax.random.normal(ks[3], (F, K), jnp.float32) * 0.05
+    res = jax.random.normal(ks[4], (M, K), jnp.float32).astype(jnp.bfloat16)
+    gm = (jax.random.uniform(ks[5], (M,)) > 0.4).astype(jnp.float32)
+    cg, sg = quantize_rtn(w_gu, 128, pow2_scales=True)
+    cd, sd = quantize_rtn(w_dn, 32, pow2_scales=True)
+    pg = {"w_int": cg, "scale": sg}
+    pd = {"w_int": cd, "scale": sd}
+
+    h, _ = ops.fused_linear(pg, x, mean_sq=ms, gamma=g, glu=True, act="silu")
+    y, sq = ops.fused_linear(pd, h, residual=res, gate_mul=gm, emit_sq=True)
+    h_r, _ = ref.fused_linear_ref(x, w_codes=cg, scale=sg, mean_sq=ms,
+                                  gamma=g, glu=True, act="silu")
+    y_r, sq_r = ref.fused_linear_ref(h_r, w_codes=cd, scale=sd, residual=res,
+                                     gate_mul=gm, emit_sq=True)
+    assert _mx(h, h_r) < 1e-4
+    assert _mx(y, y_r) < 1e-4
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(sq_r),
+                               rtol=1e-4, atol=1e-4)

@@ -104,6 +104,38 @@ def test_sliding_window_restricts_context():
                                np.asarray(out2[:, 8:]), rtol=1e-5, atol=1e-5)
 
 
+def test_layernorm_stats_injection_large_offset():
+    """Stats-injected norm_apply must match the direct computation even on
+    large-offset activations: the old one-pass E[x²]−μ² variance cancelled
+    catastrophically (variance 1 on mean 1e4 has E[x²]≈1e8) and diverged
+    from norm_apply's own two-pass path."""
+    from repro.models import layers
+
+    cfg = dataclasses.replace(get_config("musicgen-medium").smoke())
+    assert cfg.norm_type == "layernorm"
+    x = 1.0e4 + jax.random.normal(KEY, (2, 16, 256), jnp.float32)
+    p = layers.norm_init(256, cfg)
+    direct = layers.norm_apply(p, x, cfg)
+    injected = layers.norm_apply(p, x, cfg, stats=layers.norm_stats(x, cfg))
+    np.testing.assert_allclose(np.asarray(injected), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+    # the variance itself must be ~1, not a cancellation artifact
+    _, var = layers.norm_stats(x, cfg)
+    assert float(jnp.abs(var - 1.0).max()) < 0.2
+
+
+def test_rmsnorm_stats_injection_matches_direct():
+    from repro.models import layers
+
+    cfg = get_config("qwen3-8b").smoke()
+    x = jax.random.normal(KEY, (2, 8, 128), jnp.float32) * 3.0
+    p = layers.norm_init(128, cfg)
+    direct = layers.norm_apply(p, x, cfg)
+    injected = layers.norm_apply(p, x, cfg, stats=layers.norm_stats(x, cfg))
+    np.testing.assert_allclose(np.asarray(injected), np.asarray(direct),
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_mrope_positions_change_output():
     cfg = get_config("qwen2-vl-2b").smoke()
     params = M.init_params(KEY, cfg)

@@ -37,6 +37,46 @@ def test_codes_in_int4_range():
     assert int(codes.min()) >= -8 and int(codes.max()) <= 7
 
 
+def test_quantize_rtn_non_divisible_group_pads():
+    """K not a multiple of the group size: the final group is zero-padded
+    (masked amax) instead of silently skipping the weight."""
+    K, N, G = 200, 16, 128
+    w = jax.random.normal(KEY, (K, N)) * 0.05
+    codes, scale = quantize_rtn(w, G, pow2_scales=True)
+    assert codes.shape == (256, N) and scale.shape == (2, N)
+    # padding rows are zero codes: they add nothing to any accumulation
+    assert int(jnp.abs(codes[K:]).max()) == 0
+    # real rows round-trip within the RTN bound
+    wd = dequantize(codes, scale, k=K)
+    s_full = np.repeat(np.asarray(scale), G, axis=0)[:K]
+    assert np.all(np.abs(np.asarray(w) - np.asarray(wd))
+                  <= s_full / 2 * (1 + 1e-5) + 1e-7)
+    # and the padded-group amax is the masked amax of the real rows only
+    amax_real = np.abs(np.asarray(w[G:], np.float32)).max(axis=0)
+    assert np.all(np.asarray(scale[1]) >= amax_real / 7 - 1e-9)
+
+
+def test_quantize_params_non_divisible_d_ff():
+    """A config whose d_ff is not a group multiple must still quantize its
+    down-projection (input dim d_ff) — previously silently skipped —
+    and the quantized model must run on both dispatch paths."""
+    cfg = dataclasses.replace(get_config("llama2-7b").smoke(), d_ff=200)
+    params = M.init_params(KEY, cfg)
+    # min_size 4k: catches the [200, 128] down-projection but leaves the
+    # (tiny) routers dense
+    qp = quantize_params(params, group_size=128, min_size=1 << 12)
+    down = qp["stack"]["stage0"]["pos0"]["ffn"]["inner"]["down"]
+    assert "w_int" in down, "non-divisible d_ff weight was skipped"
+    assert down["w_int"].shape[0] == 256          # padded to 2 groups
+    toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    lg_j, _, _ = M.prefill(qp, {"tokens": toks}, cfg)
+    lg_k, _, _ = M.prefill(qp, {"tokens": toks},
+                           dataclasses.replace(cfg, use_kernels=True))
+    d = np.asarray(lg_j, np.float32)
+    k = np.asarray(lg_k, np.float32)
+    assert np.linalg.norm(k - d) / np.linalg.norm(d) < 0.1
+
+
 def test_quantize_params_structure():
     cfg = get_config("llama2-7b").smoke()
     params = M.init_params(KEY, cfg)
