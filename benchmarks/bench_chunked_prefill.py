@@ -1,0 +1,136 @@
+"""Chunked prefill vs eager monolithic prefill on mixed traffic.
+
+The quantity chunked prefill buys is *bounded decode stalls*: with eager
+monolithic prefill, every resident decode slot freezes for the whole
+prompt whenever a long request is admitted mid-stream (head-of-line
+blocking — the scheduler-level violation of SkipOPU's no-unit-idles
+principle).  With ``prefill_chunk > 0`` the step planner interleaves one
+fixed-size chunk per engine iteration with a full resident decode step,
+so the worst inter-token gap a resident sees shrinks from one *prompt*
+of prefill work to one *chunk* of it.
+
+Workload: two short-prompt residents generating long outputs, plus two
+long prompts arriving behind them — the second long prompt is admitted
+while the residents are mid-decode, which is exactly the stall event.
+Both engines run the same requests; reported are the worst resident
+decode stall (``RequestResult.max_decode_stall_s``) and goodput (useful
+requested tokens per wall second).
+
+CI gate (bench-smoke job): the chunked engine's worst resident stall
+must be strictly below the eager baseline's, with goodput no worse than
+a noise-tolerant fraction of it.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.engine import ContinuousBatchingEngine
+
+# Scale note: at CPU-smoke model sizes the per-call jit dispatch cost
+# (~2-3 ms) rivals the math, so the chunk must be large enough to
+# amortize dispatch yet a small fraction of the prompt — 1024-token
+# prompts in 128-token chunks put the eager stall floor (~one whole
+# prefill) far above a chunk iteration plus any host-noise outlier,
+# while the residents' long decodes amortize the interleaving overhead.
+MAX_LEN = 1040
+SLOTS = 3
+CHUNK = 128
+SHORT_T0, SHORT_NEW = 4, 128
+LONG_T0, LONG_NEW = 1024, 2
+
+
+def _workload(cfg):
+    rng = np.random.default_rng(0)
+    shorts = [rng.integers(0, cfg.vocab_size, (SHORT_T0,), dtype=np.int32)
+              for _ in range(2)]
+    longs = [rng.integers(0, cfg.vocab_size, (LONG_T0,), dtype=np.int32)
+             for _ in range(2)]
+    work = [(p, SHORT_NEW) for p in shorts] + [(p, LONG_NEW) for p in longs]
+    useful = sum(n for _, n in work)
+    return work, useful
+
+
+def _run(eng: ContinuousBatchingEngine, work):
+    t0 = time.time()
+    uids = [eng.submit(p, max_new_tokens=n) for p, n in work]
+    out = eng.run()
+    wall = time.time() - t0
+    # residents = the short-prompt long-decode requests (first two)
+    stall = max(out["results"][u].max_decode_stall_s for u in uids[:2])
+    return wall, stall, out
+
+
+def run(quick: bool = False) -> Rows:
+    rows = Rows()
+    cfg = get_config("llama2-7b").smoke()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    work, useful = _workload(cfg)
+    passes = 2 if quick else 4
+
+    eager = ContinuousBatchingEngine(cfg, params, max_slots=SLOTS,
+                                     max_len=MAX_LEN)
+    chunked = ContinuousBatchingEngine(cfg, params, max_slots=SLOTS,
+                                       max_len=MAX_LEN,
+                                       prefill_chunk=CHUNK)
+    # warm pass compiles every prefill bucket / chunk / decode shape;
+    # timed passes are steady-state, min-of-N against host noise; the
+    # goodput gate uses *paired* per-pass ratios (adjacent runs see the
+    # same host conditions) so a noise burst cannot fail one side alone
+    _run(eager, work)
+    _, _, out_c = _run(chunked, work)
+    e_walls, e_stalls, c_walls, c_stalls = [], [], [], []
+    for _ in range(passes):
+        w, s, _ = _run(eager, work)
+        e_walls.append(w)
+        e_stalls.append(s)
+        w, s, out_c = _run(chunked, work)
+        c_walls.append(w)
+        c_stalls.append(s)
+    e_wall, e_stall = float(np.min(e_walls)), float(np.min(e_stalls))
+    c_wall, c_stall = float(np.min(c_walls)), float(np.min(c_stalls))
+    e_good, c_good = useful / e_wall, useful / c_wall
+    paired = float(np.max([ew / cw for ew, cw in zip(e_walls, c_walls)]))
+    s = out_c["stats"]
+
+    rows.add("chunked_prefill/eager", e_wall * 1e6 / useful,
+             f"worst_stall_s={e_stall:.4f};goodput_tok_s={e_good:.1f}")
+    rows.add("chunked_prefill/chunked", c_wall * 1e6 / useful,
+             f"worst_stall_s={c_stall:.4f};goodput_tok_s={c_good:.1f};"
+             f"stall_ratio={c_stall / e_stall:.3f}")
+    rows.add("chunked_prefill/interleave", 0.0,
+             f"prefill_chunks={s.prefill_chunks};"
+             f"interleaved_steps={s.interleaved_steps}")
+    rows.meta = {
+        "chunk": CHUNK, "slots": SLOTS, "max_len": MAX_LEN,
+        "worst_stall_s": {"eager": e_stall, "chunked": c_stall},
+        "goodput_tok_s": {"eager": e_good, "chunked": c_good},
+        "goodput_paired_ratio": paired,
+        "prefill_chunks": s.prefill_chunks,
+        "interleaved_steps": s.interleaved_steps,
+    }
+
+    # CI gates.  (1) the whole point of the feature: a resident's worst
+    # decode stall shrinks from ~one prompt of prefill work to ~one
+    # chunk of it (steady-state ratio here is ~0.3 — assert a margin).
+    # (2) goodput no worse, modulo the chunk-dispatch tax: at CPU-smoke
+    # scale each extra jitted call costs ~2-3 ms of pure host dispatch,
+    # which bounds the interleaving overhead at ~10% of this run (on a
+    # real accelerator with real model sizes the same dispatch cost is
+    # noise); the best paired ratio must keep chunked within 0.8x.
+    assert c_stall < 0.8 * e_stall, (
+        f"chunked prefill did not reduce the worst resident decode stall "
+        f"({c_stall:.4f}s vs eager {e_stall:.4f}s)")
+    assert paired >= 0.8, (
+        f"chunked prefill goodput regressed beyond the dispatch-tax "
+        f"bound: paired eager/chunked wall ratio {paired:.3f} < 0.8")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -23,10 +23,11 @@ def main() -> None:
                     help="directory for BENCH_<name>.json artifacts")
     args = ap.parse_args()
 
-    from benchmarks import (bench_bandwidth, bench_end_to_end,
-                            bench_fused_linear, bench_kv_storage,
-                            bench_mha_dataflow, bench_paged_kv,
-                            bench_pe_accuracy, bench_roofline, bench_serve)
+    from benchmarks import (bench_bandwidth, bench_chunked_prefill,
+                            bench_end_to_end, bench_fused_linear,
+                            bench_kv_storage, bench_mha_dataflow,
+                            bench_paged_kv, bench_pe_accuracy,
+                            bench_roofline, bench_serve)
     suite = {
         "table1_pe_accuracy": bench_pe_accuracy,
         "fig8_mha_dataflow": bench_mha_dataflow,
@@ -36,6 +37,7 @@ def main() -> None:
         "serve_continuous": bench_serve,
         "paged_kv": bench_paged_kv,
         "fused_linear": bench_fused_linear,
+        "chunked_prefill": bench_chunked_prefill,
         "roofline": bench_roofline,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -128,6 +128,15 @@ class ModelConfig:
     # the incremental-reduction carry).  Only meaningful with use_kernels;
     # False keeps the per-op kernel dispatch (parity/debug lever).
     fuse_linear: bool = True
+    # Chunked (resumable) prefill for the continuous-batching engine:
+    # prompts are processed ``prefill_chunk`` tokens at a time, scheduled
+    # *between* resident decode steps so a long prompt cannot stall every
+    # decode slot (head-of-line blocking).  0 = monolithic prefill — the
+    # parity default; token output is identical either way.  Requires an
+    # all-global-attention stack with masked-mode routing
+    # (``serve.scheduler.can_chunk_prefill``); the engine's
+    # ``prefill_chunk=`` argument overrides this per-deployment.
+    prefill_chunk: int = 0
     scan_layers: bool = True
 
     # ------------------------------------------------------------------ helpers

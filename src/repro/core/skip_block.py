@@ -355,6 +355,77 @@ def routed_attention_decode(p: Params, x: jnp.ndarray,
     return x, k_cache, v_cache, (k_t, v_t), stats
 
 
+def routed_attention_chunk(p: Params, x: jnp.ndarray,
+                           k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                           t0: jnp.ndarray,
+                           kv_prev: Optional[kv_reuse.KVPair],
+                           positions: jnp.ndarray, cfg: ModelConfig, *,
+                           carried_sq: Optional[jnp.ndarray] = None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                      kv_reuse.KVPair, Stats]:
+    """One *chunk* of resumable prefill: the C-token generalization of
+    ``routed_attention_decode`` (and the T-token restriction of masked-mode
+    ``routed_attention`` to a suffix of the sequence).
+
+    x: [B, C, D] — the chunk's activations; k/v_cache: [B, Tcap, Hkv, dh]
+    dense per-layer views in *prefill layout* (time-major), already holding
+    this layer's view of positions [0, t0); t0: [B] chunk start offsets;
+    kv_prev: the previous layer's merged view of the *chunk* tokens (the
+    cross-layer reuse recursion restricted to the chunk — the prefix part
+    of the recursion is exactly what the cache rows store).
+
+    The chunk's merged view is appended at [t0, t0+C) and attention runs
+    over cached-prefix + chunk under ``kv_valid_len = t0 + C`` (causal
+    masking makes any right-padding of the final chunk inert).  Token
+    outputs are bit-compatible with monolithic prefill: the per-token
+    router gates, view merges and Σy² carries only ever read that token's
+    own column, and attention reads the same per-layer view values."""
+    B, C, _ = x.shape
+    t0 = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t0, jnp.int32)), (B,))
+    routed = cfg.skip.enabled and cfg.skip.route_attention
+    logits, nstats = _router_and_stats(p, x, cfg, routed, carried_sq)
+    gate, p_keep = _gate(logits, None, cfg, False, (B, C), routed)
+    gate = hint(gate, "gate")
+    inner = p["inner"]
+    fuse = layers.fuse_norm_linear(cfg)
+
+    if fuse:
+        q, k_new, v_new = attn_mod.project_qkv(
+            inner, x, positions, cfg, norm=p["norm"], stats=nstats)
+    else:
+        xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+        q = attn_mod.project_q(inner, xn, positions, cfg)
+        k_new, v_new = attn_mod.project_kv(inner, xn, positions, cfg)
+    if routed and cfg.skip.kv_reuse:
+        k_t, v_t = kv_reuse.merge_view(kv_prev, k_new, v_new, gate)
+    else:
+        k_t, v_t = kv_reuse.init_view(k_new, v_new)
+
+    k_cache = _row_update(k_cache, k_t.astype(k_cache.dtype), t0, time_axis=0)
+    v_cache = _row_update(v_cache, v_t.astype(v_cache.dtype), t0, time_axis=0)
+    k_cache = hint(k_cache, "kv_cache_step")
+    v_cache = hint(v_cache, "kv_cache_step")
+    o = attn_mod.attention_core(
+        q, k_cache, v_cache, q_positions=_q_index_positions(positions),
+        cfg=cfg, window=0, kv_valid_len=t0 + C)
+
+    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
+        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    if fuse:
+        x, sq = attn_mod.output_proj_fused(
+            inner, o, cfg, residual=x,
+            gate_mul=gate if routed else None, emit_sq=True)
+        x = hint(x, "activation")
+        stats["res_sq"] = sq / x.shape[-1]
+    else:
+        y = attn_mod.output_proj(inner, o, cfg)
+        if routed:
+            y = y * gate.astype(y.dtype)[..., None]
+        x = x + hint(y, "activation")
+    stats["attn_gate"] = gate
+    return x, k_cache, v_cache, (k_t, v_t), stats
+
+
 def routed_attention_decode_paged(p: Params, x: jnp.ndarray,
                                   t: jnp.ndarray,
                                   kv_prev: Optional[kv_reuse.KVPair],

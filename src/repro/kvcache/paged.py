@@ -298,7 +298,14 @@ def pack_prefill(store: Store, cache: Dict, gates: jnp.ndarray,
     index >= valid_len are dropped).  Entries are token-major — token t's
     fresh layers are contiguous — so decode appends simply continue the
     stream.  Freshness: layer 0 dense + gated layers (or every layer when
-    reuse is disabled)."""
+    reuse is disabled).
+
+    ``cache`` is any prefill-layout KV collection whose time extent is
+    >= T: the monolithic ``prefill`` cache (bucket-padded), or the
+    chunked-prefill staging cache (``model.init_chunk_cache``, padded to
+    a chunk multiple) with ``gates`` as the concatenated per-chunk gate
+    log — the packed entry stream is identical either way because both
+    the views and the gates are per-token state."""
     k_views, v_views = prefill_views_from_cache(cache, cfg)
     nA, T = gates.shape
     # the cache may carry decode headroom (pad_to); entries only exist for

@@ -30,6 +30,11 @@ def main() -> None:
                     help="paged KV store + history buffer instead of the "
                          "dense slot pool (see docs/kvcache.md)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: process prompts this many "
+                         "tokens at a time, interleaved with resident "
+                         "decode steps (0 = monolithic; requires "
+                         "--continuous; see docs/serving.md)")
     ap.add_argument("--use-kernels", action="store_true",
                     help="Pallas kernel path incl. the fused linear "
                          "pipeline (interpret mode off-TPU — slow on "
@@ -56,12 +61,15 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     max_len = args.prompt_len + args.new_tokens
+    if args.prefill_chunk and not args.continuous:
+        raise SystemExit("--prefill-chunk requires --continuous")
     if args.continuous:
         eng = ContinuousBatchingEngine(
             cfg, params, max_slots=args.batch, max_len=max_len,
             temperature=args.temperature,
             kv_mode="paged" if args.paged_kv else "dense",
-            page_size=args.page_size)
+            page_size=args.page_size,
+            prefill_chunk=args.prefill_chunk)
         # mixed-length synthetic traffic: 2x oversubscribed slots
         for _ in range(2 * args.batch):
             ln = int(rng.integers(max(args.prompt_len // 4, 1),
@@ -74,6 +82,11 @@ def main() -> None:
               f"decode: {s.decode_tok_per_s:.1f} tok/s | "
               f"requests: {s.requests_completed} | "
               f"KV storage saved≈{s.kv_saved_fraction:.1%} (measured)")
+        if args.prefill_chunk:
+            worst = max(r.max_decode_stall_s for r in out["results"].values())
+            print(f"chunked prefill: {s.prefill_chunks} chunks | "
+                  f"{s.interleaved_steps} interleaved steps | worst "
+                  f"decode stall {worst*1e3:.1f}ms")
         if s.kv_mode == "paged":
             print(f"paged KV: peak {s.pages_peak}/{s.pages_total} pages "
                   f"(×{s.page_size} entries) | live entry "

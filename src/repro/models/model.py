@@ -310,6 +310,126 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def init_chunk_cache(cfg: ModelConfig, batch: int, cap_len: int,
+                     dtype=None) -> Dict:
+    """Staging cache for chunked (resumable) prefill: per-layer dense KV
+    views in *prefill layout* ([B, cap_len, Hkv, dh] time-major regardless
+    of ``cfg.kv_cache_layout`` — the layout ``prefill`` collects, which
+    ``serve.engine.pool_insert`` / ``kvcache.paged.pack_prefill`` already
+    consume).  ``cap_len`` is normally ``max_len`` rounded up to a chunk
+    multiple so the right-padded final chunk always fits.  Only valid for
+    all-global-attn stacks (``serve.scheduler.can_chunk_prefill``)."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    Hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def entry(kind: str) -> Dict[str, jnp.ndarray]:
+        if kind != ATTN:
+            raise ValueError(
+                f"chunked prefill requires an all-global-attn stack; "
+                f"got a {kind!r} layer")
+        return {"k": jnp.zeros((batch, cap_len, Hkv, dh), dt),
+                "v": jnp.zeros((batch, cap_len, Hkv, dh), dt)}
+
+    stage = {f"pos{k}": entry(cfg.block_kind(k)) for k in range(cfg.stage_len)}
+    cache: Dict[str, Any] = {"stage0": stage}
+    if cfg.num_stages > 1:
+        cache["stages"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a[None], (cfg.num_stages - 1,) + a.shape), stage)
+    return cache
+
+
+def slice_cache_time(cache: Dict, length: int) -> Dict:
+    """Truncate dense KV leaves to ``length`` along time (the inverse of
+    ``_pad_cache_to`` — used to shed a chunked-prefill staging cache's
+    chunk-multiple overhang before pool insertion)."""
+    def one(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        if names and names[-1] in ("k", "v"):
+            axis = leaf.ndim - 3                  # [.., T, Hkv, dh]
+            if leaf.shape[axis] > length:
+                return jax.lax.slice_in_dim(leaf, 0, length, axis=axis)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def prefill_chunk(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
+                  t0: jnp.ndarray, cfg: ModelConfig,
+                  last_index: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """One chunk of resumable prefill: C tokens appended at offset ``t0``.
+
+    The C-token sibling of ``decode_step``: ``cache`` (from
+    ``init_chunk_cache``) holds every layer's dense KV view of positions
+    [0, t0); this call computes the chunk's activations attending over
+    cached-prefix + chunk, appends each layer's merged view at
+    [t0, t0+C), and returns (logits [B, V] at ``last_index`` within the
+    chunk (default: the chunk's final position), new cache, stats).
+    ``stats['attn_gate']`` is [n_attn_layers, B, C] — the same per-token
+    execution-gate log monolithic ``prefill`` emits, chunk column-slice
+    by column-slice, so paged entry packing is unchanged.  Requires
+    masked-mode routing on an all-global-attn stack; the final chunk may
+    be right-padded (pass ``last_index`` = real length − 1) — pad columns
+    compute garbage that causal masking keeps out of every real token."""
+    B, C = batch["tokens"].shape if cfg.frontend == "token" \
+        else batch["embeds"].shape[:2]
+    t0 = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t0, jnp.int32)), (B,))
+    pos = t0[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    if cfg.pos_embedding == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, B, C))
+    x = _embed_inputs(params, batch, pos, cfg)
+
+    stack = params["stack"]
+    x, kv_prev, c0, stats, sq = transformer.stage_prefill_chunk(
+        stack["stage0"], cache["stage0"], x, None, t0, pos, cfg)
+    gates = stats.pop("attn_gate", None)      # [nA_stage, B, C]
+    new_cache: Dict[str, Any] = {"stage0": c0}
+
+    if cfg.num_stages > 1:
+        def body(carry, xs):
+            x, kv_prev, sq = carry
+            sp, ce = xs
+            x, kv_prev, c, s, sq = transformer.stage_prefill_chunk(
+                sp, ce, x, kv_prev, t0, pos, cfg, carried_sq=sq)
+            g = s.pop("attn_gate", None)
+            return (x, kv_prev, sq), (c, s, g)
+
+        if cfg.scan_layers:
+            (x, kv_prev, sq), (cs, s_scan, g_scan) = jax.lax.scan(
+                body, (x, kv_prev, sq), (stack["stages"], cache["stages"]))
+            new_cache["stages"] = cs
+            stats = jax.tree_util.tree_map(lambda a, b: a + b.sum(axis=0),
+                                           stats, s_scan)
+            gates = jnp.concatenate([gates[None], g_scan], axis=0)
+        else:
+            c_list, g_list = [], []
+            for i in range(cfg.num_stages - 1):
+                sl = lambda l: l[i]
+                xs = (jax.tree_util.tree_map(sl, stack["stages"]),
+                      jax.tree_util.tree_map(sl, cache["stages"]))
+                (x, kv_prev, sq), (c, s, g) = body((x, kv_prev, sq), xs)
+                stats = jax.tree_util.tree_map(lambda a, b: a + b, stats, s)
+                c_list.append(c)
+                g_list.append(g)
+            new_cache["stages"] = jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *c_list)
+            gates = jnp.concatenate(
+                [gates[None]] + [g[None] for g in g_list], axis=0)
+        # [S, nA_stage, B, C] -> [L_attn, B, C] in stack order
+        gates = gates.reshape((-1,) + gates.shape[-2:])
+
+    stats["attn_gate"] = gates
+    x = layers.norm_apply(params["final_norm"], x, cfg, stats=sq)
+    if last_index is None:
+        xl = x[:, -1:, :]
+    else:
+        xl = x[jnp.arange(B), last_index.astype(jnp.int32)][:, None, :]
+    logits = layers.unembed(params["embed"], params.get("lm_head"),
+                            xl, cfg)[:, 0]
+    return logits, new_cache, stats
+
+
 def decode_step(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
                 t: jnp.ndarray, cfg: ModelConfig
                 ) -> Tuple[jnp.ndarray, Dict, Dict]:

@@ -249,6 +249,48 @@ def stage_decode(stage_params: Params, cache: Dict, x: jnp.ndarray,
     return x, kv_prev, new_cache, stats, carried_sq
 
 
+def stage_prefill_chunk(stage_params: Params, cache: Dict, x: jnp.ndarray,
+                        kv_prev: Optional[Tuple], t0: jnp.ndarray,
+                        positions: jnp.ndarray, cfg: ModelConfig,
+                        carried_sq: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict, Dict,
+                                   Optional[jnp.ndarray]]:
+    """One super-block over one prefill *chunk* of C tokens (resumable
+    prefill — see ``model.prefill_chunk``).  Requires an all-global-attn
+    stack with masked-mode routing (``serve.scheduler.can_chunk_prefill``).
+
+    ``cache`` holds each layer's dense KV view of the already-prefilled
+    prefix in prefill (time-major) layout; the chunk's merged view is
+    appended at [t0, t0+C) so the cache stays exactly what monolithic
+    prefill would have collected.  ``kv_prev`` threads the chunk tokens'
+    cross-layer reuse view between layers and ``carried_sq`` the fused
+    pipeline's Σy²/D reduction carry, both restricted to the chunk —
+    per-token state, so chunk boundaries cannot perturb them."""
+    stats = _ZERO_STATS()
+    new_cache: Dict[str, Any] = {}
+    gates: List[jnp.ndarray] = []
+    for k in range(cfg.stage_len):
+        bp = stage_params[f"pos{k}"]
+        ce = cache[f"pos{k}"]
+        assert cfg.block_kind(k) == ATTN, \
+            "chunked prefill requires an all-global-attn stack"
+        x, kc, vc, kv_prev, s = skip_block.routed_attention_chunk(
+            bp["mixer"], x, ce["k"], ce["v"], t0, kv_prev, positions, cfg,
+            carried_sq=carried_sq)
+        carried_sq = s.pop("res_sq", None)
+        new_cache[f"pos{k}"] = {"k": kc, "v": vc}
+        gates.append(s["attn_gate"])
+        stats = _acc_stats(stats, s, cfg.skip.route_attention)
+        if "ffn" in bp:
+            x, s = skip_block.routed_mlp(
+                bp["ffn"], x, cfg, inner_fn=_ffn_inner(cfg, cfg.is_moe_layer(k)),
+                rng=None, train=False, carried_sq=carried_sq)
+            carried_sq = s.pop("res_sq", None)
+            stats = _acc_stats(stats, s, cfg.skip.route_mlp)
+    stats["attn_gate"] = jnp.stack(gates)
+    return x, kv_prev, new_cache, stats, carried_sq
+
+
 def stage_decode_paged(stage_params: Params, x: jnp.ndarray,
                        kv_prev: Optional[Tuple], t: jnp.ndarray,
                        positions: jnp.ndarray, cfg: ModelConfig,

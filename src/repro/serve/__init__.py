@@ -1,6 +1,7 @@
 from repro.serve.engine import (ContinuousBatchingEngine,  # noqa: F401
                                 RequestResult, ServeEngine, ServeStats)
-from repro.serve.scheduler import Request, Scheduler  # noqa: F401
+from repro.serve.scheduler import (PrefillChunk, Request,  # noqa: F401
+                                   Scheduler, StepPlan, can_chunk_prefill)
 
 # paged-KV engine mode building blocks (kv_mode="paged")
 from repro.kvcache.history import HistoryAccounting  # noqa: F401

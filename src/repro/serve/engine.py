@@ -36,16 +36,51 @@ from repro.kvcache import history as history_mod
 from repro.kvcache import paged as paged_mod
 from repro.models import model as model_lib
 from repro.serve.sampling import sample
-from repro.serve.scheduler import (ActiveRequest, Request, Scheduler,
-                                   can_bucket, default_buckets)
+from repro.serve.scheduler import (ActiveRequest, PrefillChunk, Request,
+                                   Scheduler, can_bucket,
+                                   can_chunk_prefill, default_buckets)
 
 
 @dataclasses.dataclass
 class ServeStats:
+    """Aggregate engine statistics for one ``run()`` (or one lock-step
+    ``generate()``).  Counters are totals over the run; times are wall
+    seconds on the host driving the jitted steps.
+
+    Fields:
+      prefill_tokens    — prompt tokens prefilled (real tokens; bucket /
+                          chunk padding excluded).
+      decode_tokens     — tokens emitted (the first token of each request
+                          — sampled from prefill logits — included).
+      prefill_s         — wall time spent in prefill work (monolithic
+                          prefills and prefill chunks alike).
+      decode_s          — wall time spent in ragged decode steps.
+      prefill_chunks    — prefill work units executed: one per chunk with
+                          ``prefill_chunk > 0``, one per prompt otherwise.
+      interleaved_steps — engine iterations in which a prefill chunk ran
+                          in the same step as resident decodes (the
+                          mixed prefill/decode steps chunked prefill
+                          exists for; always 0 when no request ever
+                          coexists with a prefill).
+      attn_keep_frac    — mean decode-time attention keep rate from the
+                          execution-gate log (1.0 = dense).
+      kv_saved_fraction — measured compact-KV storage saving over this
+                          run's decode gates; ``kv_saved_analytic`` is
+                          the configured-keep-rate estimate.
+      requests_completed — requests drained to a RequestResult.
+
+    Paged-mode extras (``kv_mode == "paged"``): page pool geometry
+    (``page_size``/``pages_total``), ``pages_peak`` live-footprint peak,
+    ``preemptions`` (OOM-safe mid-decode evictions), entry-stream write
+    counters (``kv_entries_stored`` vs the per-layer-dense baseline
+    ``kv_entries_dense``), and history-buffer hit rates measured from the
+    gate log (aggregate + per attention layer)."""
     prefill_tokens: int = 0
     decode_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    prefill_chunks: int = 0
+    interleaved_steps: int = 0
     attn_keep_frac: float = 1.0
     kv_saved_fraction: float = 0.0        # measured from logged gates
     kv_saved_analytic: float = 0.0        # configured-keep-rate estimate
@@ -77,7 +112,34 @@ class ServeStats:
 
 @dataclasses.dataclass
 class RequestResult:
-    """Per-request outcome + serving metrics."""
+    """Per-request outcome + serving metrics.
+
+    Fields:
+      uid          — id returned by ``submit``.
+      tokens       — generated token ids, stop token (if hit) included.
+      prompt_len   — real prompt length T0 (padding excluded).
+      ttft_s       — wall seconds from ``run()`` start (every request is
+                     considered submitted when the run starts) to this
+                     request's first token.  Under monolithic prefill
+                     that is queue wait + one prefill; under chunked
+                     prefill (``prefill_chunk > 0``) it spans all
+                     ceil(T0/chunk) chunk steps *plus* the decode steps
+                     interleaved between them — chunking deliberately
+                     trades a little TTFT on the prefilling request for
+                     bounded decode stalls on every resident one.
+      decode_s     — wall seconds inside decode steps this request
+                     participated in (other requests' prefill work
+                     excluded).
+      max_decode_stall_s — longest wall-clock gap between two of this
+                     request's consecutive token emissions; the
+                     head-of-line metric chunked prefill bounds (an
+                     eager monolithic prefill of a long newcomer shows
+                     up here for every resident).
+      finish_reason — "length" (budget), "stop" (stop token), or
+                     "max_len" (slot position hit the pool's max_len).
+      kv_stored / kv_dense — measured compact-store entry writes vs the
+                     per-layer-dense baseline for this request's decode
+                     steps."""
     uid: int
     tokens: np.ndarray                   # generated tokens (incl. stop token)
     prompt_len: int
@@ -86,6 +148,7 @@ class RequestResult:
     finish_reason: str                   # "length" | "stop" | "max_len"
     kv_stored: int = 0                   # measured compact-store entries
     kv_dense: int = 0                    # dense-baseline entries
+    max_decode_stall_s: float = 0.0      # worst inter-token emission gap
 
     @property
     def decode_tokens(self) -> int:
@@ -229,20 +292,61 @@ def pool_insert(pool: Dict, cache: Dict, slot, cfg: ModelConfig) -> Dict:
     return jax.tree_util.tree_map_with_path(one, pool, cache)
 
 
+@dataclasses.dataclass
+class _RunState:
+    """Host-side state of one ``run()``, shared by the dense and paged
+    loops (the consolidation of the per-loop ``finish``/``preempt``
+    closures the PR-2 review flagged)."""
+    stats: ServeStats
+    results: Dict[int, RequestResult]
+    t_run: float
+    rng: jax.Array
+    keep_acc: float = 0.0
+    keep_n: float = 0.0
+    # paged-mode extras
+    hist: Optional[history_mod.HistoryAccounting] = None
+    admit_seq: Dict[int, int] = dataclasses.field(default_factory=dict)
+    seq: int = 0
+    # chunked-prefill staging (at most one prompt in flight at a time)
+    stage_cache: Optional[Dict] = None
+    stage_gates: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+
 class ContinuousBatchingEngine:
     """Continuous batching over a fixed slot pool (per-sequence positions).
 
-    Requests are admitted into free KV slots, prefilled one at a time
-    (length-bucketed where exact), decoded concurrently — each sequence at
-    its own position ``t[slot]`` — and evicted on stop-token / length,
-    freeing the slot for the next queued request.
+    Requests are admitted into free KV slots, prefilled (length-bucketed
+    where exact, or chunk-by-chunk with ``prefill_chunk > 0``), decoded
+    concurrently — each sequence at its own position ``t[slot]`` — and
+    evicted on stop-token / length, freeing the slot for the next queued
+    request.  Both run loops consume ``Scheduler.plan_step`` plans: each
+    engine iteration executes at most one prefill work unit alongside one
+    ragged decode step over every resident slot, so with chunking on a
+    long prompt can no longer stall resident decodes for its whole length
+    (head-of-line blocking — see docs/serving.md).
+
+    Constructor levers:
+      max_slots / max_len  — KV pool geometry (slots × positions).
+      temperature          — 0.0 = greedy sampling.
+      prefill_buckets      — monolithic-prefill padding buckets (defaulted
+                             when exact; unused once chunking is on).
+      kv_mode              — "dense" slot pool or "paged" entry stream.
+      page_size/num_pages  — paged-pool geometry.
+      prefill_chunk        — chunk size in tokens; None defers to
+                             ``cfg.prefill_chunk``; 0 = monolithic
+                             (parity default).
+      step_tokens          — optional per-step token budget for
+                             ``plan_step`` (decode slots cost 1 each, a
+                             chunk its length); None = unbudgeted.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
                  max_len: int = 512, temperature: float = 0.0,
                  prefill_buckets: Optional[Sequence[int]] = None,
                  kv_mode: str = "dense", page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 step_tokens: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -255,21 +359,50 @@ class ContinuousBatchingEngine:
                 f"{cfg.name}: paged KV requires an all-global-attention "
                 "stack with masked-mode routing — use kv_mode='dense'")
         self.kv_mode = kv_mode
+        self.prefill_chunk = int(cfg.prefill_chunk if prefill_chunk is None
+                                 else prefill_chunk)
+        if self.prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0 (0 = monolithic)")
+        if self.prefill_chunk and not can_chunk_prefill(cfg):
+            raise ValueError(
+                f"{cfg.name}: chunked prefill requires an all-global-"
+                "attention stack with masked-mode routing (resumable "
+                "cache state) — use prefill_chunk=0")
+        self.step_tokens = step_tokens
         if prefill_buckets is not None and not can_bucket(cfg):
             raise ValueError(
                 f"{cfg.name}: prefill bucketing pads prompts, which corrupts "
                 "ring-buffer/SSM state and gather-mode capacity — this "
                 "config requires exact-length prefill (prefill_buckets=None)")
-        if prefill_buckets is None and can_bucket(cfg):
+        if (prefill_buckets is None and can_bucket(cfg)
+                and not self.prefill_chunk):
+            # chunked prefill quantizes shapes to the chunk size itself;
+            # buckets only serve the monolithic path
             prefill_buckets = default_buckets(max_len)
         self.scheduler = Scheduler(max_slots, max_len,
-                                   buckets=prefill_buckets)
+                                   buckets=prefill_buckets,
+                                   prefill_chunk=self.prefill_chunk)
         self._decode = jax.jit(partial(model_lib.decode_step, cfg=cfg),
                                donate_argnums=(1,))
         self._prefill = jax.jit(partial(model_lib.prefill, cfg=cfg,
                                         pad_to=max_len))
         self._insert = jax.jit(partial(pool_insert, cfg=cfg),
                                donate_argnums=(0,))
+        if self.prefill_chunk:
+            # staging cache capacity: max_len rounded up to a chunk
+            # multiple, so the right-padded final chunk always fits
+            C = self.prefill_chunk
+            self._chunk_cap = -(-max_len // C) * C
+            self._chunk_step = jax.jit(
+                partial(model_lib.prefill_chunk, cfg=cfg),
+                donate_argnums=(1,))
+
+            def _ins_staged(pool, cache, slot):
+                return pool_insert(
+                    pool, model_lib.slice_cache_time(cache, max_len),
+                    slot, cfg)
+
+            self._insert_staged = jax.jit(_ins_staged, donate_argnums=(0,))
         if kv_mode == "paged":
             self.n_attn = paged_mod.num_attention_layers(cfg)
             self.page_size = page_size
@@ -360,7 +493,49 @@ class ContinuousBatchingEngine:
             finish_reason=reason,
             kv_stored=st.kv_stored,
             kv_dense=st.kv_dense,
+            max_decode_stall_s=st.max_stall_s,
         )
+
+    def _finish(self, rs: _RunState, slot: int, reason: str) -> None:
+        """Evict ``slot``'s request and record its result (paged mode also
+        returns its pages and clears its history accounting)."""
+        st = self.scheduler.release(slot)
+        if self.kv_mode == "paged":
+            self.allocator.release(slot)
+            rs.hist.on_release(slot)
+            rs.admit_seq.pop(slot, None)
+        rs.results[st.req.uid] = self._make_result(st, reason)
+        rs.stats.requests_completed += 1
+
+    def _preempt_youngest(self, rs: _RunState, exclude: int) -> bool:
+        """OOM backpressure (paged mode): evict the most recently admitted
+        request (≠ ``exclude``) and requeue it at the head of the FIFO —
+        its pages return to the free list and it will re-prefill from
+        scratch when memory frees up.  An in-flight chunked prefill is
+        always the newest admission and holds its worst-case reservation
+        without yet being a resident, so it is aborted first (no decode
+        progress lost; decode steps between the abort and the re-try keep
+        the residents progressing, so this cannot livelock)."""
+        sched = self.scheduler
+        pf = sched.prefilling
+        if pf is not None and pf.slot != exclude:
+            sched.abort_prefill()
+            self.allocator.release(pf.slot)
+            rs.stage_cache = None
+            rs.stage_gates = []
+            rs.stats.preemptions += 1
+            return True
+        victims = [s for s in sched.active if s != exclude]
+        if not victims:
+            return False
+        slot = max(victims, key=lambda s: rs.admit_seq[s])
+        st = sched.release(slot)
+        self.allocator.release(slot)
+        rs.hist.on_release(slot)
+        rs.admit_seq.pop(slot, None)
+        sched.requeue_front(st.req)
+        rs.stats.preemptions += 1
+        return True
 
     def _activate_prefilled(self, req: Request, slot: int, tok: int,
                             t_run: float, now: float, stats: ServeStats):
@@ -371,7 +546,8 @@ class ContinuousBatchingEngine:
         stats.decode_tokens += 1
         st = ActiveRequest(req=req, slot=slot, pos=req.prompt_len,
                            next_token=tok, out_tokens=[tok],
-                           submit_s=t_run, first_token_s=now)
+                           submit_s=t_run, first_token_s=now,
+                           last_emit_s=now)
         self.scheduler.activate(st)
         if req.stop_token is not None and tok == req.stop_token:
             return st, "stop"
@@ -386,6 +562,10 @@ class ContinuousBatchingEngine:
         """Post-decode bookkeeping for one resident (the fed token's KV
         was just written at st.pos).  Returns the finish reason or None."""
         st.decode_s += step_s
+        now = time.time()
+        if st.last_emit_s:
+            st.max_stall_s = max(st.max_stall_s, now - st.last_emit_s)
+        st.last_emit_s = now
         if g is not None:
             st.kv_dense += n_layers
             st.kv_stored += (1 + int(g[1:].sum()) if measure else n_layers)
@@ -401,45 +581,162 @@ class ContinuousBatchingEngine:
             return "max_len"
         return None
 
+    # -- prefill work units (monolithic or one chunk) ----------------------
+    def _chunk_forward(self, rs: _RunState, work: PrefillChunk):
+        """Run one staged prefill chunk.  Returns the chunk logits (valid
+        only on the last chunk).  The gate log is accumulated as device
+        arrays only where packing needs it (paged mode) — the dense pool
+        has no use for prefill gates, and a per-chunk host sync would be
+        pure interleaving overhead."""
+        C = self.prefill_chunk
+        if work.is_first:
+            rs.stage_cache = model_lib.init_chunk_cache(
+                self.cfg, 1, self._chunk_cap)
+            rs.stage_gates = []
+        c = len(work.tokens)
+        padded = np.pad(work.tokens, (0, C - c))
+        logits, rs.stage_cache, cstats = self._chunk_step(
+            self.params, rs.stage_cache,
+            {"tokens": jnp.asarray(padded[None])},
+            jnp.int32(work.start),
+            last_index=jnp.asarray([c - 1], jnp.int32))
+        if self.kv_mode == "paged":
+            rs.stage_gates.append(cstats["attn_gate"])
+        return logits
+
+    def _finish_prefill(self, rs: _RunState, work: PrefillChunk, logits,
+                        t0: float) -> None:
+        """Sample the first token from completed prefill logits, activate
+        the request, and finish it immediately if one token suffices."""
+        rs.stats.prefill_chunks += 1
+        rs.rng, sub = jax.random.split(rs.rng)
+        tok = int(np.asarray(sample(logits, sub, self.temperature))[0])
+        now = time.time()
+        rs.stats.prefill_s += now - t0
+        self.scheduler.prefill_advance(work)
+        _, reason = self._activate_prefilled(work.req, work.slot, tok,
+                                             rs.t_run, now, rs.stats)
+        if reason:
+            self._finish(rs, work.slot, reason)
+
+    def _prefill_work_dense(self, rs: _RunState, work: PrefillChunk, pool):
+        """Execute one dense-pool prefill work unit: either a legacy
+        monolithic (bucketed) prefill + pool insert, or one staging-cache
+        chunk (inserted into the pool on the last chunk)."""
+        t0 = time.time()
+        if not self.prefill_chunk:
+            padded, last = self.scheduler.pad_prompt(work.req.tokens)
+            logits, cache, _ = self._prefill(
+                self.params, {"tokens": jnp.asarray(padded[None])},
+                last_index=jnp.asarray([last], jnp.int32))
+            pool = self._insert(pool, cache, jnp.int32(work.slot))
+        else:
+            logits = self._chunk_forward(rs, work)
+            if not work.is_last:
+                # no sync: the chunk's compute overlaps the decode step
+                # dispatched right after it (async dispatch stream), so
+                # prefill_s here attributes host-side dispatch only
+                rs.stats.prefill_chunks += 1
+                rs.stats.prefill_s += time.time() - t0
+                self.scheduler.prefill_advance(work)
+                return pool
+            pool = self._insert_staged(pool, rs.stage_cache,
+                                       jnp.int32(work.slot))
+            rs.stage_cache = None
+        self._finish_prefill(rs, work, logits, t0)
+        return pool
+
+    def _prefill_work_paged(self, rs: _RunState, work: PrefillChunk, store):
+        """Execute one paged prefill work unit: prefill (monolithic or one
+        chunk), then pack the measured compact entries page-granular
+        through the ``PageAllocator`` once the prompt completes.  Chunked
+        mode reserves the prompt's worst-case pages at the first chunk —
+        chunk steps span engine iterations whose resident decode appends
+        also draw from the free list, so the completion-time pack must
+        never find the admission-time pages gone."""
+        cfg, alloc, nA = self.cfg, self.allocator, self.n_attn
+        reuse = paged_mod.reuse_enabled(cfg)
+        req, slot = work.req, work.slot
+        t0 = time.time()
+        if not self.prefill_chunk:
+            padded, last = self.scheduler.pad_prompt(req.tokens)
+            T0 = req.prompt_len
+            logits, cache, pstats = self._prefill_paged(
+                self.params, {"tokens": jnp.asarray(padded[None])},
+                last_index=jnp.asarray([last], jnp.int32))
+            gates = np.asarray(pstats["attn_gate"], np.float32)[:, 0]
+        else:
+            # worst-case pages were reserved at admission time in
+            # _run_paged (the reservation must not trail the _can_place
+            # check across iterations)
+            logits = self._chunk_forward(rs, work)
+            if not work.is_last:
+                # no sync: chunk compute overlaps this iteration's decode
+                # step (see _prefill_work_dense)
+                rs.stats.prefill_chunks += 1
+                rs.stats.prefill_s += time.time() - t0
+                self.scheduler.prefill_advance(work)
+                return store
+            T0 = req.prompt_len
+            cache = rs.stage_cache
+            gates = np.concatenate(
+                [np.asarray(g, np.float32) for g in rs.stage_gates],
+                axis=2)[:, 0]                                     # [nA, Tp]
+            rs.stage_cache = None
+            rs.stage_gates = []
+        n_ent = paged_mod.prefill_entry_count(gates, T0, reuse)
+        if not alloc.ensure(slot, n_ent + nA):
+            raise RuntimeError(
+                "page reservation failed after a successful _can_place "
+                "worst-case check — allocator bug")
+        store = self._pack(store, cache, jnp.asarray(gates), jnp.int32(T0),
+                           jnp.asarray(alloc.block_table[slot]))
+        alloc.append(slot, n_ent, nA * T0)
+        rs.hist.on_prefill(slot, gates, T0)
+        # admission order drives preemption victim choice; _finish pops the
+        # entry again when the first token already ends the request
+        rs.admit_seq[slot] = rs.seq
+        rs.seq += 1
+        self._finish_prefill(rs, work, logits, t0)
+        return store
+
     def _run_dense(self, rng: Optional[jax.Array] = None
                    ) -> Dict[str, object]:
-        """Fixed ``max_slots × max_len`` pool (the original engine mode)."""
+        """Fixed ``max_slots × max_len`` pool (the original engine mode).
+
+        Per iteration: consume ``plan_step`` plans — with chunking off the
+        prefill plans are drained first (the legacy admission order:
+        every placeable queued request prefills monolithically before the
+        decode step); with ``prefill_chunk > 0`` exactly one chunk runs
+        per iteration, so resident decodes proceed *between* chunks —
+        then one ragged decode step over every resident slot."""
         cfg = self.cfg
         sched = self.scheduler
         rng = rng if rng is not None else jax.random.PRNGKey(0)
-        stats = ServeStats()
-        results: Dict[int, RequestResult] = {}
+        rs = _RunState(stats=ServeStats(), results={}, t_run=time.time(),
+                       rng=rng)
+        stats = rs.stats
         L_attn = max(len(cfg.attention_layers), 1)
         measure = cfg.skip.enabled and cfg.skip.kv_reuse
 
         pool = init_pool(cfg, self.max_slots, self.max_len)
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
-        t_run = time.time()
-        keep_acc, keep_n = 0.0, 0.0
-
-        def finish(slot: int, reason: str) -> None:
-            st = sched.release(slot)
-            results[st.req.uid] = self._make_result(st, reason)
-            stats.requests_completed += 1
 
         while sched.has_work():
-            # -- admission: prefill queued requests into free slots --------
-            for slot, req in sched.admit():
-                padded, last = sched.pad_prompt(req.tokens)
-                t0 = time.time()
-                logits, cache, _ = self._prefill(
-                    self.params, {"tokens": jnp.asarray(padded[None])},
-                    last_index=jnp.asarray([last], jnp.int32))
-                pool = self._insert(pool, cache, jnp.int32(slot))
-                rng, sub = jax.random.split(rng)
-                tok = int(np.asarray(sample(logits, sub, self.temperature))[0])
-                now = time.time()
-                stats.prefill_s += now - t0
-                _, reason = self._activate_prefilled(req, slot, tok,
-                                                     t_run, now, stats)
-                if reason:
-                    finish(slot, reason)
+            # -- prefill work from the step planner ------------------------
+            pre_active = bool(sched.active)
+            did_prefill = False
+            while True:
+                plan = sched.plan_step(token_budget=self.step_tokens)
+                if plan.prefill is None:
+                    break
+                pool = self._prefill_work_dense(rs, plan.prefill, pool)
+                did_prefill = True
+                if self.prefill_chunk:
+                    break
+            if did_prefill and pre_active:
+                stats.interleaved_steps += 1
 
             if not sched.active:
                 continue
@@ -452,7 +749,7 @@ class ContinuousBatchingEngine:
             logits, pool, dstats = self._decode(
                 self.params, pool, {"tokens": jnp.asarray(feed[:, None])},
                 jnp.asarray(pos))
-            rng, sub = jax.random.split(rng)
+            rs.rng, sub = jax.random.split(rs.rng)
             toks = np.asarray(sample(logits, sub, self.temperature))
             gates = (np.asarray(dstats["attn_gate"], np.float32)
                      if "attn_gate" in dstats else None)
@@ -463,19 +760,32 @@ class ContinuousBatchingEngine:
                 st = sched.active[slot]
                 g = gates[:, slot] if gates is not None else None
                 if g is not None:
-                    keep_acc += float(g.sum())
-                    keep_n += L_attn
+                    rs.keep_acc += float(g.sum())
+                    rs.keep_n += L_attn
                 reason = self._advance_slot(st, int(toks[slot]), g, step_s,
                                             stats, measure, L_attn)
                 if reason:
-                    finish(slot, reason)
+                    self._finish(rs, slot, reason)
 
-        stats.attn_keep_frac = keep_acc / keep_n if keep_n else 1.0
+        return self._finalize(rs)
+
+    def _finalize(self, rs: _RunState) -> Dict[str, object]:
+        """Aggregate per-request accounting into the run's ServeStats."""
+        stats, results = rs.stats, rs.results
+        stats.attn_keep_frac = (rs.keep_acc / rs.keep_n if rs.keep_n
+                                else 1.0)
         tot_dense = sum(r.kv_dense for r in results.values())
         tot_stored = sum(r.kv_stored for r in results.values())
         stats.kv_saved_fraction = (1.0 - tot_stored / tot_dense
                                    if tot_dense else 0.0)
-        stats.kv_saved_analytic = analytic_kv_saved(cfg)
+        stats.kv_saved_analytic = analytic_kv_saved(self.cfg)
+        if self.kv_mode == "paged":
+            alloc = self.allocator
+            stats.pages_peak = alloc.stats.pages_peak
+            stats.kv_entries_stored = alloc.stats.entries_appended
+            stats.kv_entries_dense = alloc.stats.entries_dense
+            stats.history_hit_rate = rs.hist.hit_rate
+            stats.history_hits_per_layer = rs.hist.per_layer_hit_rate
         return {"results": results, "stats": stats}
 
     def _run_paged(self, rng: Optional[jax.Array] = None
@@ -483,11 +793,14 @@ class ContinuousBatchingEngine:
         """Paged-pool mode: KV lives in the store-once entry stream
         (``repro/kvcache/paged.py``) with alloc-on-demand pages.
 
-        Per iteration: (1) admit while the head request's worst-case prompt
-        entries fit in free pages; (2) *proactively* guarantee one decode
-        step of page headroom for every resident slot — preempting the
-        youngest resident (requeued at the head of the FIFO) if the free
-        list runs dry, so the step itself can never OOM; (3) one ragged
+        Per iteration: (1) *proactively* guarantee one decode step of page
+        headroom for every resident slot — preempting the youngest
+        resident (requeued at the head of the FIFO) if the free list runs
+        dry, so the step itself can never OOM; (2) consume one
+        ``plan_step`` plan — admission is gated on genuinely spare pages
+        via ``_can_place``, and at most one prefill work unit (a whole
+        prompt, or one chunk with ``prefill_chunk > 0``) runs per
+        iteration, the cadence this loop has always had; (3) one ragged
         decode step over all slots; (4) append the measured fresh entries
         and the history-buffer hit accounting from the returned gate log.
         """
@@ -498,42 +811,16 @@ class ContinuousBatchingEngine:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         reuse = paged_mod.reuse_enabled(cfg)
         measure = cfg.skip.enabled and cfg.skip.kv_reuse
-        stats = ServeStats(kv_mode="paged", page_size=self.page_size,
-                           pages_total=self.num_pages)
-        hist = history_mod.HistoryAccounting(nA, self.max_slots, reuse)
-        results: Dict[int, RequestResult] = {}
+        rs = _RunState(
+            stats=ServeStats(kv_mode="paged", page_size=self.page_size,
+                             pages_total=self.num_pages),
+            results={}, t_run=time.time(), rng=rng,
+            hist=history_mod.HistoryAccounting(nA, self.max_slots, reuse))
+        stats = rs.stats
 
         store = paged_mod.init_store(cfg, self.num_pages, self.page_size)
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
-        t_run = time.time()
-        keep_acc, keep_n = 0.0, 0.0
-        admit_seq: Dict[int, int] = {}
-        seq = 0
-
-        def finish(slot: int, reason: str) -> None:
-            st = sched.release(slot)
-            alloc.release(slot)
-            hist.on_release(slot)
-            admit_seq.pop(slot, None)
-            results[st.req.uid] = self._make_result(st, reason)
-            stats.requests_completed += 1
-
-        def preempt_youngest(exclude: int) -> bool:
-            """OOM backpressure: evict the most recently admitted resident
-            (≠ ``exclude``) and requeue it — its pages return to the free
-            list and it will re-prefill from scratch later."""
-            victims = [s for s in sched.active if s != exclude]
-            if not victims:
-                return False
-            slot = max(victims, key=lambda s: admit_seq[s])
-            st = sched.release(slot)
-            alloc.release(slot)
-            hist.on_release(slot)
-            admit_seq.pop(slot, None)
-            sched.requeue_front(st.req)
-            stats.preemptions += 1
-            return True
 
         while sched.has_work():
             # -- proactive headroom first: every resident can absorb one
@@ -544,45 +831,39 @@ class ContinuousBatchingEngine:
                 if slot not in sched.active:     # preempted below
                     continue
                 while not alloc.ensure(slot, int(alloc.fill[slot]) + nA):
-                    if not preempt_youngest(exclude=slot):
+                    if not self._preempt_youngest(rs, exclude=slot):
                         raise RuntimeError(
                             f"page pool exhausted with a single resident "
                             f"request (slot {slot}) — submit() should have "
                             "rejected it")
 
-            # -- admission: gated on free pages, not just free slots.
-            # One per iteration so each _can_place check sees the pages the
-            # previous admission actually consumed.  Admission itself
-            # reserves the newcomer's first-step headroom (the +nA below).
-            for slot, req in sched.admit(can_place=self._can_place,
-                                         limit=1):
-                padded, last = sched.pad_prompt(req.tokens)
-                T0 = req.prompt_len
-                t0 = time.time()
-                logits, cache, pstats = self._prefill_paged(
-                    self.params, {"tokens": jnp.asarray(padded[None])},
-                    last_index=jnp.asarray([last], jnp.int32))
-                gates = np.asarray(pstats["attn_gate"], np.float32)[:, 0]
-                n_ent = paged_mod.prefill_entry_count(gates, T0, reuse)
-                if not alloc.ensure(slot, n_ent + nA):
+            # -- prefill work from the step planner: admission gated on
+            # free pages, one work unit per iteration so each _can_place
+            # check sees the pages the previous admission consumed
+            pre_active = bool(sched.active)
+            plan = sched.plan_step(can_place=self._can_place,
+                                   token_budget=self.step_tokens)
+            # reserve a newly admitted prompt's worst-case pages NOW,
+            # inside the same iteration as its _can_place check: chunked
+            # execution and budget deferrals can postpone the first
+            # prefill work past intervening resident-headroom passes,
+            # which would otherwise consume the very pages the admission
+            # check counted as spare (ensure() is idempotent, so a
+            # deferred prompt re-running this is a no-op)
+            pf = sched.prefilling
+            if (pf is not None and pf.done == 0
+                    and (self.prefill_chunk
+                         or self.step_tokens is not None)):
+                if not alloc.ensure(pf.slot,
+                                    pf.req.prompt_len * nA + nA):
                     raise RuntimeError(
-                        "page reservation failed after a successful "
-                        "_can_place worst-case check — allocator bug")
-                store = self._pack(store, cache,
-                                   jnp.asarray(gates), jnp.int32(T0),
-                                   jnp.asarray(alloc.block_table[slot]))
-                alloc.append(slot, n_ent, nA * T0)
-                hist.on_prefill(slot, gates, T0)
-                rng, sub = jax.random.split(rng)
-                tok = int(np.asarray(sample(logits, sub, self.temperature))[0])
-                now = time.time()
-                stats.prefill_s += now - t0
-                _, reason = self._activate_prefilled(req, slot, tok,
-                                                     t_run, now, stats)
-                admit_seq[slot] = seq
-                seq += 1
-                if reason:
-                    finish(slot, reason)
+                        "worst-case page reservation failed in the same "
+                        "iteration as a successful _can_place admission "
+                        "check — allocator bug")
+            if plan.prefill is not None:
+                store = self._prefill_work_paged(rs, plan.prefill, store)
+                if pre_active:
+                    stats.interleaved_steps += 1
 
             if not sched.active:
                 continue
@@ -604,7 +885,7 @@ class ContinuousBatchingEngine:
                 jnp.asarray(pos),
                 jnp.asarray(alloc.block_table[:, :j_step]),
                 jnp.asarray(alloc.fill))
-            rng, sub = jax.random.split(rng)
+            rs.rng, sub = jax.random.split(rs.rng)
             toks = np.asarray(sample(logits, sub, self.temperature))
             gates = np.asarray(dstats["attn_gate"], np.float32)
             step_s = time.time() - t0
@@ -615,23 +896,12 @@ class ContinuousBatchingEngine:
                 g = gates[:, slot]
                 fresh_n = int(1 + (g[1:] > 0.5).sum()) if reuse else nA
                 alloc.append(slot, fresh_n, nA)
-                hist.on_decode_step(slot, g)
-                keep_acc += float(g.sum())
-                keep_n += nA
+                rs.hist.on_decode_step(slot, g)
+                rs.keep_acc += float(g.sum())
+                rs.keep_n += nA
                 reason = self._advance_slot(st, int(toks[slot]), g, step_s,
                                             stats, measure, nA)
                 if reason:
-                    finish(slot, reason)
+                    self._finish(rs, slot, reason)
 
-        stats.attn_keep_frac = keep_acc / keep_n if keep_n else 1.0
-        tot_dense = sum(r.kv_dense for r in results.values())
-        tot_stored = sum(r.kv_stored for r in results.values())
-        stats.kv_saved_fraction = (1.0 - tot_stored / tot_dense
-                                   if tot_dense else 0.0)
-        stats.kv_saved_analytic = analytic_kv_saved(cfg)
-        stats.pages_peak = alloc.stats.pages_peak
-        stats.kv_entries_stored = alloc.stats.entries_appended
-        stats.kv_entries_dense = alloc.stats.entries_dense
-        stats.history_hit_rate = hist.hit_rate
-        stats.history_hits_per_layer = hist.per_layer_hit_rate
-        return {"results": results, "stats": stats}
+        return self._finalize(rs)

@@ -17,6 +17,17 @@ tokens, so causal masking keeps every real position byte-identical — and
 is disabled (exact-length prefill) for stacks where padding perturbs
 state (SSM scans, ring-buffer local attention, gather-mode routing whose
 static capacity depends on T).
+
+Chunked prefill (``prefill_chunk > 0``): instead of prefilling a prompt
+monolithically — which stalls every resident decode slot for the whole
+prompt (head-of-line blocking) — the prompt is split into fixed-size
+chunks that ``plan_step()`` schedules *between* decode steps: each
+engine iteration advances the one in-flight prefill by at most one chunk
+while every resident still decodes, so no slot ever waits more than one
+chunk's worth of work for its next token.  This is the scheduler-level
+analogue of the paper's latency-hiding claim: prefill (the "reduction"
+of a new request into cache state) is interleaved with adjacent decode
+work instead of serializing in front of it.
 """
 from __future__ import annotations
 
@@ -31,7 +42,17 @@ from repro.configs.base import ATTN, ModelConfig
 
 @dataclasses.dataclass
 class Request:
-    """One generation request."""
+    """One generation request.
+
+    Fields:
+      uid            — engine-assigned id; the key of the final
+                       ``RequestResult`` in ``run()['results']``.
+      tokens         — ``[T0]`` int32 prompt token ids.
+      max_new_tokens — generation budget, *including* the first token
+                       sampled from the prefill logits.
+      stop_token     — optional token id that ends generation early (it
+                       is still emitted as the last output token).
+    """
     uid: int
     tokens: np.ndarray               # [T0] int32 prompt
     max_new_tokens: int
@@ -58,6 +79,11 @@ class ActiveRequest:
     # time spent in decode steps this request participated in (other
     # requests' interleaved admission prefills excluded)
     decode_s: float = 0.0
+    # decode-stall tracking: wall time of the longest gap between two
+    # consecutive token emissions (what an eagerly scheduled monolithic
+    # prefill of *another* request inflates)
+    last_emit_s: float = 0.0
+    max_stall_s: float = 0.0
     finish_reason: str = ""
 
 
@@ -79,19 +105,86 @@ def can_bucket(cfg: ModelConfig) -> bool:
     return all_global and not gather
 
 
+def can_chunk_prefill(cfg: ModelConfig) -> bool:
+    """Chunk-exactness condition: chunked prefill must be *resumable* (the
+    cached prefix fully determines the next chunk's state) and the final
+    chunk's right-padding must be inert.  Both hold exactly for the
+    bucketable stacks — all-global attention with masked-mode routing:
+    the per-layer KV views in the cache are the complete cross-layer
+    reuse state, and pads sit after the real tokens where causal masking
+    kills them.  Ring-buffer windows and SSM scans carry state that
+    cannot be split at arbitrary offsets, and gather-mode routing's
+    static capacity depends on the prefill extent, so those stacks
+    require monolithic (exact-length) prefill."""
+    return can_bucket(cfg)
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    """One unit of prefill work handed to the engine by ``plan_step``.
+
+    With chunking off this is the whole prompt (``is_first and is_last``);
+    with ``prefill_chunk > 0`` it is one C-token slice (the final slice
+    may be shorter — the engine right-pads it to C and masks)."""
+    req: Request
+    slot: int
+    start: int                       # token offset of this chunk
+    tokens: np.ndarray               # [c] real tokens (c <= prefill_chunk)
+    is_first: bool
+    is_last: bool
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One engine iteration's worth of work: every resident decode slot
+    plus at most one prefill chunk (the scheduler-level interleaving that
+    removes prefill head-of-line blocking)."""
+    decode_slots: List[int]
+    prefill: Optional[PrefillChunk]
+
+    @property
+    def tokens(self) -> int:
+        """Tokens this step computes (the planner's budget currency)."""
+        n = len(self.decode_slots)
+        return n + (len(self.prefill.tokens) if self.prefill else 0)
+
+
+@dataclasses.dataclass
+class _InflightPrefill:
+    """Host-side progress of the one prompt currently being prefilled."""
+    req: Request
+    slot: int
+    done: int = 0                    # tokens already prefilled
+    deferred: int = 0                # consecutive budget deferrals
+
+
 class Scheduler:
-    """FIFO queue + slot free-list + prefill length-bucketing."""
+    """FIFO queue + slot free-list + prefill length-bucketing + the
+    chunked-prefill step planner.
+
+    The engine drives one iteration as: (optional paged-memory headroom
+    pass) → ``plan_step()`` → execute the returned prefill chunk, if any
+    → one ragged decode step over the resident slots.  ``plan_step``
+    owns admission: it pops the FIFO head into a free slot (gated on the
+    engine's ``can_place`` memory predicate) and then metes the prompt
+    out one chunk per call, so decode steps run *between* chunks.
+    """
 
     def __init__(self, max_slots: int, max_len: int,
-                 buckets: Optional[Sequence[int]] = None):
+                 buckets: Optional[Sequence[int]] = None,
+                 prefill_chunk: int = 0):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
+        if prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0 (0 = monolithic)")
         self.max_slots = max_slots
         self.max_len = max_len
         self.buckets = tuple(sorted(buckets)) if buckets else None
+        self.prefill_chunk = prefill_chunk
         self.queue: Deque[Request] = deque()
         self._free: List[int] = list(range(max_slots - 1, -1, -1))
         self.active: Dict[int, ActiveRequest] = {}
+        self._prefilling: Optional[_InflightPrefill] = None
 
     # -- queue -------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -108,7 +201,79 @@ class Scheduler:
         return len(self._free)
 
     def has_work(self) -> bool:
-        return bool(self.queue or self.active)
+        return bool(self.queue or self.active or self._prefilling)
+
+    # -- step planning ------------------------------------------------------
+    def plan_step(self, can_place=None,
+                  token_budget: Optional[int] = None) -> StepPlan:
+        """Plan one engine iteration.
+
+        Admission: when no prefill is in flight, the FIFO head is popped
+        into a free slot iff ``can_place(request)`` passes (the paged
+        engine's free-page gate; FIFO order is preserved — a blocked head
+        back-pressures the queue).  The in-flight prompt then yields one
+        ``PrefillChunk`` per call (the whole prompt when chunking is off).
+
+        ``token_budget`` caps the step's token count (decode slots each
+        cost 1; the chunk costs its length).  An over-budget chunk is
+        deferred — decode-only step — but never twice in a row, and never
+        when there is no decode work to prioritize, so prefill cannot
+        starve.  Newly activated requests join the decode set only on the
+        *next* plan (the engine decodes the live resident set, which
+        includes a request the moment its last chunk completes)."""
+        if self._prefilling is None and self.queue and self._free:
+            if can_place is None or can_place(self.queue[0]):
+                req = self.queue.popleft()
+                slot = self._free.pop()
+                self._prefilling = _InflightPrefill(req=req, slot=slot)
+        decode_slots = sorted(self.active)
+        chunk: Optional[PrefillChunk] = None
+        if self._prefilling is not None:
+            pf = self._prefilling
+            T0 = pf.req.prompt_len
+            C = self.prefill_chunk if self.prefill_chunk else T0
+            c = min(C, T0 - pf.done)
+            over = (token_budget is not None and decode_slots
+                    and len(decode_slots) + c > token_budget)
+            if over and pf.deferred < 1:
+                pf.deferred += 1
+            else:
+                pf.deferred = 0
+                toks = np.asarray(pf.req.tokens, np.int32)
+                chunk = PrefillChunk(
+                    req=pf.req, slot=pf.slot, start=pf.done,
+                    tokens=toks[pf.done:pf.done + c],
+                    is_first=pf.done == 0, is_last=pf.done + c >= T0)
+        return StepPlan(decode_slots=decode_slots, prefill=chunk)
+
+    def prefill_advance(self, chunk: PrefillChunk) -> None:
+        """Record that ``chunk`` was executed; the in-flight state clears
+        on the last chunk (the engine then activates the request)."""
+        pf = self._prefilling
+        assert pf is not None and pf.slot == chunk.slot, "no such prefill"
+        pf.done += len(chunk.tokens)
+        if pf.done >= pf.req.prompt_len:
+            self._prefilling = None
+
+    @property
+    def prefilling(self) -> Optional[_InflightPrefill]:
+        """The in-flight prefill, if any (chunked mode can span engine
+        iterations; monolithic prefill completes within its own)."""
+        return self._prefilling
+
+    def abort_prefill(self) -> _InflightPrefill:
+        """Cancel the in-flight prefill: its slot returns to the free
+        list and the request goes back to the head of the FIFO (it will
+        re-prefill from scratch).  The paged engine uses this as OOM
+        backpressure — the in-flight prompt is the newest admission and
+        has no decode progress to lose, so it is the cheapest victim
+        when residents need page headroom."""
+        pf = self._prefilling
+        assert pf is not None, "no prefill in flight"
+        self._prefilling = None
+        self._free.append(pf.slot)
+        self.queue.appendleft(pf.req)
+        return pf
 
     # -- admission / eviction ---------------------------------------------
     def admit(self, can_place=None,

@@ -1,0 +1,337 @@
+"""Chunked prefill (resumable prefill + mixed prefill/decode steps).
+
+Token identity: chunked prefill must be bit-compatible with monolithic
+prefill — per-token router gates, cross-layer KV-view merges and the
+fused pipeline's Σy² carry only ever read their own token's column, and
+attention reads the same per-layer view values — on both the dense-pool
+and paged engines, with and without the Pallas kernel path, including
+chunk sizes that do not divide the prompt.  Scheduling: the step planner
+interleaves at most one chunk per engine iteration with a full resident
+decode step, so no resident slot is ever starved by a long prompt.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.engine import ContinuousBatchingEngine
+from repro.serve.scheduler import (Request, Scheduler, can_chunk_prefill)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(name="llama2-7b", **over):
+    cfg = get_config(name).smoke()
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (l,), dtype=np.int32)
+            for l in lens]
+
+
+def _chunked_prefill(params, cfg, p, C, cap=None):
+    """Drive model.prefill_chunk over a prompt; returns (logits, cache,
+    gates [L, 1, Tp])."""
+    T0 = len(p)
+    cap = cap if cap is not None else -(-T0 // C) * C
+    cache = M.init_chunk_cache(cfg, 1, cap)
+    gates = []
+    logits = None
+    for s in range(0, T0, C):
+        chunk = p[s:s + C]
+        c = len(chunk)
+        padded = np.pad(chunk, (0, C - c))
+        logits, cache, st = M.prefill_chunk(
+            params, cache, {"tokens": jnp.asarray(padded[None])},
+            jnp.int32(s), cfg, last_index=jnp.asarray([c - 1], jnp.int32))
+        gates.append(np.asarray(st["attn_gate"], np.float32))
+    return logits, cache, np.concatenate(gates, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Model level: chunked == monolithic, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T0,C", [(21, 8), (16, 16), (13, 4), (7, 16)])
+def test_prefill_chunk_matches_monolithic(T0, C):
+    """Logits, per-layer cache views and the execution-gate log must all
+    match monolithic prefill — including non-dividing chunk sizes (the
+    final chunk is right-padded and masked) and a single oversized
+    chunk (T0 < C)."""
+    cfg = _cfg()
+    params = M.init_params(KEY, cfg)
+    (p,) = _prompts(cfg, [T0])
+    lg_mono, cache_mono, st_mono = M.prefill(
+        params, {"tokens": jnp.asarray(p[None])}, cfg)
+    lg_ch, cache_ch, g_ch = _chunked_prefill(params, cfg, p, C)
+
+    np.testing.assert_array_equal(np.asarray(st_mono["attn_gate"]),
+                                  g_ch[:, :, :T0])
+    np.testing.assert_allclose(np.asarray(lg_ch, np.float32),
+                               np.asarray(lg_mono, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    assert int(jnp.argmax(lg_ch[0])) == int(jnp.argmax(lg_mono[0]))
+    # every layer's dense KV view is reproduced position by position
+    for key in ("k", "v"):
+        a = np.asarray(cache_mono["stage0"]["pos0"][key], np.float32)
+        b = np.asarray(cache_ch["stage0"]["pos0"][key], np.float32)
+        np.testing.assert_allclose(a[:, :T0], b[:, :T0], rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_prefill_chunk_carry_equivalence_under_kernels():
+    """The fused pipeline's Σy² incremental-reduction carry threads
+    through chunk boundaries exactly: under use_kernels the chunked
+    logits (whose final norm consumes the carried reduction) match the
+    monolithic kernel path."""
+    cfg = _cfg(use_kernels=True)
+    params = M.init_params(KEY, cfg)
+    (p,) = _prompts(cfg, [19])
+    lg_mono, _, st_mono = M.prefill(params, {"tokens": jnp.asarray(p[None])},
+                                    cfg)
+    lg_ch, _, g_ch = _chunked_prefill(params, cfg, p, 8)
+    np.testing.assert_array_equal(np.asarray(st_mono["attn_gate"]),
+                                  g_ch[:, :, :19])
+    np.testing.assert_allclose(np.asarray(lg_ch, np.float32),
+                               np.asarray(lg_mono, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    assert int(jnp.argmax(lg_ch[0])) == int(jnp.argmax(lg_mono[0]))
+
+
+def test_init_chunk_cache_rejects_hybrid_stack():
+    cfg = get_config("jamba-v0.1-52b").smoke()
+    with pytest.raises(ValueError, match="all-global-attn"):
+        M.init_chunk_cache(cfg, 1, 32)
+
+
+# ---------------------------------------------------------------------------
+# Engine level: chunked == monolithic token identity
+# ---------------------------------------------------------------------------
+
+def _run_engine(cfg, params, prompts, max_new=5, max_slots=2, max_len=48,
+                **kw):
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=max_slots,
+                                   max_len=max_len, **kw)
+    uids = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    out = eng.run()
+    assert out["stats"].requests_completed == len(prompts)
+    return {u: out["results"][u].tokens for u in uids}, out["stats"]
+
+
+@pytest.mark.parametrize("kv_mode", ["dense", "paged"])
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_engine_chunked_token_identity(kv_mode, use_kernels):
+    """Chunked == monolithic on both engines, jnp and kernel paths, with
+    prompts longer/shorter than the chunk and non-dividing lengths."""
+    cfg = _cfg(use_kernels=True) if use_kernels else _cfg()
+    params = M.init_params(KEY, cfg)
+    prompts = _prompts(cfg, [9, 21, 5, 30])
+    mono, s_mono = _run_engine(cfg, params, prompts, kv_mode=kv_mode)
+    chunked, s_ch = _run_engine(cfg, params, prompts, kv_mode=kv_mode,
+                                prefill_chunk=8)
+    for u in mono:
+        np.testing.assert_array_equal(mono[u], chunked[u])
+    # 9->2, 21->3, 5->1, 30->4 chunks of 8
+    assert s_ch.prefill_chunks == 10
+    assert s_mono.prefill_chunks == len(prompts)
+    assert s_ch.interleaved_steps > 0
+
+
+def test_engine_chunked_token_identity_bhtd():
+    """Head-major pool layout: the staging cache stays time-major and the
+    insert-time transpose must still land every chunk correctly."""
+    cfg = _cfg(kv_cache_layout="bhtd")
+    params = M.init_params(KEY, cfg)
+    prompts = _prompts(cfg, [9, 21, 30])
+    mono, _ = _run_engine(cfg, params, prompts)
+    chunked, _ = _run_engine(cfg, params, prompts, prefill_chunk=8)
+    for u in mono:
+        np.testing.assert_array_equal(mono[u], chunked[u])
+
+
+def test_engine_chunked_paged_entry_stream_identical():
+    """Gate-log equivalence across chunk boundaries: the paged entry
+    stream packed from accumulated chunk gates must count exactly the
+    entries the monolithic pack counts (same compact-store saving)."""
+    cfg = _cfg()
+    params = M.init_params(KEY, cfg)
+    prompts = _prompts(cfg, [13, 27])
+    _, s_mono = _run_engine(cfg, params, prompts, kv_mode="paged")
+    _, s_ch = _run_engine(cfg, params, prompts, kv_mode="paged",
+                          prefill_chunk=8)
+    assert s_ch.kv_entries_stored == s_mono.kv_entries_stored
+    assert s_ch.kv_entries_dense == s_mono.kv_entries_dense
+    assert s_ch.history_hit_rate == pytest.approx(s_mono.history_hit_rate)
+
+
+@pytest.mark.parametrize("num_pages", [13, 12])
+def test_engine_chunked_paged_prefill_abort_under_pressure(num_pages):
+    """A chunked prefill spans engine iterations while holding its
+    worst-case page reservation without yet being a resident; when a
+    resident's headroom pass runs the free list dry, the in-flight
+    prefill must be *aborted* (pages released, request requeued) instead
+    of the engine dying on 'pool exhausted' — and the retried prefill
+    must leave tokens identical (regression: pools sized so the abort
+    path actually fires)."""
+    cfg = _cfg()
+    params = M.init_params(KEY, cfg)
+    prompts = _prompts(cfg, [10, 12, 8])
+    mono, _ = _run_engine(cfg, params, prompts, max_new=8, max_slots=3,
+                          max_len=32)
+    chunked, s = _run_engine(cfg, params, prompts, max_new=8, max_slots=3,
+                             max_len=32, kv_mode="paged", prefill_chunk=4,
+                             num_pages=num_pages, page_size=4)
+    for u in mono:
+        np.testing.assert_array_equal(mono[u], chunked[u])
+    assert s.preemptions > 0          # the abort path actually ran
+
+
+@pytest.mark.parametrize("kw", [
+    dict(prefill_chunk=4, step_tokens=4),
+    dict(prefill_chunk=4, step_tokens=3),
+    dict(step_tokens=4),                  # budget-deferred monolithic
+])
+def test_engine_paged_budget_deferral_reserves_at_admission(kw):
+    """Regression (code review): a step_tokens budget can defer the first
+    prefill work unit past the admission iteration; the worst-case page
+    reservation must happen in the same iteration as the _can_place
+    check, or the intervening resident-headroom pass consumes the pages
+    the check counted as spare and the run dies on a spurious
+    'allocator bug' RuntimeError."""
+    cfg = _cfg()
+    params = M.init_params(KEY, cfg)
+    prompts = _prompts(cfg, [10, 12, 8])
+    mono, _ = _run_engine(cfg, params, prompts, max_new=8, max_slots=3,
+                          max_len=32)
+    chunked, s = _run_engine(cfg, params, prompts, max_new=8, max_slots=3,
+                             max_len=32, kv_mode="paged", num_pages=12,
+                             page_size=4, **kw)
+    for u in mono:
+        np.testing.assert_array_equal(mono[u], chunked[u])
+
+
+def test_engine_rejects_chunking_on_unchunkable_cfg():
+    """Ring-buffer and SSM state cannot resume at arbitrary offsets and
+    gather-mode capacity depends on the prefill extent — the exactness
+    guard must refuse chunking there."""
+    cfg = get_config("gemma3-12b").smoke()
+    params = M.init_params(KEY, cfg)
+    with pytest.raises(ValueError, match="prefill_chunk=0"):
+        ContinuousBatchingEngine(cfg, params, max_slots=1, max_len=32,
+                                 prefill_chunk=8)
+    g = _cfg()
+    g = dataclasses.replace(g, skip=dataclasses.replace(g.skip,
+                                                        mode="gather"))
+    assert not can_chunk_prefill(g)
+    assert can_chunk_prefill(_cfg())
+    assert not can_chunk_prefill(get_config("jamba-v0.1-52b").smoke())
+
+
+def test_cfg_prefill_chunk_lever_is_engine_default():
+    """The config lever seeds the engine default; the constructor arg
+    overrides it."""
+    cfg = _cfg(prefill_chunk=8)
+    params = M.init_params(KEY, cfg)
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=1, max_len=32)
+    assert eng.prefill_chunk == 8
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=1, max_len=32,
+                                   prefill_chunk=0)
+    assert eng.prefill_chunk == 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: step planning, budget, starvation guard, decode-not-starved
+# ---------------------------------------------------------------------------
+
+def test_plan_step_metes_out_chunks():
+    sched = Scheduler(max_slots=2, max_len=64, prefill_chunk=8)
+    sched.submit(Request(uid=0, tokens=np.zeros(21, np.int32),
+                         max_new_tokens=4))
+    seen = []
+    while True:
+        plan = sched.plan_step()
+        if plan.prefill is None:
+            break
+        seen.append((plan.prefill.start, len(plan.prefill.tokens),
+                     plan.prefill.is_first, plan.prefill.is_last))
+        sched.prefill_advance(plan.prefill)
+    assert seen == [(0, 8, True, False), (8, 8, False, False),
+                    (16, 5, False, True)]
+    assert not sched.has_work() or sched.queue  # in-flight state cleared
+
+
+def test_plan_step_whole_prompt_when_chunking_off():
+    sched = Scheduler(max_slots=1, max_len=64)
+    sched.submit(Request(uid=0, tokens=np.zeros(21, np.int32),
+                         max_new_tokens=4))
+    plan = sched.plan_step()
+    assert plan.prefill.is_first and plan.prefill.is_last
+    assert len(plan.prefill.tokens) == 21
+    assert plan.tokens == 21
+
+
+def test_plan_step_budget_defers_but_never_starves():
+    """An over-budget chunk yields a decode-only step once, then runs
+    regardless (prefill cannot be starved by the budget)."""
+    from repro.serve.scheduler import ActiveRequest
+    sched = Scheduler(max_slots=2, max_len=64, prefill_chunk=8)
+    sched.activate(ActiveRequest(
+        req=Request(uid=9, tokens=np.zeros(4, np.int32), max_new_tokens=32),
+        slot=0, pos=4))
+    sched.submit(Request(uid=0, tokens=np.zeros(16, np.int32),
+                         max_new_tokens=4))
+    plan = sched.plan_step(token_budget=4)      # 1 decode + 8 > 4 -> defer
+    assert plan.prefill is None and plan.decode_slots == [0]
+    plan = sched.plan_step(token_budget=4)      # starvation guard fires
+    assert plan.prefill is not None
+    sched.prefill_advance(plan.prefill)
+    # without decode work the budget never blocks prefill
+    sched2 = Scheduler(max_slots=1, max_len=64, prefill_chunk=8)
+    sched2.submit(Request(uid=1, tokens=np.zeros(16, np.int32),
+                          max_new_tokens=4))
+    assert sched2.plan_step(token_budget=1).prefill is not None
+
+
+def test_plan_step_admission_respects_can_place():
+    sched = Scheduler(max_slots=2, max_len=64, prefill_chunk=8)
+    sched.submit(Request(uid=0, tokens=np.zeros(8, np.int32),
+                         max_new_tokens=4))
+    plan = sched.plan_step(can_place=lambda r: False)
+    assert plan.prefill is None and sched.queue      # backpressure
+    plan = sched.plan_step(can_place=lambda r: True)
+    assert plan.prefill is not None and not sched.queue
+
+
+def test_decode_not_starved_by_long_prompt():
+    """While a long prompt prefills chunk by chunk, a resident slot keeps
+    emitting a token every engine iteration: its worst inter-token gap
+    (in iterations) is 1 — far below the ceil(T0/chunk) bound — which is
+    visible as interleaved_steps covering every chunk of the long
+    prompt's prefill."""
+    cfg = _cfg()
+    params = M.init_params(KEY, cfg)
+    rng = np.random.default_rng(0)
+    short = rng.integers(0, cfg.vocab_size, (4,), dtype=np.int32)
+    long_p = rng.integers(0, cfg.vocab_size, (32,), dtype=np.int32)
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_len=48,
+                                   prefill_chunk=8)
+    u_short = eng.submit(short, max_new_tokens=12)
+    u_long = eng.submit(long_p, max_new_tokens=2)
+    out = eng.run()
+    s = out["stats"]
+    # the long prompt needs ceil(32/8)=4 chunks; the short request was
+    # resident for at least 3 of them (its own prefill takes the first
+    # iteration), each an interleaved prefill+decode step
+    assert s.prefill_chunks == 1 + 4
+    assert s.interleaved_steps >= 3
+    assert out["results"][u_short].tokens.shape[0] == 12
+    assert out["results"][u_long].tokens.shape[0] == 2
+    # stall instrumentation is populated (the wall-clock comparison with
+    # the eager baseline is CI-gated in benchmarks/bench_chunked_prefill)
+    assert out["results"][u_short].max_decode_stall_s > 0.0

@@ -1,0 +1,72 @@
+"""Validate that every intra-repo markdown link resolves.
+
+  python tools/check_docs.py [repo_root]
+
+Scans every tracked ``*.md`` file for inline links/images
+(``[text](target)``) and reference definitions (``[ref]: target``),
+skips external schemes (http/https/mailto) and pure anchors, resolves
+relative targets against the containing file, and exits non-zero listing
+every target that does not exist.  Run by the CI ``docs-check`` job so
+renames/moves cannot silently rot the documentation graph.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import List, Tuple
+
+# inline [text](target) — target up to the first unescaped ')'; tolerates
+# image links (the preceding '!' is irrelevant to resolution)
+_INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# reference-style definitions:  [ref]: target
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced code blocks and inline code spans — link syntax inside
+    them is illustrative, not a real link."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`\n]*`", "", text)
+
+
+def targets_of(md: pathlib.Path) -> List[str]:
+    text = _strip_code(md.read_text(encoding="utf-8"))
+    return _INLINE.findall(text) + _REFDEF.findall(text)
+
+
+def check_repo(root: pathlib.Path) -> List[Tuple[pathlib.Path, str]]:
+    """Returns [(markdown file, broken target)] over every *.md under
+    ``root`` (skipping dot-directories and virtualenv-ish trees)."""
+    broken: List[Tuple[pathlib.Path, str]] = []
+    for md in sorted(root.rglob("*.md")):
+        if any(part.startswith(".") or part in ("node_modules", "venv")
+               for part in md.relative_to(root).parts[:-1]):
+            continue
+        for target in targets_of(md):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (root / path if path.startswith("/")
+                        else md.parent / path)
+            if not resolved.exists():
+                broken.append((md, target))
+    return broken
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    broken = check_repo(root)
+    for md, target in broken:
+        print(f"BROKEN {md.relative_to(root)}: ({target})")
+    n_md = len(list(root.rglob("*.md")))
+    print(f"checked {n_md} markdown files: "
+          f"{'all links resolve' if not broken else f'{len(broken)} broken'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
