@@ -46,6 +46,11 @@ def run(quick: bool = False) -> Rows:
              f"hit_rate={hits['hit_rate']:.3f};"
              f"layer1={hits['per_layer'][1]:.3f};"
              f"analytic={1.0 - (1.0 + (L - 1) * keep) / L:.3f}")
+    # deterministic (seeded transaction model) — gated by bench_compare
+    rows.meta = {
+        "eff_frac": {name: float(frac) for name, frac in eff.items()},
+        "history_hit_rate": float(hits["hit_rate"]),
+    }
     return rows
 
 

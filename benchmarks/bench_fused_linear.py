@@ -24,7 +24,7 @@ from benchmarks.common import Rows, time_fn
 from repro.configs import get_config
 from repro.kernels import ops
 from repro.quant import quantize_rtn
-from repro.roofline import fusion_report
+from repro.roofline import fusion_report, tp_sweep
 
 MIN_ACT_DROP = 0.20
 
@@ -118,6 +118,25 @@ def run(quick: bool = False) -> Rows:
             f"{tag}: fused total bytes not below unfused"
         assert act_drop >= MIN_ACT_DROP, \
             f"{tag}: activation-byte drop {act_drop:.3f} < {MIN_ACT_DROP}"
+
+    # --- per-device view under tensor-parallel serving -----------------------
+    # (the sharded engine's bandwidth story: weight bytes fall exactly
+    # 1/TP, per-chip totals ~1/TP while decode stays weight-dominated)
+    cfg = get_config("llama2-7b")
+    sweep = tp_sweep(cfg, batch=128)
+    meta["tp_sweep"] = {"llama2-7b": sweep}
+    w1 = sweep["per_chip"]["1"]["weight_bytes"]
+    prev_total = float("inf")
+    for tp in sweep["tps"]:
+        r = sweep["per_chip"][str(tp)]
+        assert abs(r["weight_bytes"] - w1 / tp) < 1e-6 * w1, \
+            f"tp={tp}: per-chip weight bytes not 1/TP"
+        assert r["total_bytes"] < prev_total, \
+            f"tp={tp}: per-chip total bytes not strictly decreasing"
+        prev_total = r["total_bytes"]
+        rows.add(f"fused_linear/tp_view/llama2-7b/tp{tp}", 0.0,
+                 f"per_chip_total={r['total_bytes']:.3e};"
+                 f"vs_tp1={r['total_vs_tp1']:.4f}")
     rows.meta = meta
     return rows
 

@@ -35,6 +35,9 @@ def run(quick: bool = False) -> Rows:
         analytic = 1.0 - (1.0 + (L - 1) * keep) / L
         rows.add(f"kv_storage/p{pre}d{dec}", 0.0,
                  f"saved={measured:.3f};analytic={analytic:.3f};paper=0.254")
+        if not rows.meta:
+            # deterministic (seeded) — gated by tools/bench_compare.py
+            rows.meta = {"saved_fraction": measured, "analytic": analytic}
     return rows
 
 

@@ -93,6 +93,12 @@ def run(quick: bool = False) -> Rows:
     rows.add("paged_kv/history_hits", 0.0,
              f"hit_rate={s.history_hit_rate:.3f};"
              f"per_layer={'|'.join(f'{h:.3f}' for h in s.history_hits_per_layer)}")
+    # deterministic (seeded greedy decode) — gated by tools/bench_compare.py
+    rows.meta = {
+        "peak_kv_vs_dense": paged_bytes / dense_bytes,
+        "live_entry_saving": s.kv_entries_saved_fraction,
+        "history_hit_rate": s.history_hit_rate,
+    }
     return rows
 
 

@@ -184,7 +184,7 @@ def routed_attention(p: Params, x: jnp.ndarray,
         "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
     stats["attn_gate"] = gate
     if out_sq is not None:
-        stats["res_sq"] = out_sq
+        stats["res_sq"] = hint(out_sq, "res_sq")
     return x, view, stats
 
 
@@ -249,7 +249,7 @@ def routed_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
         "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
     stats.update(aux)
     if out_sq is not None:
-        stats["res_sq"] = out_sq
+        stats["res_sq"] = hint(out_sq, "res_sq")
     return x, stats
 
 
@@ -268,7 +268,7 @@ def _decode_output_epilogue(inner: Params, o: jnp.ndarray, x: jnp.ndarray,
         x, sq = attn_mod.output_proj_fused(
             inner, o, cfg, residual=x,
             gate_mul=gate[:, None] if routed else None, emit_sq=True)
-        stats["res_sq"] = sq / x.shape[-1]
+        stats["res_sq"] = hint(sq / x.shape[-1], "res_sq")
         return x
     y = attn_mod.output_proj(inner, o, cfg)
     if routed:
@@ -416,7 +416,7 @@ def routed_attention_chunk(p: Params, x: jnp.ndarray,
             inner, o, cfg, residual=x,
             gate_mul=gate if routed else None, emit_sq=True)
         x = hint(x, "activation")
-        stats["res_sq"] = sq / x.shape[-1]
+        stats["res_sq"] = hint(sq / x.shape[-1], "res_sq")
     else:
         y = attn_mod.output_proj(inner, o, cfg)
         if routed:
@@ -552,7 +552,7 @@ def routed_mlp_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
         x, sq = layers.mlp_apply_fused(
             p["inner"], x, cfg, norm=p["norm"], stats=nstats, residual=x,
             gate_mul=gate[:, None] if routed else None, emit_sq=True)
-        stats["res_sq"] = sq / D
+        stats["res_sq"] = hint(sq / D, "res_sq")
         return x, stats
     xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
     y, aux = inner_fn(p["inner"], xn)

@@ -1,10 +1,14 @@
 """Version-compat shims for the distributed APIs that moved across JAX
-releases (the distributed tests run against whatever jax the host has):
+releases (the distributed tests run against whatever jax the host has,
+and the CI tier-1 matrix pins the oldest supported release):
 
 * ``shard_map``: ``jax.experimental.shard_map.shard_map(..., check_rep=)``
   in 0.4.x, promoted to ``jax.shard_map(..., check_vma=)`` later;
-* ``AbstractMesh``: ``AbstractMesh(((name, size), ...))`` in 0.4.x,
-  ``AbstractMesh(axis_sizes, axis_names)`` later.
+* ``AbstractMesh``: absent before 0.4.3x (``has_abstract_mesh``), then
+  ``AbstractMesh(((name, size), ...))``, then
+  ``AbstractMesh(axis_sizes, axis_names)``;
+* ``make_mesh``: ``jax.make_mesh`` only exists from 0.4.35 — older
+  releases build a ``Mesh`` over ``mesh_utils.create_device_mesh``.
 """
 from __future__ import annotations
 
@@ -22,6 +26,28 @@ def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=check)
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` (0.4.35+) or the Mesh-over-device-grid spelling
+    older releases require."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(shape), tuple(axis_names))
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+    return Mesh(mesh_utils.create_device_mesh(tuple(shape)),
+                tuple(axis_names))
+
+
+def has_abstract_mesh() -> bool:
+    """True when this jax ships ``jax.sharding.AbstractMesh`` (the
+    device-free mesh the spec-construction tests build production
+    topologies from; tests skip it on older pins)."""
+    try:
+        from jax.sharding import AbstractMesh  # noqa: F401
+        return True
+    except ImportError:
+        return False
 
 
 def abstract_mesh(axes: Sequence[Tuple[str, int]]) -> Any:

@@ -44,6 +44,23 @@ def _path_str(path) -> str:
 _SERVE_HBM_BUDGET = 12e9   # per-chip bytes before serve mode re-shards weights
 
 
+def _fitted_spec(mesh, shape, spec) -> P:
+    """Drop spec axes whose mesh-axis product doesn't divide their dim
+    (jit in/out shardings require exact divisibility; the surviving axes
+    still pin the layout — param_specs, cache_specs and hint all share
+    this partial-fit rule so constraints never fight each other)."""
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is not None:
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            if not size or dim % size != 0:
+                ax = None
+        fixed.append(ax)
+    return P(*fixed)
+
+
 @dataclass
 class ShardingPolicy:
     mesh: Mesh
@@ -102,16 +119,30 @@ class ShardingPolicy:
             "logits": P(dp, None, "model"),
             # [B, T, Hq, dh]
             "q_heads": P(dp, None, "model", None),
-            # [B, T, Hkv, dh] (kv heads usually < model size => replicated)
-            "kv_heads": P(dp, None, None, None),
-            # decode-step KV cache [B, T, Hkv, dh]: sequence-parallel over model
-            "kv_cache_step": P(dp, "model", None, None),
+            # [B, T, Hkv, dh] — serve mode head-shards (matching the
+            # head-sharded attention split and the serve cache_specs);
+            # training replicates (kv heads usually < model size there)
+            "kv_heads": (P(dp, None, None, None) if train
+                         else P(dp, None, "model", None)),
+            # decode-step KV cache [B, T, Hkv, dh]: sequence-parallel over
+            # model in training; head-sharded at serve time (each device
+            # owns Hkv/TP heads of the whole history — no cross-device
+            # traffic inside the attention dot)
+            "kv_cache_step": (P(dp, "model", None, None) if train
+                              else P(dp, None, "model", None)),
             # head-major decode cache [B, Hkv, T, dh]
-            "kv_cache_step_bhtd": P(dp, None, "model", None),
+            "kv_cache_step_bhtd": (P(dp, None, "model", None) if train
+                                   else P(dp, "model", None, None)),
             # prefill/train KV view [B, T, Hkv, dh]: carried across the layer
-            # scan — sequence-parallel in training for the same reason.
+            # scan — sequence-parallel in training for the same reason;
+            # head-sharded at serve time like the caches it feeds.
             "kv_view": (P(dp, "model", None, None) if train
-                        else P(dp, None, None, None)),
+                        else P(dp, None, "model", None)),
+            # [B, T] per-token Σy² carry (incremental-reduction): follows
+            # the residual it accompanies — sequence-sharded in training,
+            # replicated over model at serve time (every device needs the
+            # full-row norm to take identical routing/sampling decisions)
+            "res_sq": P(dp, "model") if train else P(dp, None),
             # [E, C, D]
             "moe_buffer": P("model", None, None) if ep else P(None, "model", None),
             # [B, T] routing masks
@@ -172,19 +203,34 @@ class ShardingPolicy:
                 return P(fsdp, "model")
             return P(fsdp, None)
         if path.endswith("wo/w"):
-            return P("model", fsdp)
+            # training: Megatron row-parallel (input dim over model — one
+            # psum per block).  serve: column split over the *output* dim —
+            # the head-sharded attention output is all-gathered instead,
+            # so no cross-device reduction ever reorders fp sums and the
+            # sharded engine stays bit-identical to the unsharded one (the
+            # serving identity contract tests/test_sharded_serve.py pins;
+            # all-gathers move the same bytes as the psum at decode M).
+            return (P("model", fsdp) if self.mode == "train"
+                    else P(fsdp, "model"))
         # --- MLP ---
         if path.endswith(("gu/w", "up/w", "gate/w")):
             return P(fsdp, "model")
         if path.endswith("down/w"):
-            return P("model", fsdp)
+            # row-parallel in training, column split at serve time — same
+            # bit-identity rationale as wo/w above.
+            return (P("model", fsdp) if self.mode == "train"
+                    else P(fsdp, "model"))
         # --- SSM ---
         if re.search(r"in_proj_(z|x)/w$", path):
             return P(fsdp, "model")
         if re.search(r"in_proj_(bc|dt)/w$", path):
             return P(fsdp, None)
         if path.endswith("out_proj/w"):
-            return P("model", fsdp)
+            # same train-row / serve-column split as wo/w and down/w: a
+            # Mamba block's output projection must not psum at serve time
+            # either, or hybrid-arch sharded serving loses bit-identity.
+            return (P("model", fsdp) if self.mode == "train"
+                    else P(fsdp, "model"))
         if path.endswith("conv_x_w"):
             return P(None, "model")
         # --- quantized variants: w_int/scale share the dense layout ---
@@ -206,17 +252,8 @@ class ShardingPolicy:
             if stacked:
                 spec = [None] + spec
                 shape = leaf.shape
-            # guard: jit in_shardings require exact divisibility
-            fixed = []
-            for dim, ax in zip(shape, spec):
-                if ax is None:
-                    fixed.append(None)
-                    continue
-                size = 1
-                for a in (ax if isinstance(ax, tuple) else (ax,)):
-                    size *= self.mesh.shape[a]
-                fixed.append(ax if dim % size == 0 else None)
-            return NamedSharding(self.mesh, P(*fixed))
+            return NamedSharding(self.mesh,
+                                 _fitted_spec(self.mesh, shape, spec))
 
         return jax.tree_util.tree_map_with_path(one, tree)
 
@@ -237,19 +274,70 @@ class ShardingPolicy:
 
     # ------------------------------------------------------------------ cache
     def cache_specs(self, cache_tree, seq_shard: bool = False,
-                    layout: str = "bthd") -> Any:
-        """Decode-cache sharding.  seq_shard=True (long_500k, batch too small
-        to shard) puts the KV/conv sequence axis on the mesh instead."""
+                    layout: str = "bthd", seq_fallback: bool = True) -> Any:
+        """Decode-cache sharding — covers the lock-step decode caches, the
+        continuous-batching engine's slot pool (``serve/engine.init_pool``:
+        the same tree with ``max_slots`` rows) and the paged ``KVStore``
+        (``kvcache/paged.init_store``: the flat ``*_pages`` dict).
+
+        ``mode == "serve"`` head-shards KV over ``model`` (each device owns
+        ``Hkv/TP`` heads of every slot's whole history — the split matching
+        head-sharded attention, so the decode dot is cross-device-silent and
+        per-chip KV HBM drops ~1/TP); when the head count doesn't divide
+        the model axis (GQA below TP) it falls back to the sequence split
+        so per-chip KV still stays ~1/TP instead of replicating; training
+        always uses the sequence-parallel split.  ``seq_fallback=False``
+        replicates instead on non-dividing heads — for *transient*
+        single-request prefill/staging caches, whose bucketed time axes
+        have no fixed length a sequence split could be guaranteed to
+        divide (the long-lived pool/store is what per-chip HBM rides on).  Entry metadata (``pos/l0/l1`` pages) is replicated: block
+        tables, free list and history indirection stay host-global so the
+        scheduler and ``PageAllocator`` are unchanged under TP.
+        seq_shard=True (long_500k, batch too small to shard) puts the
+        KV/conv sequence axis on the mesh instead."""
         dp = self.dp
+        serve = self.mode == "serve" and not seq_shard
 
         def one(path, leaf):
             name = _path_str(path).rsplit("/", 1)[-1]
             nd = leaf.ndim
-            if name in ("k", "v"):
+            if name in ("k_pages", "v_pages"):
+                # paged entry stream [P, page, Hkv, dh]: shard the head
+                # axis; page geometry stays device-uniform so one global
+                # block table addresses every shard.  GQA fallback (heads
+                # don't divide TP): shard the page axis instead — reads
+                # gather cross-device, but per-chip store memory stays
+                # 1/TP rather than silently replicating.
+                if leaf.shape[2] % self.model_size == 0:
+                    spec = (None, None, "model", None)
+                else:
+                    spec = ("model", None, None, None)
+            elif name in ("pos_pages", "l0_pages", "l1_pages"):
+                spec = (None,) * nd                   # replicated metadata
+            elif name in ("k", "v"):
                 lead = (None,) * (nd - 4)
                 seq_axes = (("data", "model") if not self.has_pod
                             else ("pod", "data", "model"))
-                if layout == "bhtd" and leaf.shape[nd - 2] > leaf.shape[nd - 3]:
+                bhtd = (layout == "bhtd"
+                        and leaf.shape[nd - 2] > leaf.shape[nd - 3])
+                heads = leaf.shape[nd - 3] if bhtd else leaf.shape[nd - 2]
+                if serve and heads % self.model_size == 0:
+                    # [..., B, Hkv, T, dh] / [..., B, T, Hkv, dh]
+                    spec = lead + ((dp, "model", None, None) if bhtd
+                                   else (dp, None, "model", None))
+                elif serve and seq_fallback:
+                    # GQA fallback (Hkv < TP or non-dividing): keep the
+                    # sequence split — per-chip KV stays ~1/TP instead of
+                    # replicating (bit-identity is then fp-tolerance only,
+                    # like the row-parallel wqkv fallback it accompanies)
+                    spec = lead + ((dp, None, "model", None) if bhtd
+                                   else (dp, "model", None, None))
+                elif serve:
+                    # transient cache with non-dividing heads: replicate
+                    # (its bucketed time extents can't carry a guaranteed
+                    # divisible sequence split)
+                    spec = lead + (dp, None, None, None)
+                elif bhtd:
                     # [..., B, Hkv, T, dh] (local ring caches stay bthd)
                     spec = lead + ((None, None, seq_axes, None) if seq_shard
                                    else (dp, None, "model", None))
@@ -269,16 +357,8 @@ class ShardingPolicy:
                 spec = lead + (None if seq_shard else dp, None, None)
             else:
                 spec = (None,) * nd
-            fixed = []
-            for dim, ax in zip(leaf.shape, spec):
-                if ax is None:
-                    fixed.append(None)
-                    continue
-                size = 1
-                for a in (ax if isinstance(ax, tuple) else (ax,)):
-                    size *= self.mesh.shape[a]
-                fixed.append(ax if dim % size == 0 else None)
-            return NamedSharding(self.mesh, P(*fixed))
+            return NamedSharding(self.mesh,
+                                 _fitted_spec(self.mesh, leaf.shape, spec))
 
         return jax.tree_util.tree_map_with_path(one, cache_tree)
 
@@ -304,12 +384,20 @@ def active_policy() -> Optional[ShardingPolicy]:
 
 
 def hint(x: jnp.ndarray, name: str) -> jnp.ndarray:
-    """Apply the active policy's sharding constraint for ``name`` (no-op when
-    no policy is active or the tensor rank doesn't match the rule)."""
+    """Apply the active policy's sharding constraint for ``name`` (no-op
+    when no policy is active or the tensor rank doesn't match the rule).
+    Axes that don't divide their mesh product are dropped from the spec
+    (not the whole constraint): a batch-1 prefill on a data>1 mesh keeps
+    its replicated-over-model pins — losing them entirely lets GSPMD pick
+    divergent layouts — while e.g. GQA KV heads below the serve TP degree
+    just stay replicated at the hint site (the cache in/out shardings
+    carry the sequence-split fallback)."""
     pol = _ACTIVE
     if pol is None:
         return x
     spec = pol.spec(name)
     if spec is None or len(spec) != x.ndim:
         return x
-    return jax.lax.with_sharding_constraint(x, NamedSharding(pol.mesh, spec))
+    fitted = _fitted_spec(pol.mesh, x.shape, spec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(pol.mesh,
+                                                             fitted))

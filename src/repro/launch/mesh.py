@@ -8,14 +8,31 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2):
     """Small mesh for CPU integration tests (requires
     XLA_FLAGS=--xla_force_host_platform_device_count>=data*model)."""
-    return jax.make_mesh((data, model), ("data", "model"))
+    return make_mesh((data, model), ("data", "model"))
+
+
+def make_serve_mesh(tp: int, data: int = 1):
+    """Serving mesh: ``model`` is the tensor-parallel axis the serve-mode
+    ``ShardingPolicy`` head-shards attention/KV over; ``data`` replicates
+    (or batch-shards) the engine across the remaining devices.  Used by
+    ``launch/serve.py --tp N`` and the sharded-serve tests."""
+    need = tp * data
+    have = len(jax.devices())
+    if have < need:
+        raise ValueError(
+            f"--tp {tp} (x data {data}) needs {need} devices, have {have}; "
+            f"on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need}")
+    return make_mesh((data, tp), ("data", "model"))

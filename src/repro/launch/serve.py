@@ -39,6 +39,12 @@ def main() -> None:
                     help="Pallas kernel path incl. the fused linear "
                          "pipeline (interpret mode off-TPU — slow on "
                          "CPU, for end-to-end validation)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel degree: serve over a (1, N) "
+                         "device mesh with head-sharded attention/KV and "
+                         "column/row-split linears (requires --continuous; "
+                         "token output is identical to --tp 0 — see "
+                         "docs/distributed.md)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -63,13 +69,21 @@ def main() -> None:
     max_len = args.prompt_len + args.new_tokens
     if args.prefill_chunk and not args.continuous:
         raise SystemExit("--prefill-chunk requires --continuous")
+    if args.tp and not args.continuous:
+        raise SystemExit("--tp requires --continuous")
+    mesh = None
+    if args.tp:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.tp)
+        print(f"tensor-parallel serving: mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}")
     if args.continuous:
         eng = ContinuousBatchingEngine(
             cfg, params, max_slots=args.batch, max_len=max_len,
             temperature=args.temperature,
             kv_mode="paged" if args.paged_kv else "dense",
             page_size=args.page_size,
-            prefill_chunk=args.prefill_chunk)
+            prefill_chunk=args.prefill_chunk,
+            mesh=mesh)
         # mixed-length synthetic traffic: 2x oversubscribed slots
         for _ in range(2 * args.batch):
             ln = int(rng.integers(max(args.prompt_len // 4, 1),

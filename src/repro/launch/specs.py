@@ -227,6 +227,17 @@ def build_serve_step(cfg: ModelConfig, policy: ShardingPolicy,
     cache_shapes = jax.eval_shape(
         partial(model_lib.init_decode_cache, cfg, B, T))
     seq_shard = shape_name.startswith("long")
+    if seq_shard:
+        # serve-mode hints now default to head-sharded KV (the continuous
+        # engine's split); the long shapes keep the sequence split the
+        # seq_shard cache_specs build, so pin the in-step hints to match.
+        seq = (("pod", "data", "model") if policy.has_pod
+               else ("data", "model"))
+        policy.overrides.setdefault("kv_cache_step", P(None, seq, None, None))
+        policy.overrides.setdefault("kv_cache_step_bhtd",
+                                    P(None, None, seq, None))
+        policy.overrides.setdefault("kv_heads", P(None, None, None, None))
+        policy.overrides.setdefault("kv_view", P(None, None, None, None))
 
     def serve_step(params, cache, batch, t):
         with set_policy(policy):

@@ -2,4 +2,4 @@ from repro.roofline.analysis import (HW, analyze_compiled,  # noqa: F401
                                      collective_bytes_from_hlo,
                                      roofline_terms)
 from repro.roofline.linear_bytes import (fusion_report,  # noqa: F401
-                                         linear_pipeline_bytes)
+                                         linear_pipeline_bytes, tp_sweep)

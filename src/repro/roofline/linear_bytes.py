@@ -32,6 +32,20 @@ from repro.configs.base import MAMBA, ModelConfig
 
 STAT_BYTES = 4          # fp32 reduction carry / Σy² emission
 
+# Producer-side writes of model-sharded tensors under tensor-parallel
+# serving: the serve-mode ShardingPolicy column-splits every linear, so a
+# chip writes only its 1/TP output slice.  Reads are NOT divided — the
+# serve layout all-gathers the sharded activations before the (column-
+# split) wo/down projections, so each chip reads the *full* o and h
+# (the price of the psum-free, bit-identical layout; the collective's
+# own wire bytes are out of scope for this HBM model).  Everything
+# touching the [M, D] residual stream is replicated either way.
+_TP_SHARDED_OPS = frozenset({
+    "qkv_write",                              # attention inner (AI | KI)
+    "g_u_write",                              # widened [gate|up] halves
+    "h_write",                                # FFN hidden (F)
+})
+
 
 def _weight_bytes(cfg: ModelConfig, k: int, n: int) -> float:
     """One [k, n] linear's HBM weight bytes (int4 codes at 4 bit + fp32
@@ -43,13 +57,22 @@ def _weight_bytes(cfg: ModelConfig, k: int, n: int) -> float:
 
 
 def linear_pipeline_bytes(cfg: ModelConfig, batch: int, *,
-                          fused: bool) -> Dict[str, float]:
+                          fused: bool, tp: int = 1) -> Dict[str, float]:
     """Modeled HBM bytes for ONE decode step's linear pipeline.
 
     batch: decode rows (M).  Attention-core and KV-cache traffic is out of
     scope (identical under both strategies — see kvcache/layout.py for
     that model); Mamba mixers are skipped (their in/out projections are
-    not routed through the fused pipeline yet)."""
+    not routed through the fused pipeline yet).
+
+    ``tp`` > 1 gives the *per-device* view under the serve-mode
+    ``ShardingPolicy``: every linear weight is sharded 1/TP (column
+    splits), a chip writes only its slice of the model-sharded
+    intermediates, while reads of all-gathered activations and the
+    replicated [M, D] residual-stream traffic are unchanged — so per-chip
+    bytes approach weight_bytes/TP + full activations as TP grows (the
+    sharded-serving bandwidth win the bench records: decode is
+    weight-dominated, so totals still fall ~1/TP)."""
     M = batch
     D = cfg.d_model
     AI, KI, F = cfg.attn_inner_dim, cfg.kv_inner_dim, cfg.d_ff
@@ -125,10 +148,15 @@ def linear_pipeline_bytes(cfg: ModelConfig, batch: int, *,
             add("residual_read_x", M * D)
             add("residual_write_x", M * D)
 
+    if tp > 1:
+        ops = {name: (b / tp if name in _TP_SHARDED_OPS else b)
+               for name, b in ops.items()}
+        weight /= tp
     act = sum(ops.values())
     return {
         "batch": M,
         "fused": fused,
+        "tp": tp,
         "weight_bytes": weight,
         "activation_bytes": act,
         "total_bytes": weight + act,
@@ -136,11 +164,12 @@ def linear_pipeline_bytes(cfg: ModelConfig, batch: int, *,
     }
 
 
-def fusion_report(cfg: ModelConfig, batch: int) -> Dict[str, object]:
+def fusion_report(cfg: ModelConfig, batch: int,
+                  tp: int = 1) -> Dict[str, object]:
     """Side-by-side fused/unfused accounting + the drop fractions the
-    bench records and CI asserts on."""
-    un = linear_pipeline_bytes(cfg, batch, fused=False)
-    fu = linear_pipeline_bytes(cfg, batch, fused=True)
+    bench records and CI asserts on (``tp`` > 1: the per-device view)."""
+    un = linear_pipeline_bytes(cfg, batch, fused=False, tp=tp)
+    fu = linear_pipeline_bytes(cfg, batch, fused=True, tp=tp)
     act_drop = 1.0 - fu["activation_bytes"] / max(un["activation_bytes"], 1.0)
     tot_drop = 1.0 - fu["total_bytes"] / max(un["total_bytes"], 1.0)
     return {
@@ -149,3 +178,23 @@ def fusion_report(cfg: ModelConfig, batch: int) -> Dict[str, object]:
         "activation_bytes_drop_frac": act_drop,
         "total_bytes_drop_frac": tot_drop,
     }
+
+
+def tp_sweep(cfg: ModelConfig, batch: int,
+             tps=(1, 2, 4, 8, 16)) -> Dict[str, object]:
+    """Per-device HBM bytes of the fused decode-step pipeline across
+    tensor-parallel degrees.  Weight traffic falls exactly 1/TP (every
+    linear is sharded); totals fall ~1/TP while weights dominate decode.
+    The bench records this as the sharded-serving trajectory and CI gates
+    per-chip totals against the committed baseline."""
+    base = linear_pipeline_bytes(cfg, batch, fused=True, tp=1)
+    out = {"batch": batch, "tps": list(tps), "per_chip": {}}
+    for tp in tps:
+        r = linear_pipeline_bytes(cfg, batch, fused=True, tp=tp)
+        out["per_chip"][str(tp)] = {
+            "weight_bytes": r["weight_bytes"],
+            "activation_bytes": r["activation_bytes"],
+            "total_bytes": r["total_bytes"],
+            "total_vs_tp1": r["total_bytes"] / max(base["total_bytes"], 1.0),
+        }
+    return out

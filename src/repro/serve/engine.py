@@ -23,15 +23,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from functools import partial
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import LOCAL, ModelConfig
 from repro.core import kv_reuse
+from repro.distributed.sharding import ShardingPolicy, set_policy
 from repro.kvcache import history as history_mod
 from repro.kvcache import paged as paged_mod
 from repro.models import model as model_lib
@@ -338,6 +341,20 @@ class ContinuousBatchingEngine:
       step_tokens          — optional per-step token budget for
                              ``plan_step`` (decode slots cost 1 each, a
                              chunk its length); None = unbudgeted.
+      mesh                 — optional ``jax.sharding.Mesh`` with a
+                             ``model`` axis: tensor-parallel sharded
+                             serving.  Params are re-sharded under the
+                             serve-mode ``ShardingPolicy`` (head-sharded
+                             attention, column/row-split MLP) and the KV
+                             slot pool / paged store is head-sharded over
+                             ``model`` via ``ShardingPolicy.cache_specs``;
+                             every jitted step carries explicit in/out
+                             shardings.  Block tables, free list and the
+                             scheduler stay host-side and replicated, so
+                             engine semantics (and its token output) are
+                             unchanged — see docs/distributed.md.
+      sharding_policy      — optional pre-built serve-mode policy (defaults
+                             to ``ShardingPolicy(mesh, cfg, mode="serve")``).
     """
 
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
@@ -346,8 +363,26 @@ class ContinuousBatchingEngine:
                  kv_mode: str = "dense", page_size: int = 16,
                  num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 step_tokens: Optional[int] = None):
+                 step_tokens: Optional[int] = None,
+                 mesh=None, sharding_policy: Optional[ShardingPolicy] = None):
         self.cfg = cfg
+        self.mesh = mesh
+        self.policy: Optional[ShardingPolicy] = None
+        self._param_sh = self._repl = None
+        if mesh is not None:
+            if cfg.frontend != "token":
+                raise ValueError("sharded serving requires a token frontend")
+            pol = sharding_policy or ShardingPolicy(mesh, cfg, mode="serve")
+            if pol.mode != "serve":
+                raise ValueError("ContinuousBatchingEngine requires a "
+                                 "serve-mode ShardingPolicy")
+            self.policy = pol
+            self._repl = NamedSharding(mesh, P())
+            self._param_sh = pol.param_specs(params)
+            # weight-stationary re-shard onto the serve mesh (column-split
+            # merged wqkv / [gate|up] with the GQA row-parallel fallback —
+            # the PR-3 merged-tree rules)
+            params = jax.device_put(params, self._param_sh)
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
@@ -382,27 +417,85 @@ class ContinuousBatchingEngine:
         self.scheduler = Scheduler(max_slots, max_len,
                                    buckets=prefill_buckets,
                                    prefill_chunk=self.prefill_chunk)
-        self._decode = jax.jit(partial(model_lib.decode_step, cfg=cfg),
-                               donate_argnums=(1,))
-        self._prefill = jax.jit(partial(model_lib.prefill, cfg=cfg,
-                                        pad_to=max_len))
-        self._insert = jax.jit(partial(pool_insert, cfg=cfg),
-                               donate_argnums=(0,))
+
+        # -- jitted steps, with explicit in/out shardings under a policy ----
+        # (``last_index`` is threaded positionally through thin wrappers:
+        # pjit rejects kwargs once in_shardings are pinned)
+        pol = self.policy
+        rep = self._repl if pol is not None else None
+
+        def _jit(fn, donate=(), in_sh=None, out_sh=None):
+            if pol is None:
+                return jax.jit(fn, donate_argnums=donate)
+            return jax.jit(fn, donate_argnums=donate,
+                           in_shardings=in_sh, out_shardings=out_sh)
+
+        self._pool_sh = self._pcache_sh = None
+        if pol is not None:
+            self._pool_sh = pol.cache_specs(
+                jax.eval_shape(partial(init_pool, cfg, max_slots, max_len)),
+                layout=cfg.kv_cache_layout)
+            self._warn_if_unsharded(self._pool_sh, "KV slot pool")
+            # prefill collects time-major rows regardless of the pool
+            # layout; the serve head-axis rule is layout-independent.
+            # seq_fallback=False: these single-request caches are built at
+            # *bucketed* lengths the max_len-derived spec tree must cover,
+            # so a non-dividing head axis replicates rather than riding a
+            # time split that some bucket wouldn't divide.
+            self._pcache_sh = pol.cache_specs(
+                jax.eval_shape(
+                    lambda p: model_lib.prefill(
+                        p, {"tokens": jnp.zeros((1, max_len), jnp.int32)},
+                        cfg=cfg, pad_to=max_len)[1],
+                    params),
+                layout="bthd", seq_fallback=False)
+
+        def _prefill_fn(p, batch, last_index):
+            return model_lib.prefill(p, batch, cfg=cfg, pad_to=max_len,
+                                     last_index=last_index)
+
+        self._decode = _jit(
+            partial(model_lib.decode_step, cfg=cfg), donate=(1,),
+            in_sh=(self._param_sh, self._pool_sh, rep, rep),
+            out_sh=(rep, self._pool_sh, rep))
+        self._prefill = _jit(
+            _prefill_fn,
+            in_sh=(self._param_sh, rep, rep),
+            out_sh=(rep, self._pcache_sh, rep))
+        self._insert = _jit(
+            partial(pool_insert, cfg=cfg), donate=(0,),
+            in_sh=(self._pool_sh, self._pcache_sh, rep),
+            out_sh=self._pool_sh)
         if self.prefill_chunk:
             # staging cache capacity: max_len rounded up to a chunk
             # multiple, so the right-padded final chunk always fits
             C = self.prefill_chunk
             self._chunk_cap = -(-max_len // C) * C
-            self._chunk_step = jax.jit(
-                partial(model_lib.prefill_chunk, cfg=cfg),
-                donate_argnums=(1,))
+            self._chunk_sh = None
+            if pol is not None:
+                self._chunk_sh = pol.cache_specs(
+                    jax.eval_shape(partial(model_lib.init_chunk_cache,
+                                           cfg, 1, self._chunk_cap)),
+                    layout="bthd", seq_fallback=False)
+
+            def _chunk_fn(p, cache, batch, t0, last_index):
+                return model_lib.prefill_chunk(p, cache, batch, t0, cfg=cfg,
+                                               last_index=last_index)
+
+            self._chunk_step = _jit(
+                _chunk_fn, donate=(1,),
+                in_sh=(self._param_sh, self._chunk_sh, rep, rep, rep),
+                out_sh=(rep, self._chunk_sh, rep))
 
             def _ins_staged(pool, cache, slot):
                 return pool_insert(
                     pool, model_lib.slice_cache_time(cache, max_len),
                     slot, cfg)
 
-            self._insert_staged = jax.jit(_ins_staged, donate_argnums=(0,))
+            self._insert_staged = _jit(
+                _ins_staged, donate=(0,),
+                in_sh=(self._pool_sh, self._chunk_sh, rep),
+                out_sh=self._pool_sh)
         if kv_mode == "paged":
             self.n_attn = paged_mod.num_attention_layers(cfg)
             self.page_size = page_size
@@ -415,16 +508,58 @@ class ContinuousBatchingEngine:
             self.allocator = paged_mod.PageAllocator(
                 self.num_pages, page_size, max_slots,
                 slot_entry_capacity=cap)
+            self._store_sh = None
+            if pol is not None:
+                self._store_sh = pol.cache_specs(jax.eval_shape(
+                    partial(paged_mod.init_store, cfg, self.num_pages,
+                            self.page_size)))
+                self._warn_if_unsharded(self._store_sh, "paged KV store")
+
+            def _prefill_paged_fn(p, batch, last_index):
+                return model_lib.prefill(p, batch, cfg=cfg,
+                                         last_index=last_index)
+
             # paged prefill keeps the exact (bucketed) length — pages
-            # replace the pool's max_len padding
-            self._prefill_paged = jax.jit(partial(model_lib.prefill,
-                                                  cfg=cfg))
-            self._pack = jax.jit(partial(paged_mod.pack_prefill, cfg=cfg),
-                                 donate_argnums=(0,))
-            self._decode_paged = jax.jit(
-                partial(model_lib.paged_decode_step, cfg=cfg),
-                donate_argnums=(1,))
+            # replace the pool's max_len padding.  The spec tree from the
+            # padded prefill cache applies unchanged (specs are
+            # shape-independent; the head axis is identical).
+            self._prefill_paged = _jit(
+                _prefill_paged_fn,
+                in_sh=(self._param_sh, rep, rep),
+                out_sh=(rep, self._pcache_sh, rep))
+            pack_cache_sh = (self._chunk_sh if self.prefill_chunk
+                             else self._pcache_sh)
+            self._pack = _jit(
+                partial(paged_mod.pack_prefill, cfg=cfg), donate=(0,),
+                in_sh=(self._store_sh, pack_cache_sh, rep, rep, rep),
+                out_sh=self._store_sh)
+            self._decode_paged = _jit(
+                partial(model_lib.paged_decode_step, cfg=cfg), donate=(1,),
+                in_sh=(self._param_sh, self._store_sh, rep, rep, rep, rep),
+                out_sh=(rep, self._store_sh, rep))
         self._uid = 0
+
+    # -- sharding sanity ---------------------------------------------------
+    def _warn_if_unsharded(self, sh_tree, what: str) -> None:
+        """If no leaf of ``sh_tree`` landed on the model axis (head count
+        and fallback axes all non-dividing), the structure replicates on
+        every device — legal, but the ~1/TP per-chip KV memory the mesh
+        was passed for is gone, so say it loudly instead of silently."""
+        def axes(sh):
+            out = []
+            for ax in sh.spec:
+                if ax is not None:
+                    out.extend(ax if isinstance(ax, tuple) else (ax,))
+            return out
+
+        if not any("model" in axes(sh)
+                   for sh in jax.tree_util.tree_leaves(sh_tree)):
+            warnings.warn(
+                f"sharded serving: the {what} has no dimension dividing "
+                f"the mesh's model axis (size {self.policy.model_size}) "
+                f"and is fully replicated per device — pick a TP degree "
+                f"dividing the KV head count (or cache extents) to get "
+                f"the ~1/TP per-chip KV footprint", stacklevel=3)
 
     # -- request intake ----------------------------------------------------
     def submit(self, tokens: np.ndarray, max_new_tokens: int,
@@ -475,10 +610,14 @@ class ContinuousBatchingEngine:
     def run(self, rng: Optional[jax.Array] = None
             ) -> Dict[str, object]:
         """Drain the queue.  Returns {'results': {uid: RequestResult},
-        'stats': ServeStats}."""
-        if self.kv_mode == "paged":
-            return self._run_paged(rng)
-        return self._run_dense(rng)
+        'stats': ServeStats}.  Under a mesh the sharding policy is active
+        for the whole run, so every jitted step traces with the serve-mode
+        activation/KV hints baked in (routing gates and the Σy² carry stay
+        replicated; KV is head-sharded)."""
+        with set_policy(self.policy):
+            if self.kv_mode == "paged":
+                return self._run_paged(rng)
+            return self._run_dense(rng)
 
     # -- run-loop bookkeeping shared by both KV modes ----------------------
     @staticmethod
@@ -592,6 +731,11 @@ class ContinuousBatchingEngine:
         if work.is_first:
             rs.stage_cache = model_lib.init_chunk_cache(
                 self.cfg, 1, self._chunk_cap)
+            if self.policy is not None:
+                # place the fresh staging rows under their head-sharded
+                # NamedShardings up front (donation then stays in place)
+                rs.stage_cache = jax.device_put(rs.stage_cache,
+                                                self._chunk_sh)
             rs.stage_gates = []
         c = len(work.tokens)
         padded = np.pad(work.tokens, (0, C - c))
@@ -599,7 +743,7 @@ class ContinuousBatchingEngine:
             self.params, rs.stage_cache,
             {"tokens": jnp.asarray(padded[None])},
             jnp.int32(work.start),
-            last_index=jnp.asarray([c - 1], jnp.int32))
+            jnp.asarray([c - 1], jnp.int32))
         if self.kv_mode == "paged":
             rs.stage_gates.append(cstats["attn_gate"])
         return logits
@@ -628,7 +772,7 @@ class ContinuousBatchingEngine:
             padded, last = self.scheduler.pad_prompt(work.req.tokens)
             logits, cache, _ = self._prefill(
                 self.params, {"tokens": jnp.asarray(padded[None])},
-                last_index=jnp.asarray([last], jnp.int32))
+                jnp.asarray([last], jnp.int32))
             pool = self._insert(pool, cache, jnp.int32(work.slot))
         else:
             logits = self._chunk_forward(rs, work)
@@ -663,7 +807,7 @@ class ContinuousBatchingEngine:
             T0 = req.prompt_len
             logits, cache, pstats = self._prefill_paged(
                 self.params, {"tokens": jnp.asarray(padded[None])},
-                last_index=jnp.asarray([last], jnp.int32))
+                jnp.asarray([last], jnp.int32))
             gates = np.asarray(pstats["attn_gate"], np.float32)[:, 0]
         else:
             # worst-case pages were reserved at admission time in
@@ -720,6 +864,11 @@ class ContinuousBatchingEngine:
         measure = cfg.skip.enabled and cfg.skip.kv_reuse
 
         pool = init_pool(cfg, self.max_slots, self.max_len)
+        if self.policy is not None:
+            # commit every pool row to its NamedSharding before the first
+            # donated step — host-side insert/evict then always sees (and
+            # scatters into) head-sharded rows
+            pool = jax.device_put(pool, self._pool_sh)
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
 
@@ -819,6 +968,10 @@ class ContinuousBatchingEngine:
         stats = rs.stats
 
         store = paged_mod.init_store(cfg, self.num_pages, self.page_size)
+        if self.policy is not None:
+            # head-sharded page pools, replicated entry metadata — the
+            # host-side PageAllocator stays global (see cache_specs)
+            store = jax.device_put(store, self._store_sh)
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
 

@@ -45,6 +45,12 @@ def _simulated_device_count() -> int:
 
 def _run(script: str):
     if _simulated_device_count() < REQUIRED_DEVICES:
+        if os.environ.get("REQUIRE_MULTIDEVICE"):
+            pytest.fail(
+                f"REQUIRE_MULTIDEVICE is set but the host simulates only "
+                f"{_simulated_device_count()} devices — the multi-device "
+                f"CI job must be able to split {REQUIRED_DEVICES} host "
+                f"devices")
         pytest.skip(f"host cannot simulate {REQUIRED_DEVICES} devices "
                     f"(got {_simulated_device_count()})")
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
@@ -63,8 +69,9 @@ def test_sharded_train_and_elastic_reshard(tmp_path):
     from repro.train.trainer import Trainer, TrainerConfig
     from repro.train import checkpoint as ck
 
+    from repro.distributed.compat import make_mesh
     cfg = dataclasses.replace(get_config("qwen3-8b").smoke(), num_layers=2)
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    mesh = make_mesh((4, 2), ("data", "model"))
     pol = ShardingPolicy(mesh, cfg, mode="train")
     tc = TrainerConfig(seq_len=32, global_batch=4, steps=6, lr=1e-3,
                        ckpt_dir=r'{tmp_path}/ck', ckpt_every=3, log_every=2)
@@ -75,7 +82,7 @@ def test_sharded_train_and_elastic_reshard(tmp_path):
     assert np.isfinite(l1), l1
 
     # elastic: restore the 4x2 checkpoint onto a 2x2 mesh
-    mesh2 = jax.make_mesh((2, 2), ("data", "model"))
+    mesh2 = make_mesh((2, 2), ("data", "model"))
     pol2 = ShardingPolicy(mesh2, cfg, mode="train")
     template = {{"params": jax.tree_util.tree_map(np.asarray, state["params"])}}
     specs = {{"params": pol2.param_specs(state["params"])}}
@@ -93,9 +100,9 @@ def test_compressed_mean_shard_map():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.distributed.compat import shard_map
+    from repro.distributed.compat import make_mesh, shard_map
     from repro.optim.compression import compressed_mean
-    mesh = jax.make_mesh((8,), ("data",))
+    mesh = make_mesh((8,), ("data",))
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 1024)) * 0.01
     def f(xs):
         return compressed_mean(xs[0], "data")
@@ -112,9 +119,10 @@ def test_compressed_mean_shard_map():
 def test_pipeline_over_axis():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
+    from repro.distributed.compat import make_mesh
     from repro.distributed.pipeline import pipeline_apply
     S, M, mbsz, D = 4, 6, 2, 8
-    mesh = jax.make_mesh((4,), ("pod",))
+    mesh = make_mesh((4,), ("pod",))
     ws = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) * 0.3
     x = jax.random.normal(jax.random.PRNGKey(1), (M, mbsz, D))
     def stage(w, x):
@@ -130,7 +138,19 @@ def test_pipeline_over_axis():
     """)
 
 
+def _skip_unless_abstract_mesh():
+    """The spec-construction tests build device-free production meshes via
+    jax.sharding.AbstractMesh, which the oldest supported jax predates —
+    they skip on that CI matrix leg (and still run, never skip, in the
+    multi-device job, which installs the latest jax)."""
+    from repro.distributed.compat import has_abstract_mesh
+    if not has_abstract_mesh():
+        pytest.skip("jax.sharding.AbstractMesh unavailable on this jax "
+                    "(oldest-pin compat leg)")
+
+
 def test_param_specs_all_archs_production_meshes():
+    _skip_unless_abstract_mesh()
     _run("""
     import jax
     from repro.configs import ASSIGNED_ARCHS, get_config
@@ -159,4 +179,123 @@ def test_param_specs_all_archs_production_meshes():
                         assert d % sz == 0, (arch, mode, path, leaf.shape, spec)
                 jax.tree_util.tree_map_with_path(check, shapes, specs)
     print("specs ok")
+    """)
+
+
+def test_param_specs_merged_wqkv_and_gu_production_meshes():
+    """The merged-tree rules the sharded serve path stands on: merged
+    ``wqkv`` gets the column split when the q/kv slices divide the model
+    axis, the GQA row-parallel fallback otherwise (never full replication
+    of a 2-D weight), and the widened ``[gate|up]`` always column-splits."""
+    _skip_unless_abstract_mesh()
+    _run("""
+    import jax
+    from functools import partial
+    from repro.configs import ASSIGNED_ARCHS, get_config
+    from repro.distributed.compat import abstract_mesh
+    from repro.distributed.sharding import ShardingPolicy
+    from repro.models import model as M
+
+    def axes_of(spec):
+        out = []
+        for ax in spec:
+            if ax is None: continue
+            out.extend(ax if isinstance(ax, tuple) else (ax,))
+        return out
+
+    checked = 0
+    for axes in ((("data", 16), ("model", 16)),
+                 (("pod", 2), ("data", 16), ("model", 16))):
+        mesh = abstract_mesh(axes)
+        for arch in ASSIGNED_ARCHS:
+            cfg = get_config(arch)
+            pol = ShardingPolicy(mesh, cfg, mode="serve")
+            shapes = jax.eval_shape(partial(M.init_params, cfg=cfg),
+                                    jax.random.PRNGKey(0))
+            specs = pol.param_specs(shapes)
+
+            def check(path, leaf, sh):
+                name = "/".join(str(getattr(p, "key", "")) for p in path)
+                spec = tuple(sh.spec) + (None,) * (leaf.ndim
+                                                   - len(tuple(sh.spec)))
+                tp = dict(axes)["model"]
+                if name.endswith("wqkv/w"):
+                    kdim = leaf.ndim - 2          # skip scan-stack lead
+                    col_ok = (cfg.attn_inner_dim % tp == 0
+                              and cfg.kv_inner_dim % tp == 0
+                              and cfg.num_kv_heads >= tp)
+                    if col_ok:
+                        assert "model" in axes_of((spec[-1],)), (arch, spec)
+                    else:
+                        assert "model" in axes_of((spec[kdim],)), (arch, spec)
+                    return 1
+                if name.endswith("gu/w"):
+                    assert "model" in axes_of((spec[-1],)), (arch, spec)
+                    return 1
+                return 0
+
+            counts = jax.tree_util.tree_map_with_path(check, shapes, specs)
+            checked += sum(jax.tree_util.tree_leaves(counts))
+    assert checked > 0, "no merged wqkv/gu leaves found"
+    print("merged trees ok", checked)
+    """)
+
+
+def test_cache_specs_slot_pool_and_paged_store_production_meshes():
+    """Serve-mode ``cache_specs`` over the continuous engine's slot pool
+    and the paged KV store on the production meshes: KV head axes go over
+    ``model``, entry metadata (pos/l0/l1) and everything the host mutates
+    stay replicated, and every sharded dim divides its axes exactly."""
+    _skip_unless_abstract_mesh()
+    _run("""
+    import jax
+    from functools import partial
+    from repro.configs import get_config
+    from repro.distributed.compat import abstract_mesh
+    from repro.distributed.sharding import ShardingPolicy
+    from repro.kvcache import paged as paged_mod
+    from repro.models import model as M
+
+    def axes_of(spec):
+        out = []
+        for ax in spec:
+            if ax is None: continue
+            out.extend(ax if isinstance(ax, tuple) else (ax,))
+        return out
+
+    for axes in ((("data", 16), ("model", 16)),
+                 (("pod", 2), ("data", 16), ("model", 16))):
+        mesh = abstract_mesh(axes)
+        sizes = dict(axes)
+        cfg = get_config("llama2-7b")       # 32 KV heads: clean 16-way split
+        pol = ShardingPolicy(mesh, cfg, mode="serve")
+
+        pool = jax.eval_shape(partial(M.init_decode_cache, cfg, 32, 2048))
+        pool_sh = pol.cache_specs(pool, layout=cfg.kv_cache_layout)
+        k = pool_sh["stage0"]["pos0"]["k"]
+        k_leaf = pool["stage0"]["pos0"]["k"]
+        # [slots, T, Hkv, dh]: head axis on model, batch on data
+        assert tuple(k.spec)[2] == "model", k.spec
+        assert "model" not in axes_of((tuple(k.spec)[1],)), k.spec
+
+        store = jax.eval_shape(partial(paged_mod.init_store, cfg, 256, 64))
+        st_sh = pol.cache_specs(store)
+        assert tuple(st_sh["k_pages"].spec)[2] == "model"
+        assert tuple(st_sh["v_pages"].spec)[2] == "model"
+        for meta in ("pos_pages", "l0_pages", "l1_pages"):
+            assert not axes_of(tuple(st_sh[meta].spec)), (meta, st_sh[meta])
+
+        # divisibility: every sharded dim divides its mesh axes
+        def check(path, leaf, sh):
+            spec = tuple(sh.spec) + (None,) * (leaf.ndim
+                                               - len(tuple(sh.spec)))
+            for d, ax in zip(leaf.shape, spec):
+                if ax is None: continue
+                sz = 1
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    sz *= sizes[a]
+                assert d % sz == 0, (path, leaf.shape, spec)
+        jax.tree_util.tree_map_with_path(check, pool, pool_sh)
+        jax.tree_util.tree_map_with_path(check, store, st_sh)
+    print("cache specs ok")
     """)

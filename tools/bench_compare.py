@@ -1,0 +1,153 @@
+"""Diff fresh benchmark artifacts against the committed baselines.
+
+  python tools/bench_compare.py --fresh bench-results \
+      [--baseline benchmarks/baselines] [--tolerance 0.10]
+
+Every ``BENCH_<suite>.json`` the bench harness writes carries, besides
+wall-clock rows (noisy, machine-dependent — never gated), the roofline /
+accounting numbers under ``meta``.  This tool gates the *deterministic*
+subset: byte models, saved fractions, hit rates.  A gated metric that
+regresses by more than ``--tolerance`` (relative, in its bad direction)
+fails the run; so does a gated metric or suite file that disappeared —
+silent metric loss is itself a regression.  Improvements beyond the
+tolerance are reported (so the baseline can be re-pinned) but pass.
+
+This is the consumer of the perf-trajectory artifacts bench-smoke has
+been uploading since PR 3: the baselines under ``benchmarks/baselines/``
+are a committed snapshot of ``benchmarks.run --quick``; refresh them with
+
+  PYTHONPATH=src python -m benchmarks.run --quick \
+      --out-dir benchmarks/baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Any, List
+
+# Gated metrics: suite -> [(dotted path into the JSON, higher_is_better)].
+# Paths support dict keys only ("a.b.c").  Only deterministic accounting
+# goes here — wall-clock rows vary across machines and are never gated.
+GATED = {
+    "fused_linear": [
+        # Alg.-1 fusion win: modeled activation/total HBM byte drops
+        ("meta.reports.llama2-7b.activation_bytes_drop_frac", True),
+        ("meta.reports.llama2-7b.total_bytes_drop_frac", True),
+        ("meta.reports.llama2-7b/int4.activation_bytes_drop_frac", True),
+        ("meta.reports.llama2-7b/int4.total_bytes_drop_frac", True),
+        ("meta.reports.qwen3-8b.activation_bytes_drop_frac", True),
+        # tensor-parallel per-chip totals: lower is better, and the tp8
+        # point is the sharded-serving headline (~1/TP)
+        ("meta.tp_sweep.llama2-7b.per_chip.8.total_bytes", False),
+        ("meta.tp_sweep.llama2-7b.per_chip.8.total_vs_tp1", False),
+    ],
+    "kv_storage_25pct": [
+        ("meta.saved_fraction", True),
+    ],
+    "paged_kv": [
+        ("meta.live_entry_saving", True),
+        ("meta.peak_kv_vs_dense", False),
+        ("meta.history_hit_rate", True),
+    ],
+    "fig9_bandwidth": [
+        ("meta.eff_frac.invariance_buffer", True),
+        ("meta.eff_frac.paged_history", True),
+        ("meta.history_hit_rate", True),
+    ],
+    "chunked_prefill": [
+        ("meta.interleaved_steps", True),
+    ],
+}
+
+
+def _get(tree: Any, path: str):
+    node = tree
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def _num(val) -> bool:
+    return isinstance(val, (int, float)) and not isinstance(val, bool)
+
+
+def compare(baseline_dir: pathlib.Path, fresh_dir: pathlib.Path,
+            tolerance: float) -> List[str]:
+    """Returns a list of failure strings (empty = gate passes)."""
+    failures: List[str] = []
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        return [f"no BENCH_*.json baselines under {baseline_dir}"]
+    for suite in sorted(set(GATED)
+                        - {p.stem[len("BENCH_"):] for p in baselines}):
+        failures.append(f"{suite}: gated suite has no committed baseline "
+                        f"under {baseline_dir}")
+    for bpath in baselines:
+        suite = bpath.stem[len("BENCH_"):]
+        if suite not in GATED:
+            continue
+        fpath = fresh_dir / bpath.name
+        if not fpath.exists():
+            failures.append(f"{suite}: fresh artifact {fpath} missing "
+                            "(suite dropped from the bench run?)")
+            continue
+        base = json.loads(bpath.read_text())
+        fresh = json.loads(fpath.read_text())
+        for path, higher in GATED[suite]:
+            bval = _get(base, path)
+            if not _num(bval):
+                # a gated metric absent from the committed baseline means
+                # the baseline was refreshed from a broken run — fail
+                # rather than silently un-gating it
+                failures.append(f"{suite}: gated metric {path} missing "
+                                f"from baseline {bpath}")
+                continue
+            bval = float(bval)
+            fval = _get(fresh, path)
+            if not _num(fval):
+                failures.append(f"{suite}: gated metric {path} missing "
+                                f"from fresh artifact")
+                continue
+            fval = float(fval)
+            denom = max(abs(bval), 1e-12)
+            delta = (fval - bval) / denom
+            worse = -delta if higher else delta
+            arrow = ("equal" if worse == 0
+                     else "better" if worse < 0 else "worse")
+            line = (f"{suite}: {path} baseline={bval:.6g} "
+                    f"fresh={fval:.6g} ({delta:+.1%}, {arrow})")
+            if worse > tolerance:
+                failures.append("REGRESSION " + line)
+            else:
+                print("  ok " + line)
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="directory with the just-produced BENCH_*.json")
+    ap.add_argument("--baseline", default="benchmarks/baselines")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="max relative regression of a gated metric")
+    args = ap.parse_args()
+    failures = compare(pathlib.Path(args.baseline), pathlib.Path(args.fresh),
+                       args.tolerance)
+    for f in failures:
+        print(f, file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} gated metric(s) failed "
+              f"(tolerance {args.tolerance:.0%}); if the change is "
+              "intentional, refresh benchmarks/baselines/ in the same PR.",
+              file=sys.stderr)
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
