@@ -137,6 +137,15 @@ class ModelConfig:
     # (``serve.scheduler.can_chunk_prefill``); the engine's
     # ``prefill_chunk=`` argument overrides this per-deployment.
     prefill_chunk: int = 0
+    # Device-resident multi-step decode for the continuous-batching engine:
+    # N decode iterations (step + sampling + stop/length detection +
+    # position advance) fuse into ONE jitted ``lax.scan`` dispatch, so the
+    # host syncs once per N tokens instead of once per token and its
+    # scheduling work (admission, page headroom, ``plan_step``) overlaps
+    # the in-flight device epoch.  1 = the single-step engine (parity
+    # default; token output is identical either way at temperature 0).
+    # The engine's ``decode_steps=`` argument overrides per-deployment.
+    decode_steps_per_dispatch: int = 1
     scan_layers: bool = True
 
     # ------------------------------------------------------------------ helpers

@@ -30,6 +30,11 @@ def main() -> None:
                     help="paged KV store + history buffer instead of the "
                          "dense slot pool (see docs/kvcache.md)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=0,
+                    help="fuse this many decode iterations into one "
+                         "device-resident dispatch (0 = config default; "
+                         "1 = per-token parity; requires --continuous; "
+                         "see docs/serving.md)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill: process prompts this many "
                          "tokens at a time, interleaved with resident "
@@ -69,6 +74,8 @@ def main() -> None:
     max_len = args.prompt_len + args.new_tokens
     if args.prefill_chunk and not args.continuous:
         raise SystemExit("--prefill-chunk requires --continuous")
+    if args.decode_steps and not args.continuous:
+        raise SystemExit("--decode-steps requires --continuous")
     if args.tp and not args.continuous:
         raise SystemExit("--tp requires --continuous")
     mesh = None
@@ -83,6 +90,7 @@ def main() -> None:
             kv_mode="paged" if args.paged_kv else "dense",
             page_size=args.page_size,
             prefill_chunk=args.prefill_chunk,
+            decode_steps=args.decode_steps or None,
             mesh=mesh)
         # mixed-length synthetic traffic: 2x oversubscribed slots
         for _ in range(2 * args.batch):
@@ -96,6 +104,10 @@ def main() -> None:
               f"decode: {s.decode_tok_per_s:.1f} tok/s | "
               f"requests: {s.requests_completed} | "
               f"KV storage saved≈{s.kv_saved_fraction:.1%} (measured)")
+        if eng.decode_steps > 1:
+            print(f"fused decode: {eng.decode_steps} steps/dispatch | "
+                  f"{s.decode_dispatches} dispatches | host "
+                  f"{s.host_s:.2f}s vs device-wait {s.device_s:.2f}s")
         if args.prefill_chunk:
             worst = max(r.max_decode_stall_s for r in out["results"].values())
             print(f"chunked prefill: {s.prefill_chunks} chunks | "

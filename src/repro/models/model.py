@@ -503,7 +503,9 @@ def decode_step(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
 def paged_decode_step(params: Params, store: Dict,
                       batch: Dict[str, jnp.ndarray], t: jnp.ndarray,
                       block_table: jnp.ndarray, fill: jnp.ndarray,
-                      cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict, Dict]:
+                      cfg: ModelConfig,
+                      commit_mask: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, Dict, Dict]:
     """One token for every slot against the paged KV store.
 
     The dense-pool twin of ``decode_step``: past tokens' KV lives in the
@@ -512,8 +514,10 @@ def paged_decode_step(params: Params, store: Dict,
     [B] come from the host-side ``PageAllocator`` (which has proactively
     guaranteed page capacity for this step's ≤ n_attn_layers appends).
     Slots with ``fill == 0`` are inactive: they decode garbage but commit
-    nothing.  Returns (logits [B, V], new store, stats) with
-    ``stats['attn_gate']`` as in ``decode_step``."""
+    nothing.  ``commit_mask`` [B] overrides that default commit gate —
+    ``paged_decode_loop`` passes its per-slot active mask so a slot that
+    finishes mid-loop stops appending entries.  Returns (logits [B, V],
+    new store, stats) with ``stats['attn_gate']`` as in ``decode_step``."""
     from repro.kvcache import paged as paged_mod
 
     assert paged_mod.can_page(cfg), f"{cfg.name}: not a pageable stack"
@@ -587,9 +591,145 @@ def paged_decode_step(params: Params, store: Dict,
         buf_k = buf_k.reshape((-1,) + buf_k.shape[-3:])
         buf_v = buf_v.reshape((-1,) + buf_v.shape[-3:])
 
+    if commit_mask is None:
+        commit_mask = fill > 0
     store = paged_mod.commit_decode(store, buf_k, buf_v, gates, t,
-                                    block_table, fill, fill > 0, cfg)
+                                    block_table, fill, commit_mask, cfg)
     stats["attn_gate"] = gates
     x = layers.norm_apply(params["final_norm"], x, cfg, stats=sq)
     logits = layers.unembed(params["embed"], params.get("lm_head"), x, cfg)
     return logits[:, 0], store, stats
+
+
+# ---------------------------------------------------------------------------
+# Device-resident multi-step decode (one jitted dispatch per N tokens)
+# ---------------------------------------------------------------------------
+
+def _entry_active(feed: jnp.ndarray, active: jnp.ndarray,
+                  stop: jnp.ndarray) -> jnp.ndarray:
+    """A deferred first token (sampled inside the prefill dispatch, never
+    seen by the host) may itself be the stop token: kill the slot before
+    it decodes, so it emits nothing and appends no KV."""
+    return active & ~((stop >= 0) & (feed == stop))
+
+
+def _loop_finish(tok: jnp.ndarray, t: jnp.ndarray, emitted: jnp.ndarray,
+                 active: jnp.ndarray, budget: jnp.ndarray,
+                 stop: jnp.ndarray, max_len: int) -> jnp.ndarray:
+    """Per-slot finish detection, replicating the host engine's
+    ``_advance_slot`` conditions: stop token sampled, generation budget
+    exhausted (``emitted`` already counts this step's token), or the next
+    write position reaching the pool's max_len."""
+    hit_stop = (stop >= 0) & (tok == stop)
+    return active & ~(hit_stop | (emitted >= budget) | (t + 1 >= max_len))
+
+
+def decode_loop(params: Params, cache: Dict, feed: jnp.ndarray,
+                t: jnp.ndarray, active: jnp.ndarray, budget: jnp.ndarray,
+                stop: jnp.ndarray, rng: jnp.ndarray, *, n_steps: int,
+                cfg: ModelConfig, max_len: int, temperature: float = 0.0,
+                top_k: int = 0) -> Tuple[Dict, Dict]:
+    """``n_steps`` fused decode iterations under one jit (``lax.scan``):
+    per-step token sampling, stop-token/length detection and position
+    advance all happen on device, so the host syncs once per dispatch
+    instead of once per token (the serving-loop analogue of the paper's
+    latency hiding: control decisions overlap in-flight compute).
+
+    Inputs (all [B] over the slot pool): ``feed`` the token each slot
+    feeds next, ``t`` its write position, ``active`` slot liveness,
+    ``budget`` how many tokens the slot may still emit, ``stop`` its stop
+    token id (-1 = none).  A slot that finishes mid-loop freezes its
+    (feed, t) pair: every subsequent iteration then recomputes — and
+    rewrites, bit-identically — the KV entry it already wrote at ``t``
+    instead of appending, so a finished slot stops growing its cache row
+    with no per-step host intervention.  Inactive slots compute garbage
+    that never escapes: their sampled tokens are masked by
+    ``step_active`` and their KV rewrite is idempotent.
+
+    Returns (new cache, out) with stacked per-step outputs —
+    ``tokens``/``step_active`` [n_steps, B], ``attn_gate``
+    [n_steps, L_attn, B] (None for gate-free stacks) — plus the final
+    ``feed``/``t``/``active``/``emitted`` carry and the advanced ``rng``
+    (one split per step, mirroring the single-step engine's sequence)."""
+    from repro.serve.sampling import split_sample
+
+    feed = jnp.asarray(feed, jnp.int32)
+    t = jnp.asarray(t, jnp.int32)
+    budget = jnp.asarray(budget, jnp.int32)
+    stop = jnp.asarray(stop, jnp.int32)
+    active = _entry_active(feed, jnp.asarray(active, bool), stop)
+
+    def body(carry, _):
+        cache, feed, t, active, emitted, rng = carry
+        logits, cache, stats = decode_step(
+            params, cache, {"tokens": feed[:, None]}, t, cfg)
+        rng, tok = split_sample(logits, rng, temperature, top_k)
+        emitted = emitted + active.astype(jnp.int32)
+        nxt = _loop_finish(tok, t, emitted, active, budget, stop, max_len)
+        ys = (tok, active, stats.get("attn_gate"))
+        feed = jnp.where(nxt, tok, feed)
+        t = jnp.where(nxt, t + 1, t)
+        return (cache, feed, t, nxt, emitted, rng), ys
+
+    init = (cache, feed, t, active, jnp.zeros_like(budget), rng)
+    (cache, feed, t, active, emitted, rng), (toks, step_active, gates) = \
+        jax.lax.scan(body, init, None, length=n_steps)
+    return cache, {"tokens": toks, "step_active": step_active,
+                   "attn_gate": gates, "feed": feed, "t": t,
+                   "active": active, "emitted": emitted, "rng": rng}
+
+
+def paged_decode_loop(params: Params, store: Dict, feed: jnp.ndarray,
+                      t: jnp.ndarray, fill: jnp.ndarray,
+                      active: jnp.ndarray, budget: jnp.ndarray,
+                      stop: jnp.ndarray, rng: jnp.ndarray,
+                      block_table: jnp.ndarray, *, n_steps: int,
+                      cfg: ModelConfig, max_len: int,
+                      temperature: float = 0.0, top_k: int = 0
+                      ) -> Tuple[Dict, Dict]:
+    """``decode_loop``'s paged-store twin: N fused ``paged_decode_step``
+    iterations with the entry-stream fill advancing on device — each
+    active slot appends its measured fresh-entry count (layer-0 dense +
+    executed layers, exactly the host ``PageAllocator`` accounting the
+    engine replays from the returned gate log after the sync).  A slot
+    that finishes mid-loop drops out of the commit mask, so it stops
+    appending entries; the host must have pre-reserved page headroom for
+    ``n_steps`` worst-case appends per active slot (``block_table`` must
+    span that reservation).  Returns (new store, out) as ``decode_loop``
+    plus the final per-slot ``fill``."""
+    from repro.kvcache import history as history_mod
+    from repro.kvcache import paged as paged_mod
+    from repro.serve.sampling import split_sample
+
+    reuse = paged_mod.reuse_enabled(cfg)
+    feed = jnp.asarray(feed, jnp.int32)
+    t = jnp.asarray(t, jnp.int32)
+    fill = jnp.asarray(fill, jnp.int32)
+    budget = jnp.asarray(budget, jnp.int32)
+    stop = jnp.asarray(stop, jnp.int32)
+    active = _entry_active(feed, jnp.asarray(active, bool), stop)
+
+    def body(carry, _):
+        store, feed, t, fill, active, emitted, rng = carry
+        logits, store, stats = paged_decode_step(
+            params, store, {"tokens": feed[:, None]}, t, block_table, fill,
+            cfg, commit_mask=active & (fill > 0))
+        rng, tok = split_sample(logits, rng, temperature, top_k)
+        gates = stats["attn_gate"]                             # [nA, B]
+        n_fresh = history_mod.fresh_mask(gates, reuse).astype(
+            jnp.int32).sum(axis=0)
+        fill = fill + jnp.where(active, n_fresh, 0)
+        emitted = emitted + active.astype(jnp.int32)
+        nxt = _loop_finish(tok, t, emitted, active, budget, stop, max_len)
+        ys = (tok, active, gates)
+        feed = jnp.where(nxt, tok, feed)
+        t = jnp.where(nxt, t + 1, t)
+        return (store, feed, t, fill, nxt, emitted, rng), ys
+
+    init = (store, feed, t, fill, active, jnp.zeros_like(budget), rng)
+    (store, feed, t, fill, active, emitted, rng), \
+        (toks, step_active, gates) = jax.lax.scan(body, init, None,
+                                                  length=n_steps)
+    return store, {"tokens": toks, "step_active": step_active,
+                   "attn_gate": gates, "feed": feed, "t": t, "fill": fill,
+                   "active": active, "emitted": emitted, "rng": rng}

@@ -68,9 +68,20 @@ class ServeStats:
       attn_keep_frac    — mean decode-time attention keep rate from the
                           execution-gate log (1.0 = dense).
       kv_saved_fraction — measured compact-KV storage saving over this
-                          run's decode gates; ``kv_saved_analytic`` is
-                          the configured-keep-rate estimate.
+                          run's execution gates (prompt and decode phases
+                          both); ``kv_saved_analytic`` is the
+                          configured-keep-rate estimate.
       requests_completed — requests drained to a RequestResult.
+      decode_dispatches — jitted decode dispatches: one per ragged step in
+                          single-step mode, one per N-step epoch with
+                          ``decode_steps > 1`` (the host-overhead counter
+                          the fused loop exists to shrink).
+      device_s          — wall time the host spent *blocked* on device
+                          results (the per-iteration sync); host_s is the
+                          rest of the run-loop wall time — planning,
+                          admission, bookkeeping and dispatch.  With the
+                          fused loop host_s overlaps in-flight device
+                          work instead of serializing with it.
 
     Paged-mode extras (``kv_mode == "paged"``): page pool geometry
     (``page_size``/``pages_total``), ``pages_peak`` live-footprint peak,
@@ -88,6 +99,10 @@ class ServeStats:
     kv_saved_fraction: float = 0.0        # measured from logged gates
     kv_saved_analytic: float = 0.0        # configured-keep-rate estimate
     requests_completed: int = 0
+    # -- host-overhead counters (the fused-epoch loop's scoreboard) --------
+    decode_dispatches: int = 0            # jitted decode dispatches (epochs)
+    host_s: float = 0.0                   # host planning/bookkeeping wall
+    device_s: float = 0.0                 # wall blocked on device syncs
     # -- paged-KV engine mode (kv_mode == "paged") -------------------------
     kv_mode: str = "dense"
     page_size: int = 0
@@ -313,6 +328,10 @@ class _RunState:
     # chunked-prefill staging (at most one prompt in flight at a time)
     stage_cache: Optional[Dict] = None
     stage_gates: List[np.ndarray] = dataclasses.field(default_factory=list)
+    # fused-epoch mode: first tokens sampled inside a prefill dispatch
+    # whose values the host has not yet synced ({slot: device [1] int32});
+    # the decode loop reads them straight off the device carry
+    pending: Dict[int, object] = dataclasses.field(default_factory=dict)
 
 
 class ContinuousBatchingEngine:
@@ -338,6 +357,17 @@ class ContinuousBatchingEngine:
       prefill_chunk        — chunk size in tokens; None defers to
                              ``cfg.prefill_chunk``; 0 = monolithic
                              (parity default).
+      decode_steps         — decode iterations fused into one jitted
+                             device-resident dispatch (``model.decode_loop``
+                             / ``model.paged_decode_loop``); None defers to
+                             ``cfg.decode_steps_per_dispatch``; 1 = the
+                             single-step loops (parity default).  With
+                             N > 1 sampling, stop/length detection and
+                             position advance run on device, the host
+                             syncs once per epoch, and its scheduling
+                             work overlaps the in-flight dispatch — see
+                             docs/serving.md.  Token output is identical
+                             to N = 1 at temperature 0.
       step_tokens          — optional per-step token budget for
                              ``plan_step`` (decode slots cost 1 each, a
                              chunk its length); None = unbudgeted.
@@ -363,6 +393,7 @@ class ContinuousBatchingEngine:
                  kv_mode: str = "dense", page_size: int = 16,
                  num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
+                 decode_steps: Optional[int] = None,
                  step_tokens: Optional[int] = None,
                  mesh=None, sharding_policy: Optional[ShardingPolicy] = None):
         self.cfg = cfg
@@ -403,6 +434,10 @@ class ContinuousBatchingEngine:
                 f"{cfg.name}: chunked prefill requires an all-global-"
                 "attention stack with masked-mode routing (resumable "
                 "cache state) — use prefill_chunk=0")
+        self.decode_steps = int(cfg.decode_steps_per_dispatch
+                                if decode_steps is None else decode_steps)
+        if self.decode_steps < 1:
+            raise ValueError("decode_steps must be >= 1 (1 = single-step)")
         self.step_tokens = step_tokens
         if prefill_buckets is not None and not can_bucket(cfg):
             raise ValueError(
@@ -423,12 +458,7 @@ class ContinuousBatchingEngine:
         # pjit rejects kwargs once in_shardings are pinned)
         pol = self.policy
         rep = self._repl if pol is not None else None
-
-        def _jit(fn, donate=(), in_sh=None, out_sh=None):
-            if pol is None:
-                return jax.jit(fn, donate_argnums=donate)
-            return jax.jit(fn, donate_argnums=donate,
-                           in_shardings=in_sh, out_shardings=out_sh)
+        _jit = self._jit_step
 
         self._pool_sh = self._pcache_sh = None
         if pol is not None:
@@ -450,9 +480,13 @@ class ContinuousBatchingEngine:
                     params),
                 layout="bthd", seq_fallback=False)
 
-        def _prefill_fn(p, batch, last_index):
-            return model_lib.prefill(p, batch, cfg=cfg, pad_to=max_len,
-                                     last_index=last_index)
+        # first-token sampling is folded INTO the prefill dispatch (the
+        # rng key rides along), so the completion path has no eager
+        # sample and — in fused mode — no host sync at all
+        def _prefill_fn(p, batch, last_index, rng):
+            logits, cache, stats = model_lib.prefill(
+                p, batch, cfg=cfg, pad_to=max_len, last_index=last_index)
+            return sample(logits, rng, temperature), cache, stats
 
         self._decode = _jit(
             partial(model_lib.decode_step, cfg=cfg), donate=(1,),
@@ -460,8 +494,16 @@ class ContinuousBatchingEngine:
             out_sh=(rep, self._pool_sh, rep))
         self._prefill = _jit(
             _prefill_fn,
-            in_sh=(self._param_sh, rep, rep),
+            in_sh=(self._param_sh, rep, rep, rep),
             out_sh=(rep, self._pcache_sh, rep))
+        # chunked completions sample from the last chunk's logits in a
+        # (tiny) jitted dispatch of their own
+        self._sample_tok = _jit(
+            lambda logits, rng: sample(logits, rng, temperature),
+            in_sh=(rep, rep), out_sh=rep)
+        # fused decode loops, compiled lazily per power-of-two epoch length
+        self._dense_loops: Dict[int, object] = {}
+        self._paged_loops: Dict[int, object] = {}
         self._insert = _jit(
             partial(pool_insert, cfg=cfg), donate=(0,),
             in_sh=(self._pool_sh, self._pcache_sh, rep),
@@ -515,9 +557,10 @@ class ContinuousBatchingEngine:
                             self.page_size)))
                 self._warn_if_unsharded(self._store_sh, "paged KV store")
 
-            def _prefill_paged_fn(p, batch, last_index):
-                return model_lib.prefill(p, batch, cfg=cfg,
-                                         last_index=last_index)
+            def _prefill_paged_fn(p, batch, last_index, rng):
+                logits, cache, stats = model_lib.prefill(
+                    p, batch, cfg=cfg, last_index=last_index)
+                return sample(logits, rng, temperature), cache, stats
 
             # paged prefill keeps the exact (bucketed) length — pages
             # replace the pool's max_len padding.  The spec tree from the
@@ -525,7 +568,7 @@ class ContinuousBatchingEngine:
             # shape-independent; the head axis is identical).
             self._prefill_paged = _jit(
                 _prefill_paged_fn,
-                in_sh=(self._param_sh, rep, rep),
+                in_sh=(self._param_sh, rep, rep, rep),
                 out_sh=(rep, self._pcache_sh, rep))
             pack_cache_sh = (self._chunk_sh if self.prefill_chunk
                              else self._pcache_sh)
@@ -538,6 +581,60 @@ class ContinuousBatchingEngine:
                 in_sh=(self._param_sh, self._store_sh, rep, rep, rep, rep),
                 out_sh=(rep, self._store_sh, rep))
         self._uid = 0
+
+    # -- jit plumbing ------------------------------------------------------
+    def _jit_step(self, fn, donate=(), in_sh=None, out_sh=None):
+        """jit with explicit in/out shardings under a mesh policy (pjit
+        rejects kwargs once shardings are pinned, so callers thread every
+        argument positionally)."""
+        if self.policy is None:
+            return jax.jit(fn, donate_argnums=donate)
+        return jax.jit(fn, donate_argnums=donate,
+                       in_shardings=in_sh, out_shardings=out_sh)
+
+    def _dense_loop(self, n: int):
+        """The jitted N-step dense decode loop (``model.decode_loop``),
+        compiled once per epoch length; the pool rides the scan carry and
+        is donated, so the cache updates in place across all N steps."""
+        fn = self._dense_loops.get(n)
+        if fn is None:
+            cfg, max_len, temp = self.cfg, self.max_len, self.temperature
+
+            def loop_fn(p, pool, feed, t, active, budget, stop, rng):
+                return model_lib.decode_loop(
+                    p, pool, feed, t, active, budget, stop, rng,
+                    n_steps=n, cfg=cfg, max_len=max_len, temperature=temp)
+
+            rep = self._repl
+            fn = self._jit_step(
+                loop_fn, donate=(1,),
+                in_sh=(self._param_sh, self._pool_sh) + (rep,) * 6,
+                out_sh=(self._pool_sh, rep))
+            self._dense_loops[n] = fn
+        return fn
+
+    def _paged_loop(self, n: int):
+        """``_dense_loop``'s paged twin (``model.paged_decode_loop``):
+        the entry-stream fill advances on device, so the allocator replay
+        happens once per epoch from the returned gate log."""
+        fn = self._paged_loops.get(n)
+        if fn is None:
+            cfg, max_len, temp = self.cfg, self.max_len, self.temperature
+
+            def loop_fn(p, store, feed, t, fill, active, budget, stop,
+                        rng, block_table):
+                return model_lib.paged_decode_loop(
+                    p, store, feed, t, fill, active, budget, stop, rng,
+                    block_table, n_steps=n, cfg=cfg, max_len=max_len,
+                    temperature=temp)
+
+            rep = self._repl
+            fn = self._jit_step(
+                loop_fn, donate=(1,),
+                in_sh=(self._param_sh, self._store_sh) + (rep,) * 8,
+                out_sh=(self._store_sh, rep))
+            self._paged_loops[n] = fn
+        return fn
 
     # -- sharding sanity ---------------------------------------------------
     def _warn_if_unsharded(self, sh_tree, what: str) -> None:
@@ -616,7 +713,11 @@ class ContinuousBatchingEngine:
         replicated; KV is head-sharded)."""
         with set_policy(self.policy):
             if self.kv_mode == "paged":
+                if self.decode_steps > 1:
+                    return self._run_paged_fused(rng)
                 return self._run_paged(rng)
+            if self.decode_steps > 1:
+                return self._run_dense_fused(rng)
             return self._run_dense(rng)
 
     # -- run-loop bookkeeping shared by both KV modes ----------------------
@@ -635,10 +736,31 @@ class ContinuousBatchingEngine:
             max_decode_stall_s=st.max_stall_s,
         )
 
+    def _account_prefill(self, st: ActiveRequest) -> None:
+        """Fold the prompt-phase gate log into the request's measured
+        KV-storage accounting (layer-0 dense + executed layers — the same
+        counting ``paged.prefill_entry_count`` uses for the entry stream).
+        Resolved at finish time: the gate log may still be a device array
+        from the prefill dispatch, and by now it is long since computed,
+        so the conversion is a copy, not a pipeline stall."""
+        if st.pf_gates is None:
+            return
+        T0 = st.req.prompt_len
+        L = max(len(self.cfg.attention_layers), 1)
+        measure = self.cfg.skip.enabled and self.cfg.skip.kv_reuse
+        st.kv_dense += L * T0
+        if measure:
+            g = np.asarray(st.pf_gates, np.float32)[:, :T0]
+            st.kv_stored += T0 + int((g[1:] > 0.5).sum())
+        else:
+            st.kv_stored += L * T0
+        st.pf_gates = None
+
     def _finish(self, rs: _RunState, slot: int, reason: str) -> None:
         """Evict ``slot``'s request and record its result (paged mode also
         returns its pages and clears its history accounting)."""
         st = self.scheduler.release(slot)
+        self._account_prefill(st)
         if self.kv_mode == "paged":
             self.allocator.release(slot)
             rs.hist.on_release(slot)
@@ -677,10 +799,14 @@ class ContinuousBatchingEngine:
         return True
 
     def _activate_prefilled(self, req: Request, slot: int, tok: int,
-                            t_run: float, now: float, stats: ServeStats):
+                            t_run: float, now: float, stats: ServeStats,
+                            tok_known: bool = True):
         """Register a freshly prefilled request.  Returns (state, reason):
         reason is "stop"/"length" when the first token already ends the
-        request, else None."""
+        request, else None.  ``tok_known=False`` (fused mode): ``tok`` is
+        a placeholder — the real value is still a device array, the stop
+        check happens on device at the next epoch's loop entry, and the
+        host backfills the bookkeeping at the epoch sync."""
         stats.prefill_tokens += req.prompt_len
         stats.decode_tokens += 1
         st = ActiveRequest(req=req, slot=slot, pos=req.prompt_len,
@@ -688,7 +814,8 @@ class ContinuousBatchingEngine:
                            submit_s=t_run, first_token_s=now,
                            last_emit_s=now)
         self.scheduler.activate(st)
-        if req.stop_token is not None and tok == req.stop_token:
+        if tok_known and req.stop_token is not None \
+                and tok == req.stop_token:
             return st, "stop"
         if req.max_new_tokens <= 1:
             return st, "length"
@@ -724,9 +851,9 @@ class ContinuousBatchingEngine:
     def _chunk_forward(self, rs: _RunState, work: PrefillChunk):
         """Run one staged prefill chunk.  Returns the chunk logits (valid
         only on the last chunk).  The gate log is accumulated as device
-        arrays only where packing needs it (paged mode) — the dense pool
-        has no use for prefill gates, and a per-chunk host sync would be
-        pure interleaving overhead."""
+        arrays — paged packing consumes it at completion, and the dense
+        path folds it into the measured KV-storage accounting at finish
+        time; either way, never a per-chunk host sync."""
         C = self.prefill_chunk
         if work.is_first:
             rs.stage_cache = model_lib.init_chunk_cache(
@@ -744,24 +871,63 @@ class ContinuousBatchingEngine:
             {"tokens": jnp.asarray(padded[None])},
             jnp.int32(work.start),
             jnp.asarray([c - 1], jnp.int32))
-        if self.kv_mode == "paged":
+        if "attn_gate" in cstats:
             rs.stage_gates.append(cstats["attn_gate"])
         return logits
 
-    def _finish_prefill(self, rs: _RunState, work: PrefillChunk, logits,
-                        t0: float) -> None:
-        """Sample the first token from completed prefill logits, activate
-        the request, and finish it immediately if one token suffices."""
-        rs.stats.prefill_chunks += 1
-        rs.rng, sub = jax.random.split(rs.rng)
-        tok = int(np.asarray(sample(logits, sub, self.temperature))[0])
+    def _finish_prefill(self, rs: _RunState, work: PrefillChunk, tok_dev,
+                        t0: float, pf_gates=None) -> None:
+        """Activate a request whose prefill — first-token sampling folded
+        into the prefill dispatch itself — just completed.  Single-step
+        mode syncs the token here (this is the only host sync on the
+        completion path; the per-token eager ``sample`` is gone).  Fused
+        dense mode (``decode_steps > 1``) defers even that: the token
+        stays a device array in ``rs.pending``, the next epoch's decode
+        loop overlays it into the feed carry (with the stop check running
+        on device at loop entry), and ``_resolve_pending`` backfills the
+        host bookkeeping at the epoch sync.  ``pf_gates`` is the prompt's
+        execution-gate log ([L, Tp], device or host), folded into the
+        measured KV accounting at finish time by ``_account_prefill``."""
+        defer = (self.decode_steps > 1 and self.kv_mode == "dense"
+                 and work.req.max_new_tokens > 1)
+        if defer:
+            tok = 0                       # placeholder; device holds truth
+        else:
+            ts = time.time()
+            tok = int(np.asarray(tok_dev)[0])
+            rs.stats.device_s += time.time() - ts
         now = time.time()
+        rs.stats.prefill_chunks += 1
         rs.stats.prefill_s += now - t0
         self.scheduler.prefill_advance(work)
-        _, reason = self._activate_prefilled(work.req, work.slot, tok,
-                                             rs.t_run, now, rs.stats)
-        if reason:
+        st, reason = self._activate_prefilled(work.req, work.slot, tok,
+                                              rs.t_run, now, rs.stats,
+                                              tok_known=not defer)
+        st.pf_gates = pf_gates
+        if defer:
+            rs.pending[work.slot] = tok_dev
+        elif reason:
             self._finish(rs, work.slot, reason)
+
+    def _resolve_pending(self, rs: _RunState) -> None:
+        """Backfill host bookkeeping for first tokens deferred as device
+        arrays by fused-mode ``_finish_prefill``.  Called at an epoch
+        sync — the values are long since computed, so the conversion is
+        a copy, not a stall.  A deferred first token that IS the stop
+        token was entry-killed on device (the slot sat out the epoch, KV
+        frozen), so finishing it here exactly mirrors the single-step
+        engine's completion-time stop check."""
+        for slot in list(rs.pending):
+            tok_dev = rs.pending.pop(slot)
+            st = self.scheduler.active.get(slot)
+            if st is None or st.slot != slot:
+                continue                  # stale (slot preempted/reused)
+            tok = int(np.asarray(tok_dev)[0])
+            st.out_tokens[0] = tok
+            st.next_token = tok
+            if (st.req.stop_token is not None and tok == st.req.stop_token
+                    and len(st.out_tokens) == 1):
+                self._finish(rs, slot, "stop")
 
     def _prefill_work_dense(self, rs: _RunState, work: PrefillChunk, pool):
         """Execute one dense-pool prefill work unit: either a legacy
@@ -770,10 +936,14 @@ class ContinuousBatchingEngine:
         t0 = time.time()
         if not self.prefill_chunk:
             padded, last = self.scheduler.pad_prompt(work.req.tokens)
-            logits, cache, _ = self._prefill(
+            rs.rng, sub = jax.random.split(rs.rng)
+            tok_dev, cache, pstats = self._prefill(
                 self.params, {"tokens": jnp.asarray(padded[None])},
-                jnp.asarray([last], jnp.int32))
+                jnp.asarray([last], jnp.int32), sub)
             pool = self._insert(pool, cache, jnp.int32(work.slot))
+            pf_gates = pstats.get("attn_gate")
+            if pf_gates is not None:
+                pf_gates = pf_gates[:, 0]                         # [L, Tp]
         else:
             logits = self._chunk_forward(rs, work)
             if not work.is_last:
@@ -787,7 +957,12 @@ class ContinuousBatchingEngine:
             pool = self._insert_staged(pool, rs.stage_cache,
                                        jnp.int32(work.slot))
             rs.stage_cache = None
-        self._finish_prefill(rs, work, logits, t0)
+            rs.rng, sub = jax.random.split(rs.rng)
+            tok_dev = self._sample_tok(logits, sub)
+            pf_gates = (jnp.concatenate(rs.stage_gates, axis=2)[:, 0]
+                        if rs.stage_gates else None)
+            rs.stage_gates = []
+        self._finish_prefill(rs, work, tok_dev, t0, pf_gates)
         return pool
 
     def _prefill_work_paged(self, rs: _RunState, work: PrefillChunk, store):
@@ -805,9 +980,10 @@ class ContinuousBatchingEngine:
         if not self.prefill_chunk:
             padded, last = self.scheduler.pad_prompt(req.tokens)
             T0 = req.prompt_len
-            logits, cache, pstats = self._prefill_paged(
+            rs.rng, sub = jax.random.split(rs.rng)
+            tok_dev, cache, pstats = self._prefill_paged(
                 self.params, {"tokens": jnp.asarray(padded[None])},
-                jnp.asarray([last], jnp.int32))
+                jnp.asarray([last], jnp.int32), sub)
             gates = np.asarray(pstats["attn_gate"], np.float32)[:, 0]
         else:
             # worst-case pages were reserved at admission time in
@@ -828,6 +1004,8 @@ class ContinuousBatchingEngine:
                 axis=2)[:, 0]                                     # [nA, Tp]
             rs.stage_cache = None
             rs.stage_gates = []
+            rs.rng, sub = jax.random.split(rs.rng)
+            tok_dev = self._sample_tok(logits, sub)
         n_ent = paged_mod.prefill_entry_count(gates, T0, reuse)
         if not alloc.ensure(slot, n_ent + nA):
             raise RuntimeError(
@@ -841,7 +1019,7 @@ class ContinuousBatchingEngine:
         # entry again when the first token already ends the request
         rs.admit_seq[slot] = rs.seq
         rs.seq += 1
-        self._finish_prefill(rs, work, logits, t0)
+        self._finish_prefill(rs, work, tok_dev, t0, gates)
         return store
 
     def _run_dense(self, rng: Optional[jax.Array] = None
@@ -871,6 +1049,7 @@ class ContinuousBatchingEngine:
             pool = jax.device_put(pool, self._pool_sh)
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
+        t_loop = time.time()
 
         while sched.has_work():
             # -- prefill work from the step planner ------------------------
@@ -899,10 +1078,15 @@ class ContinuousBatchingEngine:
                 self.params, pool, {"tokens": jnp.asarray(feed[:, None])},
                 jnp.asarray(pos))
             rs.rng, sub = jax.random.split(rs.rng)
-            toks = np.asarray(sample(logits, sub, self.temperature))
+            tok_dev = sample(logits, sub, self.temperature)
+            stats.decode_dispatches += 1
+            t_sync = time.time()
+            toks = np.asarray(tok_dev)
             gates = (np.asarray(dstats["attn_gate"], np.float32)
                      if "attn_gate" in dstats else None)
-            step_s = time.time() - t0
+            now = time.time()
+            stats.device_s += now - t_sync
+            step_s = now - t0
             stats.decode_s += step_s
 
             for slot in list(sched.active):
@@ -916,6 +1100,7 @@ class ContinuousBatchingEngine:
                 if reason:
                     self._finish(rs, slot, reason)
 
+        stats.host_s += (time.time() - t_loop) - stats.device_s
         return self._finalize(rs)
 
     def _finalize(self, rs: _RunState) -> Dict[str, object]:
@@ -974,6 +1159,7 @@ class ContinuousBatchingEngine:
             store = jax.device_put(store, self._store_sh)
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
+        t_loop = time.time()
 
         while sched.has_work():
             # -- proactive headroom first: every resident can absorb one
@@ -1039,9 +1225,14 @@ class ContinuousBatchingEngine:
                 jnp.asarray(alloc.block_table[:, :j_step]),
                 jnp.asarray(alloc.fill))
             rs.rng, sub = jax.random.split(rs.rng)
-            toks = np.asarray(sample(logits, sub, self.temperature))
+            tok_dev = sample(logits, sub, self.temperature)
+            stats.decode_dispatches += 1
+            t_sync = time.time()
+            toks = np.asarray(tok_dev)
             gates = np.asarray(dstats["attn_gate"], np.float32)
-            step_s = time.time() - t0
+            now = time.time()
+            stats.device_s += now - t_sync
+            step_s = now - t0
             stats.decode_s += step_s
 
             for slot in list(sched.active):
@@ -1057,4 +1248,280 @@ class ContinuousBatchingEngine:
                 if reason:
                     self._finish(rs, slot, reason)
 
+        stats.host_s += (time.time() - t_loop) - stats.device_s
+        return self._finalize(rs)
+
+    # -- fused-epoch run loops (decode_steps > 1) --------------------------
+    def _epoch_args(self, rem: Dict[int, int]):
+        """Build the device-loop batch arrays from the resident set.
+        ``rem[slot]`` is filled with each slot's epoch horizon —
+        min(budget remaining, positions to max_len) — whose max picks the
+        epoch length.  Returns (feed, pos, act, budget, stop, slots)."""
+        S = self.max_slots
+        feed = np.zeros((S,), np.int32)
+        pos = np.zeros((S,), np.int32)
+        act = np.zeros((S,), bool)
+        budget = np.zeros((S,), np.int32)
+        stop = np.full((S,), -1, np.int32)
+        slots = []
+        for slot, st in self.scheduler.active.items():
+            feed[slot] = st.next_token
+            pos[slot] = st.pos
+            act[slot] = True
+            b = st.req.max_new_tokens - len(st.out_tokens)
+            budget[slot] = b
+            if st.req.stop_token is not None:
+                stop[slot] = st.req.stop_token
+            rem[slot] = min(b, self.max_len - st.pos)
+            slots.append(slot)
+        return feed, pos, act, budget, stop, slots
+
+    def _epoch_len(self, rem: Dict[int, int]) -> int:
+        """Epoch length: ``decode_steps`` clipped to the longest resident
+        horizon, rounded up to a power of two so the lazily compiled loop
+        variants stay logarithmic in N (the same recompile-bounding trick
+        as prefill length-bucketing)."""
+        rem_max = max(rem.values())
+        return min(self.decode_steps,
+                   1 << max(0, rem_max - 1).bit_length())
+
+    def _process_epoch(self, rs: _RunState, out: Dict, slots: List[int],
+                       t_disp: float, per_step=None) -> None:
+        """Epoch sync + bookkeeping replay: pull the stacked (tokens,
+        step_active, gates) off the device and walk them in step order,
+        applying exactly the per-token accounting the single-step loops
+        do — ``step_active`` masks the steps a slot sat out after
+        finishing mid-epoch (its KV frozen on device), so emission sets
+        match the single-step engine token for token.  ``per_step`` is
+        the paged hook (allocator append + history replay).  A host/device
+        divergence in finish detection raises instead of silently
+        desyncing the KV state."""
+        cfg, sched, stats = self.cfg, self.scheduler, rs.stats
+        L_attn = max(len(cfg.attention_layers), 1)
+        measure = cfg.skip.enabled and cfg.skip.kv_reuse
+        t_sync = time.time()
+        toks = np.asarray(out["tokens"])                     # [n, S]
+        step_act = np.asarray(out["step_active"])            # [n, S]
+        gates = (np.asarray(out["attn_gate"], np.float32)
+                 if out["attn_gate"] is not None else None)  # [n, L, S]
+        fin_act = np.asarray(out["active"])
+        now = time.time()
+        stats.device_s += now - t_sync
+        epoch_s = now - t_disp
+        stats.decode_s += epoch_s
+        n_run = toks.shape[0]
+        step_s = epoch_s / n_run
+
+        # deferred first tokens first: their slots either join the epoch
+        # replay below (normal) or were entry-killed on device and finish
+        # here with the stop reason (step_active all False)
+        self._resolve_pending(rs)
+
+        for slot in slots:
+            st = sched.active.get(slot)
+            if st is None:
+                continue      # entry-killed pending slot, finished above
+            reason = None
+            for s in range(n_run):
+                if not step_act[s, slot]:
+                    continue
+                g = gates[s, :, slot] if gates is not None else None
+                if g is not None:
+                    rs.keep_acc += float(g.sum())
+                    rs.keep_n += L_attn
+                if per_step is not None:
+                    per_step(slot, g)
+                reason = self._advance_slot(st, int(toks[s, slot]), g,
+                                            step_s, stats, measure, L_attn)
+                if reason:
+                    self._finish(rs, slot, reason)
+                    break
+            if (reason is None) != bool(fin_act[slot]):
+                raise RuntimeError(
+                    f"fused-epoch divergence on slot {slot}: host finish "
+                    f"reason {reason!r} vs device active "
+                    f"{bool(fin_act[slot])} — the device loop's stop/"
+                    "length conditions no longer mirror _advance_slot")
+
+    def _run_dense_fused(self, rng: Optional[jax.Array] = None
+                         ) -> Dict[str, object]:
+        """Dense-pool loop with the device-resident N-step decode epoch
+        (``decode_steps > 1``).  Per iteration: (1) dispatch one
+        ``model.decode_loop`` epoch over the residents — sampling,
+        stop/length detection and position advance all on device, the
+        pool donated through the scan carry; (2) while that epoch is in
+        flight, run the host's scheduling work — admission, prefill
+        dispatches (first token sampled inside the prefill dispatch and
+        left on device), pool inserts — none of which blocks; (3) sync
+        once and replay the epoch's per-token bookkeeping.  Token output
+        is identical to ``_run_dense`` at temperature 0."""
+        cfg = self.cfg
+        sched = self.scheduler
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        rs = _RunState(stats=ServeStats(), results={}, t_run=time.time(),
+                       rng=rng)
+        stats = rs.stats
+
+        pool = init_pool(cfg, self.max_slots, self.max_len)
+        if self.policy is not None:
+            pool = jax.device_put(pool, self._pool_sh)
+        t_loop = time.time()
+
+        while sched.has_work():
+            # -- (1) dispatch one N-step epoch over the residents ----------
+            out = None
+            slots: List[int] = []
+            n_eff = 1
+            if sched.active:
+                rem: Dict[int, int] = {}
+                feed, pos, act, budget, stop, slots = self._epoch_args(rem)
+                n_eff = self._epoch_len(rem)
+                feed_dev = jnp.asarray(feed)
+                for slot, tok_dev in rs.pending.items():
+                    if act[slot]:
+                        # deferred first token: overlay the device value
+                        # into the feed carry (no host sync)
+                        feed_dev = feed_dev.at[slot].set(tok_dev[0])
+                t_disp = time.time()
+                pool, out = self._dense_loop(n_eff)(
+                    self.params, pool, feed_dev, jnp.asarray(pos),
+                    jnp.asarray(act), jnp.asarray(budget),
+                    jnp.asarray(stop), rs.rng)
+                rs.rng = out["rng"]
+                stats.decode_dispatches += 1
+
+            # -- (2) host scheduling work overlapping the in-flight epoch --
+            pre_active = bool(sched.active)
+            did_prefill = False
+            while True:
+                plan = sched.plan_step(token_budget=self.step_tokens,
+                                       decode_steps=n_eff)
+                if plan.prefill is None:
+                    break
+                pool = self._prefill_work_dense(rs, plan.prefill, pool)
+                did_prefill = True
+                if self.prefill_chunk:
+                    break
+            if did_prefill and pre_active:
+                stats.interleaved_steps += 1
+
+            if out is None:
+                continue
+
+            # -- (3) one sync per epoch + bookkeeping replay ---------------
+            self._process_epoch(rs, out, slots, t_disp)
+
+        stats.host_s += (time.time() - t_loop) - stats.device_s
+        return self._finalize(rs)
+
+    def _run_paged_fused(self, rng: Optional[jax.Array] = None
+                         ) -> Dict[str, object]:
+        """Paged-store loop with the device-resident N-step epoch
+        (``model.paged_decode_loop``): the entry-stream fill advances on
+        device, and the host replays the allocator/history accounting
+        from the epoch's stacked gate log at the single sync.
+
+        OOM safety moves from per-step to per-epoch granularity: before
+        dispatch, every resident's worst case for the whole epoch
+        (``fill + min(n_eff, horizon) × n_attn`` entries) is page-reserved
+        up front.  If the free list can't cover it the epoch *shrinks*
+        (halving ``n_eff``) before anyone is preempted — preemption
+        (still youngest-first, requeued at the FIFO head) is the n_eff=1
+        last resort, so backpressure costs epoch length before it costs
+        a prefill."""
+        cfg = self.cfg
+        sched = self.scheduler
+        alloc = self.allocator
+        nA = self.n_attn
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        reuse = paged_mod.reuse_enabled(cfg)
+        rs = _RunState(
+            stats=ServeStats(kv_mode="paged", page_size=self.page_size,
+                             pages_total=self.num_pages),
+            results={}, t_run=time.time(), rng=rng,
+            hist=history_mod.HistoryAccounting(nA, self.max_slots, reuse))
+        stats = rs.stats
+
+        store = paged_mod.init_store(cfg, self.num_pages, self.page_size)
+        if self.policy is not None:
+            store = jax.device_put(store, self._store_sh)
+        t_loop = time.time()
+
+        def per_step(slot, g):
+            fresh_n = int(1 + (g[1:] > 0.5).sum()) if reuse else nA
+            alloc.append(slot, fresh_n, nA)
+            rs.hist.on_decode_step(slot, g)
+
+        while sched.has_work():
+            out = None
+            slots: List[int] = []
+            n_eff = 1
+            if sched.active:
+                rem: Dict[int, int] = {}
+                for slot, st in sched.active.items():
+                    rem[slot] = min(
+                        st.req.max_new_tokens - len(st.out_tokens),
+                        self.max_len - st.pos)
+                n_eff = self._epoch_len(rem)
+                # epoch-granular headroom: shrink before preempting
+                while True:
+                    failed = None
+                    for slot in sorted(sched.active):
+                        need = (int(alloc.fill[slot])
+                                + min(n_eff, rem.get(slot, 1)) * nA)
+                        if not alloc.ensure(slot, need):
+                            failed = slot
+                            break
+                    if failed is None:
+                        break
+                    if n_eff > 1:
+                        n_eff //= 2
+                        continue
+                    if not self._preempt_youngest(rs, exclude=failed):
+                        raise RuntimeError(
+                            f"page pool exhausted with a single resident "
+                            f"request (slot {failed}) — submit() should "
+                            "have rejected it")
+                feed, pos, act, budget, stop, slots = self._epoch_args({})
+                j_live = max(1, alloc.max_chain_pages())
+                j_step = min(1 << (j_live - 1).bit_length(),
+                             alloc.pages_per_slot)
+                t_disp = time.time()
+                store, out = self._paged_loop(n_eff)(
+                    self.params, store, jnp.asarray(feed),
+                    jnp.asarray(pos), jnp.asarray(alloc.fill),
+                    jnp.asarray(act), jnp.asarray(budget),
+                    jnp.asarray(stop), rs.rng,
+                    jnp.asarray(alloc.block_table[:, :j_step]))
+                rs.rng = out["rng"]
+                stats.decode_dispatches += 1
+
+            # -- host scheduling work overlapping the in-flight epoch ------
+            # (admission sees the free list net of the epoch reservation,
+            # preserving the same-iteration _can_place invariant)
+            pre_active = bool(sched.active)
+            plan = sched.plan_step(can_place=self._can_place,
+                                   token_budget=self.step_tokens,
+                                   decode_steps=n_eff)
+            pf = sched.prefilling
+            if (pf is not None and pf.done == 0
+                    and (self.prefill_chunk
+                         or self.step_tokens is not None)):
+                if not alloc.ensure(pf.slot,
+                                    pf.req.prompt_len * nA + nA):
+                    raise RuntimeError(
+                        "worst-case page reservation failed in the same "
+                        "iteration as a successful _can_place admission "
+                        "check — allocator bug")
+            if plan.prefill is not None:
+                store = self._prefill_work_paged(rs, plan.prefill, store)
+                if pre_active:
+                    stats.interleaved_steps += 1
+
+            if out is None:
+                continue
+
+            self._process_epoch(rs, out, slots, t_disp, per_step=per_step)
+
+        stats.host_s += (time.time() - t_loop) - stats.device_s
         return self._finalize(rs)

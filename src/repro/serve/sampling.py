@@ -15,3 +15,13 @@ def sample(logits: jnp.ndarray, rng, temperature: float = 0.0,
         vals, _ = jax.lax.top_k(lf, top_k)
         lf = jnp.where(lf < vals[:, -1:], -1e30, lf)
     return jax.random.categorical(rng, lf).astype(jnp.int32)
+
+
+def split_sample(logits: jnp.ndarray, rng, temperature: float = 0.0,
+                 top_k: int = 0):
+    """One decode step's sampling under a carried rng: split the key
+    exactly once — mirroring the host engines' per-step split, so the
+    device-resident decode loop consumes the same key sequence — and
+    sample.  Returns (new_rng, tokens [B] int32)."""
+    rng, sub = jax.random.split(rng)
+    return rng, sample(logits, sub, temperature, top_k)

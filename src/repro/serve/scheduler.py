@@ -85,6 +85,11 @@ class ActiveRequest:
     last_emit_s: float = 0.0
     max_stall_s: float = 0.0
     finish_reason: str = ""
+    # prompt-phase execution-gate log ([L_attn, >=T0], device array or np)
+    # captured at prefill completion so the measured KV-storage accounting
+    # covers the *whole* request, prompt included; resolved lazily at
+    # finish time — never a host sync on the hot path
+    pf_gates: Optional[object] = None
 
 
 def default_buckets(max_len: int, lo: int = 16) -> Tuple[int, ...]:
@@ -138,14 +143,20 @@ class PrefillChunk:
 class StepPlan:
     """One engine iteration's worth of work: every resident decode slot
     plus at most one prefill chunk (the scheduler-level interleaving that
-    removes prefill head-of-line blocking)."""
+    removes prefill head-of-line blocking).
+
+    ``decode_steps`` is the iteration's *epoch length*: with the fused
+    device-resident decode loop (``decode_steps_per_dispatch > 1``) each
+    resident slot decodes up to N tokens per dispatch, so one plan covers
+    an N-step epoch and each decode slot costs N budget tokens."""
     decode_slots: List[int]
     prefill: Optional[PrefillChunk]
+    decode_steps: int = 1
 
     @property
     def tokens(self) -> int:
         """Tokens this step computes (the planner's budget currency)."""
-        n = len(self.decode_slots)
+        n = len(self.decode_slots) * self.decode_steps
         return n + (len(self.prefill.tokens) if self.prefill else 0)
 
 
@@ -205,7 +216,8 @@ class Scheduler:
 
     # -- step planning ------------------------------------------------------
     def plan_step(self, can_place=None,
-                  token_budget: Optional[int] = None) -> StepPlan:
+                  token_budget: Optional[int] = None,
+                  decode_steps: int = 1) -> StepPlan:
         """Plan one engine iteration.
 
         Admission: when no prefill is in flight, the FIFO head is popped
@@ -215,12 +227,23 @@ class Scheduler:
         ``PrefillChunk`` per call (the whole prompt when chunking is off).
 
         ``token_budget`` caps the step's token count (decode slots each
-        cost 1; the chunk costs its length).  An over-budget chunk is
-        deferred — decode-only step — but never twice in a row, and never
-        when there is no decode work to prioritize, so prefill cannot
-        starve.  Newly activated requests join the decode set only on the
-        *next* plan (the engine decodes the live resident set, which
-        includes a request the moment its last chunk completes)."""
+        cost ``decode_steps``; the chunk costs its length).  An
+        over-budget chunk is deferred — decode-only step — but never
+        twice in a row, and never when there is no decode work to
+        prioritize, so prefill cannot starve.  Newly activated requests
+        join the decode set only on the *next* plan (the engine decodes
+        the live resident set, which includes a request the moment its
+        last chunk completes).
+
+        N-step epoch contract (``decode_steps > 1``, the fused
+        device-resident decode loop): one plan covers an *epoch* of up to
+        ``decode_steps`` decode iterations executed in a single device
+        dispatch.  The scheduler sees the world only at epoch boundaries
+        — finished slots are released, admissions happen, and preemption
+        victims are chosen once per dispatch, not once per token; a slot
+        stays resident (and its pages reserved) for the whole epoch even
+        if it finishes mid-loop, where the device-side active mask stops
+        it from computing or appending KV."""
         if self._prefilling is None and self.queue and self._free:
             if can_place is None or can_place(self.queue[0]):
                 req = self.queue.popleft()
@@ -234,7 +257,7 @@ class Scheduler:
             C = self.prefill_chunk if self.prefill_chunk else T0
             c = min(C, T0 - pf.done)
             over = (token_budget is not None and decode_slots
-                    and len(decode_slots) + c > token_budget)
+                    and len(decode_slots) * decode_steps + c > token_budget)
             if over and pf.deferred < 1:
                 pf.deferred += 1
             else:
@@ -244,7 +267,8 @@ class Scheduler:
                     req=pf.req, slot=pf.slot, start=pf.done,
                     tokens=toks[pf.done:pf.done + c],
                     is_first=pf.done == 0, is_last=pf.done + c >= T0)
-        return StepPlan(decode_slots=decode_slots, prefill=chunk)
+        return StepPlan(decode_slots=decode_slots, prefill=chunk,
+                        decode_steps=decode_steps)
 
     def prefill_advance(self, chunk: PrefillChunk) -> None:
         """Record that ``chunk`` was executed; the in-flight state clears

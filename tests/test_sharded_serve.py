@@ -207,6 +207,37 @@ def test_paged_chunked_sharded_identity():
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("kv_mode", ["dense", "paged"])
+def test_fused_decode_loop_sharded_identity(kv_mode):
+    """The device-resident N-step epoch (``decode_steps > 1``) under TP8:
+    the scan's carry (feed/t/active masks) stays replicated while cache
+    and params ride their serve-mode shardings — tokens must match the
+    *unsharded single-step* engine bit for bit, with one jitted dispatch
+    per epoch on both sides of the mesh boundary."""
+    _need_devices()
+    cfg = _cfg()
+    params = _params(cfg)
+    mesh = make_mesh((1, 8), ("data", "model"))
+    prompts = _prompts(cfg, [7, 19, 12, 30, 5])
+    kw = dict(max_slots=3, max_len=48, kv_mode=kv_mode)
+    base = ContinuousBatchingEngine(cfg, params, **kw)
+    for p in prompts:
+        base.submit(p, max_new_tokens=10)
+    ob = base.run()
+    shard = ContinuousBatchingEngine(cfg, params, mesh=mesh,
+                                     decode_steps=8, **kw)
+    for p in prompts:
+        shard.submit(p, max_new_tokens=10)
+    os_ = shard.run()
+    for uid in ob["results"]:
+        np.testing.assert_array_equal(ob["results"][uid].tokens,
+                                      os_["results"][uid].tokens)
+        assert ob["results"][uid].finish_reason == \
+            os_["results"][uid].finish_reason
+    assert os_["stats"].decode_dispatches < ob["stats"].decode_dispatches
+
+
+@pytest.mark.slow
 def test_sharded_rejects_bad_policy_mode():
     _need_devices(2)
     from repro.distributed.sharding import ShardingPolicy

@@ -12,6 +12,14 @@ fails the run; so does a gated metric or suite file that disappeared —
 silent metric loss is itself a regression.  Improvements beyond the
 tolerance are reported (so the baseline can be re-pinned) but pass.
 
+A second, stricter class of gates — ``FLOORS`` — checks the *fresh*
+artifact against an absolute bound, independent of the baseline.  These
+exist for claims the repo must keep true on every machine, not merely
+"no worse than last time": today that is the continuous-vs-lockstep
+goodput ratio with the fused decode loop on, which must stay >= 1.1.
+Speedup ratios are same-machine quotients, so they travel across hosts
+where raw wall-clock rows do not.
+
 This is the consumer of the perf-trajectory artifacts bench-smoke has
 been uploading since PR 3: the baselines under ``benchmarks/baselines/``
 are a committed snapshot of ``benchmarks.run --quick``; refresh them with
@@ -58,6 +66,18 @@ GATED = {
     ],
     "chunked_prefill": [
         ("meta.interleaved_steps", True),
+    ],
+}
+
+# Absolute floors: suite -> [(dotted path, minimum value)].  Checked on
+# the FRESH artifact only — these are invariants of the implementation
+# (same-machine ratios), not snapshots to drift from.  A missing metric
+# fails, same as GATED.
+FLOORS = {
+    "serve_continuous": [
+        # PR-6 headline: the fused N-step continuous engine must beat the
+        # lock-step engine on useful-token goodput by >= 1.1x
+        ("meta.goodput.speedup", 1.1),
     ],
 }
 
@@ -122,6 +142,25 @@ def compare(baseline_dir: pathlib.Path, fresh_dir: pathlib.Path,
                     f"fresh={fval:.6g} ({delta:+.1%}, {arrow})")
             if worse > tolerance:
                 failures.append("REGRESSION " + line)
+            else:
+                print("  ok " + line)
+    for suite, floors in sorted(FLOORS.items()):
+        fpath = fresh_dir / f"BENCH_{suite}.json"
+        if not fpath.exists():
+            failures.append(f"{suite}: fresh artifact {fpath} missing "
+                            "(floor-gated suite dropped from the run?)")
+            continue
+        fresh = json.loads(fpath.read_text())
+        for path, floor in floors:
+            fval = _get(fresh, path)
+            if not _num(fval):
+                failures.append(f"{suite}: floor-gated metric {path} "
+                                "missing from fresh artifact")
+                continue
+            fval = float(fval)
+            line = f"{suite}: {path} fresh={fval:.6g} floor={floor:g}"
+            if fval < floor:
+                failures.append("BELOW FLOOR " + line)
             else:
                 print("  ok " + line)
     return failures
