@@ -26,7 +26,7 @@ the win comes from.
 """
 from __future__ import annotations
 
-import time
+from time import perf_counter
 
 import jax
 import numpy as np
@@ -56,21 +56,21 @@ def _workload(cfg, n: int):
 def _run_lockstep(eng: ServeEngine, work) -> float:
     """Batches of SLOTS, prompts padded to the batch max, every row decoded
     to the batch's largest max_new.  Returns wall seconds."""
-    t0 = time.time()
+    t0 = perf_counter()
     for i in range(0, len(work), SLOTS):
         group = work[i:i + SLOTS]
         tmax = max(p.shape[0] for p, _ in group)
         batch = np.stack([np.pad(p, (0, tmax - p.shape[0])) for p, _ in group])
         eng.generate(batch, max(n for _, n in group))
-    return time.time() - t0
+    return perf_counter() - t0
 
 
 def _run_continuous(eng: ContinuousBatchingEngine, work):
-    t0 = time.time()
+    t0 = perf_counter()
     for p, n in work:
         eng.submit(p, max_new_tokens=n)
     out = eng.run()
-    return time.time() - t0, out
+    return perf_counter() - t0, out
 
 
 def run(quick: bool = False) -> Rows:
@@ -129,6 +129,15 @@ def run(quick: bool = False) -> Rows:
                 "host_s": round(stats.host_s, 4),
                 "device_s": round(stats.device_s, 4)}
 
+    def _phase_time(stats):
+        # where a run's wall time goes (prefill vs decode, and the
+        # decode split between device-wait and host bookkeeping)
+        return {"prefill_s": round(stats.prefill_s, 4),
+                "decode_s": round(stats.decode_s, 4),
+                "device_s": round(stats.device_s, 4),
+                "host_s": round(stats.host_s, 4),
+                "compiles": stats.compiles}
+
     rows.meta["goodput"] = {
         "lockstep_tok_s": round(lock_tps, 2),
         "continuous_tok_s": round(cont_tps, 2),
@@ -144,6 +153,10 @@ def run(quick: bool = False) -> Rows:
     rows.meta["host_overhead"] = {
         "single": _overhead(out["stats"]),
         "fused": _overhead(outf["stats"]),
+    }
+    rows.meta["phase_time"] = {
+        "single": _phase_time(out["stats"]),
+        "fused": _phase_time(outf["stats"]),
     }
 
     # skipping-router regime: measured storage saving from logged gates

@@ -50,6 +50,14 @@ def main() -> None:
                          "column/row-split linears (requires --continuous; "
                          "token output is identical to --tp 0 — see "
                          "docs/distributed.md)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(open in Perfetto / chrome://tracing; requires "
+                         "--continuous; see docs/observability.md)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the run's metrics snapshot (.prom suffix "
+                         "= Prometheus text format, else JSON; requires "
+                         "--continuous)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -78,6 +86,8 @@ def main() -> None:
         raise SystemExit("--decode-steps requires --continuous")
     if args.tp and not args.continuous:
         raise SystemExit("--tp requires --continuous")
+    if (args.trace_out or args.metrics_out) and not args.continuous:
+        raise SystemExit("--trace-out/--metrics-out require --continuous")
     mesh = None
     if args.tp:
         from repro.launch.mesh import make_serve_mesh
@@ -91,6 +101,7 @@ def main() -> None:
             page_size=args.page_size,
             prefill_chunk=args.prefill_chunk,
             decode_steps=args.decode_steps or None,
+            trace=args.trace_out,
             mesh=mesh)
         # mixed-length synthetic traffic: 2x oversubscribed slots
         for _ in range(2 * args.batch):
@@ -103,7 +114,8 @@ def main() -> None:
         print(f"prefill: {s.prefill_tokens} tok in {s.prefill_s:.2f}s | "
               f"decode: {s.decode_tok_per_s:.1f} tok/s | "
               f"requests: {s.requests_completed} | "
-              f"KV storage saved≈{s.kv_saved_fraction:.1%} (measured)")
+              f"KV storage saved≈{s.kv_saved_fraction:.1%} (measured) | "
+              f"compiles: {s.compiles}")
         if eng.decode_steps > 1:
             print(f"fused decode: {eng.decode_steps} steps/dispatch | "
                   f"{s.decode_dispatches} dispatches | host "
@@ -122,6 +134,20 @@ def main() -> None:
         for uid, r in sorted(out["results"].items()):
             print(f"  req {uid}: T0={r.prompt_len} +{r.decode_tokens} "
                   f"TTFT {r.ttft_s*1e3:.1f}ms ({r.finish_reason})")
+        if args.trace_out:
+            print(f"trace written to {args.trace_out} "
+                  "(open in https://ui.perfetto.dev)")
+        if args.metrics_out:
+            import pathlib
+            mpath = pathlib.Path(args.metrics_out)
+            mpath.parent.mkdir(parents=True, exist_ok=True)
+            if mpath.suffix == ".prom":
+                mpath.write_text(out["metrics"].to_prometheus())
+            else:
+                import json
+                mpath.write_text(json.dumps(out["metrics"].snapshot(),
+                                            indent=2))
+            print(f"metrics written to {args.metrics_out}")
         return
 
     prompts = rng.integers(

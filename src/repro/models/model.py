@@ -258,8 +258,11 @@ def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
         B, T = batch["embeds"].shape[:2]
     positions = _positions(batch, B, T, cfg)
     x = _embed_inputs(params, batch, positions, cfg)
-    x, stats, cache, sq = _apply_stack(params, x, positions, cfg, None,
-                                       False, True)
+    # named_scope: groups the prompt-phase stack in device profiles (the
+    # engine's TraceAnnotation covers the host-side dispatch)
+    with jax.named_scope("prefill_stack"):
+        x, stats, cache, sq = _apply_stack(params, x, positions, cfg, None,
+                                           False, True)
     x = layers.norm_apply(params["final_norm"], x, cfg, stats=sq)
     if last_index is None:
         xl = x[:, -1:, :]
@@ -672,8 +675,10 @@ def decode_loop(params: Params, cache: Dict, feed: jnp.ndarray,
         return (cache, feed, t, nxt, emitted, rng), ys
 
     init = (cache, feed, t, active, jnp.zeros_like(budget), rng)
-    (cache, feed, t, active, emitted, rng), (toks, step_active, gates) = \
-        jax.lax.scan(body, init, None, length=n_steps)
+    with jax.named_scope(f"decode_epoch_x{n_steps}"):
+        (cache, feed, t, active, emitted, rng), \
+            (toks, step_active, gates) = \
+            jax.lax.scan(body, init, None, length=n_steps)
     return cache, {"tokens": toks, "step_active": step_active,
                    "attn_gate": gates, "feed": feed, "t": t,
                    "active": active, "emitted": emitted, "rng": rng}
@@ -727,9 +732,10 @@ def paged_decode_loop(params: Params, store: Dict, feed: jnp.ndarray,
         return (store, feed, t, fill, nxt, emitted, rng), ys
 
     init = (store, feed, t, fill, active, jnp.zeros_like(budget), rng)
-    (store, feed, t, fill, active, emitted, rng), \
-        (toks, step_active, gates) = jax.lax.scan(body, init, None,
-                                                  length=n_steps)
+    with jax.named_scope(f"paged_decode_epoch_x{n_steps}"):
+        (store, feed, t, fill, active, emitted, rng), \
+            (toks, step_active, gates) = jax.lax.scan(body, init, None,
+                                                      length=n_steps)
     return store, {"tokens": toks, "step_active": step_active,
                    "attn_gate": gates, "feed": feed, "t": t, "fill": fill,
                    "active": active, "emitted": emitted, "rng": rng}

@@ -22,9 +22,9 @@ Two engines share the jitted ``model.decode_step`` path:
 from __future__ import annotations
 
 import dataclasses
-import time
 import warnings
 from functools import partial
+from time import perf_counter
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -38,6 +38,8 @@ from repro.distributed.sharding import ShardingPolicy, set_policy
 from repro.kvcache import history as history_mod
 from repro.kvcache import paged as paged_mod
 from repro.models import model as model_lib
+from repro.obs import (MetricsRegistry, as_tracer, jit_cache_size,
+                       request_tid)
 from repro.serve.sampling import sample
 from repro.serve.scheduler import (ActiveRequest, PrefillChunk, Request,
                                    Scheduler, can_bucket,
@@ -82,6 +84,19 @@ class ServeStats:
                           admission, bookkeeping and dispatch.  With the
                           fused loop host_s overlaps in-flight device
                           work instead of serializing with it.
+      compiles          — jitted-dispatch cache growth observed during
+                          the run (new compiled variants: prefill
+                          buckets, pow2 epoch lengths, block-table
+                          widths).  A steady-state run should show 0.
+
+    All wall-clock fields are ``time.perf_counter`` intervals (monotonic
+    — never skewed by NTP adjustment the way ``time.time`` deltas are).
+
+    On the continuous engine this dataclass is a *derived view*: every
+    counter field is read out of the run's ``MetricsRegistry`` at
+    ``_finalize`` (``run()['metrics']`` exposes the registry itself,
+    with histograms, per-layer series and time series the flat
+    aggregate cannot hold — see docs/observability.md).
 
     Paged-mode extras (``kv_mode == "paged"``): page pool geometry
     (``page_size``/``pages_total``), ``pages_peak`` live-footprint peak,
@@ -103,6 +118,7 @@ class ServeStats:
     decode_dispatches: int = 0            # jitted decode dispatches (epochs)
     host_s: float = 0.0                   # host planning/bookkeeping wall
     device_s: float = 0.0                 # wall blocked on device syncs
+    compiles: int = 0                     # new compiled variants this run
     # -- paged-KV engine mode (kv_mode == "paged") -------------------------
     kv_mode: str = "dense"
     page_size: int = 0
@@ -226,11 +242,11 @@ class ServeEngine:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         stats = ServeStats()
 
-        t0 = time.time()
+        t0 = perf_counter()
         logits, cache, pstats = self._prefill(self.params,
                                               {"tokens": jnp.asarray(prompts)})
         jax.block_until_ready(logits)
-        stats.prefill_s = time.time() - t0
+        stats.prefill_s = perf_counter() - t0
         stats.prefill_tokens = B * T0
 
         out = np.zeros((B, max_new_tokens), np.int32)
@@ -238,7 +254,7 @@ class ServeEngine:
         gates_per_step: List[np.ndarray] = []
         emitted = 0
         tok = sample(logits, rng, self.temperature)
-        t0 = time.time()
+        t0 = perf_counter()
         for i in range(max_new_tokens):
             out[:, i] = np.asarray(tok)
             emitted += B
@@ -256,7 +272,7 @@ class ServeEngine:
             rng, sub = jax.random.split(rng)
             tok = sample(logits, sub, self.temperature)
         jax.block_until_ready(logits)
-        stats.decode_s = time.time() - t0
+        stats.decode_s = perf_counter() - t0
         stats.decode_tokens = emitted           # tokens actually emitted
 
         stats.attn_keep_frac = keep_acc / max(keep_n, 1.0)
@@ -314,13 +330,23 @@ def pool_insert(pool: Dict, cache: Dict, slot, cfg: ModelConfig) -> Dict:
 class _RunState:
     """Host-side state of one ``run()``, shared by the dense and paged
     loops (the consolidation of the per-loop ``finish``/``preempt``
-    closures the PR-2 review flagged)."""
+    closures the PR-2 review flagged).  ``metrics`` is the run's
+    source-of-truth registry — ``stats`` counter fields are derived from
+    it at ``_finalize``."""
     stats: ServeStats
     results: Dict[int, RequestResult]
     t_run: float
     rng: jax.Array
+    metrics: MetricsRegistry = dataclasses.field(
+        default_factory=MetricsRegistry)
     keep_acc: float = 0.0
     keep_n: float = 0.0
+    # -- observability bookkeeping -----------------------------------------
+    step_idx: int = 0                     # cumulative inner decode steps
+    disp_idx: int = 0                     # decode dispatches (epoch index)
+    compiled_seen: int = 0                # jit cache size at run start
+    traced: set = dataclasses.field(default_factory=set)     # request spans
+    admitted: set = dataclasses.field(default_factory=set)   # prefill spans
     # paged-mode extras
     hist: Optional[history_mod.HistoryAccounting] = None
     admit_seq: Dict[int, int] = dataclasses.field(default_factory=dict)
@@ -371,6 +397,16 @@ class ContinuousBatchingEngine:
       step_tokens          — optional per-step token budget for
                              ``plan_step`` (decode slots cost 1 each, a
                              chunk its length); None = unbudgeted.
+      trace                — observability: ``None`` (default, off — a
+                             no-op ``NullTracer``), a ``repro.obs.Tracer``
+                             to record into, or a path string — the
+                             engine then builds a tracer and writes the
+                             Chrome-trace JSON there at the end of every
+                             ``run()`` (perfetto-loadable; span taxonomy
+                             in docs/observability.md).  Independent of
+                             tracing, every run fills a
+                             ``MetricsRegistry`` returned as
+                             ``run()['metrics']``.
       mesh                 — optional ``jax.sharding.Mesh`` with a
                              ``model`` axis: tensor-parallel sharded
                              serving.  Params are re-sharded under the
@@ -395,8 +431,12 @@ class ContinuousBatchingEngine:
                  prefill_chunk: Optional[int] = None,
                  decode_steps: Optional[int] = None,
                  step_tokens: Optional[int] = None,
+                 trace=None,
                  mesh=None, sharding_policy: Optional[ShardingPolicy] = None):
         self.cfg = cfg
+        self.tracer = as_tracer(trace)
+        self.metrics: Optional[MetricsRegistry] = None   # last run's registry
+        self._jitted: List = []          # every jitted step (compile probe)
         self.mesh = mesh
         self.policy: Optional[ShardingPolicy] = None
         self._param_sh = self._repl = None
@@ -586,11 +626,16 @@ class ContinuousBatchingEngine:
     def _jit_step(self, fn, donate=(), in_sh=None, out_sh=None):
         """jit with explicit in/out shardings under a mesh policy (pjit
         rejects kwargs once shardings are pinned, so callers thread every
-        argument positionally)."""
+        argument positionally).  Every jitted step is registered so the
+        run loops can poll total compile-cache growth (the recompile
+        counter)."""
         if self.policy is None:
-            return jax.jit(fn, donate_argnums=donate)
-        return jax.jit(fn, donate_argnums=donate,
-                       in_shardings=in_sh, out_shardings=out_sh)
+            jitted = jax.jit(fn, donate_argnums=donate)
+        else:
+            jitted = jax.jit(fn, donate_argnums=donate,
+                             in_shardings=in_sh, out_shardings=out_sh)
+        self._jitted.append(jitted)
+        return jitted
 
     def _dense_loop(self, n: int):
         """The jitted N-step dense decode loop (``model.decode_loop``),
@@ -666,6 +711,10 @@ class ContinuousBatchingEngine:
         self._uid += 1
         req = Request(uid=uid, tokens=np.asarray(tokens, np.int32),
                       max_new_tokens=max_new_tokens, stop_token=stop_token)
+        tr = self.tracer
+        tr.track(request_tid(uid), f"req {uid}")
+        tr.instant("submit", request_tid(uid), prompt_len=req.prompt_len,
+                   max_new=max_new_tokens)
         if self.kv_mode == "paged":
             # must cover both the lifetime worst case AND the admission
             # gate's requirement (prompt + one step of headroom) — a
@@ -707,7 +756,10 @@ class ContinuousBatchingEngine:
     def run(self, rng: Optional[jax.Array] = None
             ) -> Dict[str, object]:
         """Drain the queue.  Returns {'results': {uid: RequestResult},
-        'stats': ServeStats}.  Under a mesh the sharding policy is active
+        'stats': ServeStats, 'metrics': MetricsRegistry} (stats is a
+        derived view over the registry; the registry adds histograms,
+        gauges and per-layer/per-step series — see docs/observability.md).
+        Under a mesh the sharding policy is active
         for the whole run, so every jitted step traces with the serve-mode
         activation/KV hints baked in (routing gates and the Σy² carry stay
         replicated; KV is head-sharded)."""
@@ -719,6 +771,89 @@ class ContinuousBatchingEngine:
             if self.decode_steps > 1:
                 return self._run_dense_fused(rng)
             return self._run_dense(rng)
+
+    # -- observability plumbing (shared by all four run loops) -------------
+    def _new_run_state(self, rng: Optional[jax.Array],
+                       paged: bool) -> _RunState:
+        """Fresh per-run state: the stats shell, the metrics registry
+        (this run's source of truth — ``_finalize`` derives ServeStats
+        from it), request-lifecycle span openings for everything already
+        queued, and the compile-probe baseline."""
+        if paged:
+            stats = ServeStats(kv_mode="paged", page_size=self.page_size,
+                               pages_total=self.num_pages)
+            hist = history_mod.HistoryAccounting(
+                self.n_attn, self.max_slots,
+                paged_mod.reuse_enabled(self.cfg))
+        else:
+            stats, hist = ServeStats(), None
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        rs = _RunState(stats=stats, results={}, t_run=perf_counter(),
+                       rng=rng, hist=hist)
+        rs.compiled_seen = jit_cache_size(self._jitted)
+        self.metrics = rs.metrics
+        tr = self.tracer
+        for req in self.scheduler.queue:
+            rs.traced.add(req.uid)
+            tid = request_tid(req.uid)
+            tr.track(tid, f"req {req.uid}")
+            tr.begin("request", tid)
+            tr.begin("queued", tid)
+        return rs
+
+    def _step_gauges(self, rs: _RunState) -> None:
+        """Per-iteration scheduler/memory gauges + the trace counter row."""
+        sched, m = self.scheduler, rs.metrics
+        m.set("queue_depth", len(sched.queue))
+        m.set("resident_slots", len(sched.active))
+        vals = {"queue": len(sched.queue), "resident": len(sched.active)}
+        if self.kv_mode == "paged":
+            free = self.allocator.free_pages
+            m.set("free_pages", free)
+            m.set("pages_in_use", self.num_pages - free)
+            vals["free_pages"] = free
+        self.tracer.counter("sched", vals)
+
+    def _note_admission(self, rs: _RunState) -> None:
+        """Call right after ``plan_step``: if the FIFO head was just
+        popped into a slot, close its queued span, open its prefill-phase
+        span and observe its queue wait."""
+        pf = self.scheduler.prefilling
+        if pf is None or pf.req.uid in rs.admitted:
+            return
+        rs.admitted.add(pf.req.uid)
+        if pf.req.submit_s:
+            rs.metrics.observe("queue_wait_seconds",
+                               perf_counter() - pf.req.submit_s)
+        tid = request_tid(pf.req.uid)
+        tr = self.tracer
+        tr.end(tid)                       # queued
+        tr.instant("admit", tid, slot=pf.slot)
+        tr.begin("prefill", tid)
+
+    def _poll_compiles(self, rs: _RunState) -> None:
+        """Surface jit-cache growth (new prefill buckets, pow2 epoch
+        lengths, block-table widths) as a counter + trace instants, so
+        recompiles are attributable to the iteration that caused them."""
+        n = jit_cache_size(self._jitted)
+        if n > rs.compiled_seen:
+            rs.metrics.inc("compiles_total", n - rs.compiled_seen)
+            self.tracer.instant("compile", n_new=n - rs.compiled_seen)
+            rs.compiled_seen = n
+
+    def _record_step_series(self, rs: _RunState, lay_keep) -> None:
+        """Per-step telemetry time series: per-layer attention-gate keep
+        rate (``attn_keep_rate{layer=i}``) and the running measured
+        KV-saved fraction, both indexed by cumulative decode step."""
+        m = rs.metrics
+        if lay_keep is not None:
+            for i, v in enumerate(lay_keep):
+                m.record("attn_keep_rate", rs.step_idx, float(v), layer=i)
+        dense = m.value("kv_entries_dense_measured_total")
+        if dense:
+            m.record("kv_saved_fraction", rs.step_idx,
+                     1.0 - m.value("kv_entries_stored_measured_total")
+                     / dense)
 
     # -- run-loop bookkeeping shared by both KV modes ----------------------
     @staticmethod
@@ -736,7 +871,7 @@ class ContinuousBatchingEngine:
             max_decode_stall_s=st.max_stall_s,
         )
 
-    def _account_prefill(self, st: ActiveRequest) -> None:
+    def _account_prefill(self, rs: _RunState, st: ActiveRequest) -> None:
         """Fold the prompt-phase gate log into the request's measured
         KV-storage accounting (layer-0 dense + executed layers — the same
         counting ``paged.prefill_entry_count`` uses for the entry stream).
@@ -748,25 +883,38 @@ class ContinuousBatchingEngine:
         T0 = st.req.prompt_len
         L = max(len(self.cfg.attention_layers), 1)
         measure = self.cfg.skip.enabled and self.cfg.skip.kv_reuse
-        st.kv_dense += L * T0
         if measure:
             g = np.asarray(st.pf_gates, np.float32)[:, :T0]
-            st.kv_stored += T0 + int((g[1:] > 0.5).sum())
+            stored = T0 + int((g[1:] > 0.5).sum())
         else:
-            st.kv_stored += L * T0
+            stored = L * T0
+        st.kv_dense += L * T0
+        st.kv_stored += stored
+        rs.metrics.inc("kv_entries_dense_measured_total", L * T0)
+        rs.metrics.inc("kv_entries_stored_measured_total", stored)
         st.pf_gates = None
 
     def _finish(self, rs: _RunState, slot: int, reason: str) -> None:
         """Evict ``slot``'s request and record its result (paged mode also
         returns its pages and clears its history accounting)."""
         st = self.scheduler.release(slot)
-        self._account_prefill(st)
+        self._account_prefill(rs, st)
         if self.kv_mode == "paged":
             self.allocator.release(slot)
             rs.hist.on_release(slot)
             rs.admit_seq.pop(slot, None)
-        rs.results[st.req.uid] = self._make_result(st, reason)
-        rs.stats.requests_completed += 1
+        res = self._make_result(st, reason)
+        rs.results[st.req.uid] = res
+        m = rs.metrics
+        m.inc("requests_completed_total")
+        m.observe("ttft_seconds", res.ttft_s)
+        n = res.decode_tokens - 1
+        if n > 0 and res.decode_s > 0:
+            m.observe("tpot_seconds", res.decode_s / n)
+        tid = request_tid(st.req.uid)
+        self.tracer.instant("finish", tid, reason=reason,
+                            tokens=res.decode_tokens)
+        self.tracer.end(tid)              # close the request root span
 
     def _preempt_youngest(self, rs: _RunState, exclude: int) -> bool:
         """OOM backpressure (paged mode): evict the most recently admitted
@@ -778,13 +926,19 @@ class ContinuousBatchingEngine:
         progress lost; decode steps between the abort and the re-try keep
         the residents progressing, so this cannot livelock)."""
         sched = self.scheduler
+        m, tr = rs.metrics, self.tracer
         pf = sched.prefilling
         if pf is not None and pf.slot != exclude:
             sched.abort_prefill()
             self.allocator.release(pf.slot)
             rs.stage_cache = None
             rs.stage_gates = []
-            rs.stats.preemptions += 1
+            m.inc("preemptions_total")
+            rs.admitted.discard(pf.req.uid)
+            tid = request_tid(pf.req.uid)
+            tr.end(tid)                   # abort the open prefill span
+            tr.instant("preempt", tid, kind="prefill_abort")
+            tr.begin("queued", tid)       # requeued at the FIFO head
             return True
         victims = [s for s in sched.active if s != exclude]
         if not victims:
@@ -795,23 +949,26 @@ class ContinuousBatchingEngine:
         rs.hist.on_release(slot)
         rs.admit_seq.pop(slot, None)
         sched.requeue_front(st.req)
-        rs.stats.preemptions += 1
+        m.inc("preemptions_total")
+        rs.admitted.discard(st.req.uid)
+        tid = request_tid(st.req.uid)
+        tr.instant("preempt", tid, kind="evict", slot=slot)
+        tr.begin("queued", tid)
         return True
 
-    def _activate_prefilled(self, req: Request, slot: int, tok: int,
-                            t_run: float, now: float, stats: ServeStats,
-                            tok_known: bool = True):
+    def _activate_prefilled(self, rs: _RunState, req: Request, slot: int,
+                            tok: int, now: float, tok_known: bool = True):
         """Register a freshly prefilled request.  Returns (state, reason):
         reason is "stop"/"length" when the first token already ends the
         request, else None.  ``tok_known=False`` (fused mode): ``tok`` is
         a placeholder — the real value is still a device array, the stop
         check happens on device at the next epoch's loop entry, and the
         host backfills the bookkeeping at the epoch sync."""
-        stats.prefill_tokens += req.prompt_len
-        stats.decode_tokens += 1
+        rs.metrics.inc("prefill_tokens_total", req.prompt_len)
+        rs.metrics.inc("decode_tokens_total")
         st = ActiveRequest(req=req, slot=slot, pos=req.prompt_len,
                            next_token=tok, out_tokens=[tok],
-                           submit_s=t_run, first_token_s=now,
+                           submit_s=rs.t_run, first_token_s=now,
                            last_emit_s=now)
         self.scheduler.activate(st)
         if tok_known and req.stop_token is not None \
@@ -821,24 +978,29 @@ class ContinuousBatchingEngine:
             return st, "length"
         return st, None
 
-    def _advance_slot(self, st: ActiveRequest, tok: int,
+    def _advance_slot(self, rs: _RunState, st: ActiveRequest, tok: int,
                       g: Optional[np.ndarray], step_s: float,
-                      stats: ServeStats, measure: bool,
-                      n_layers: int) -> Optional[str]:
+                      measure: bool, n_layers: int) -> Optional[str]:
         """Post-decode bookkeeping for one resident (the fed token's KV
         was just written at st.pos).  Returns the finish reason or None."""
+        m = rs.metrics
         st.decode_s += step_s
-        now = time.time()
+        now = perf_counter()
         if st.last_emit_s:
-            st.max_stall_s = max(st.max_stall_s, now - st.last_emit_s)
+            gap = now - st.last_emit_s
+            st.max_stall_s = max(st.max_stall_s, gap)
+            m.observe("decode_stall_seconds", gap)
         st.last_emit_s = now
         if g is not None:
+            stored = (1 + int(g[1:].sum()) if measure else n_layers)
             st.kv_dense += n_layers
-            st.kv_stored += (1 + int(g[1:].sum()) if measure else n_layers)
+            st.kv_stored += stored
+            m.inc("kv_entries_dense_measured_total", n_layers)
+            m.inc("kv_entries_stored_measured_total", stored)
         st.pos += 1
         st.out_tokens.append(tok)
         st.next_token = tok
-        stats.decode_tokens += 1
+        m.inc("decode_tokens_total")
         if st.req.stop_token is not None and tok == st.req.stop_token:
             return "stop"
         if len(st.out_tokens) >= st.req.max_new_tokens:
@@ -890,20 +1052,21 @@ class ContinuousBatchingEngine:
         measured KV accounting at finish time by ``_account_prefill``."""
         defer = (self.decode_steps > 1 and self.kv_mode == "dense"
                  and work.req.max_new_tokens > 1)
+        m = rs.metrics
         if defer:
             tok = 0                       # placeholder; device holds truth
         else:
-            ts = time.time()
+            ts = perf_counter()
             tok = int(np.asarray(tok_dev)[0])
-            rs.stats.device_s += time.time() - ts
-        now = time.time()
-        rs.stats.prefill_chunks += 1
-        rs.stats.prefill_s += now - t0
+            m.inc("device_seconds_total", perf_counter() - ts)
+        now = perf_counter()
+        m.inc("prefill_chunks_total")
+        m.inc("prefill_seconds_total", now - t0)
         self.scheduler.prefill_advance(work)
-        st, reason = self._activate_prefilled(work.req, work.slot, tok,
-                                              rs.t_run, now, rs.stats,
-                                              tok_known=not defer)
+        st, reason = self._activate_prefilled(rs, work.req, work.slot, tok,
+                                              now, tok_known=not defer)
         st.pf_gates = pf_gates
+        self.tracer.end(request_tid(work.req.uid))    # prefill phase span
         if defer:
             rs.pending[work.slot] = tok_dev
         elif reason:
@@ -933,25 +1096,32 @@ class ContinuousBatchingEngine:
         """Execute one dense-pool prefill work unit: either a legacy
         monolithic (bucketed) prefill + pool insert, or one staging-cache
         chunk (inserted into the pool on the last chunk)."""
-        t0 = time.time()
+        t0 = perf_counter()
+        tr = self.tracer
+        tid = request_tid(work.req.uid)
         if not self.prefill_chunk:
-            padded, last = self.scheduler.pad_prompt(work.req.tokens)
-            rs.rng, sub = jax.random.split(rs.rng)
-            tok_dev, cache, pstats = self._prefill(
-                self.params, {"tokens": jnp.asarray(padded[None])},
-                jnp.asarray([last], jnp.int32), sub)
-            pool = self._insert(pool, cache, jnp.int32(work.slot))
+            with tr.span("prefill[0]", tid, tokens=work.req.prompt_len), \
+                    tr.annotate("prefill"):
+                padded, last = self.scheduler.pad_prompt(work.req.tokens)
+                rs.rng, sub = jax.random.split(rs.rng)
+                tok_dev, cache, pstats = self._prefill(
+                    self.params, {"tokens": jnp.asarray(padded[None])},
+                    jnp.asarray([last], jnp.int32), sub)
+                pool = self._insert(pool, cache, jnp.int32(work.slot))
             pf_gates = pstats.get("attn_gate")
             if pf_gates is not None:
                 pf_gates = pf_gates[:, 0]                         # [L, Tp]
         else:
-            logits = self._chunk_forward(rs, work)
+            idx = work.start // self.prefill_chunk
+            with tr.span(f"prefill[{idx}]", tid, tokens=len(work.tokens)), \
+                    tr.annotate("prefill_chunk"):
+                logits = self._chunk_forward(rs, work)
             if not work.is_last:
                 # no sync: the chunk's compute overlaps the decode step
                 # dispatched right after it (async dispatch stream), so
-                # prefill_s here attributes host-side dispatch only
-                rs.stats.prefill_chunks += 1
-                rs.stats.prefill_s += time.time() - t0
+                # prefill time here attributes host-side dispatch only
+                rs.metrics.inc("prefill_chunks_total")
+                rs.metrics.inc("prefill_seconds_total", perf_counter() - t0)
                 self.scheduler.prefill_advance(work)
                 return pool
             pool = self._insert_staged(pool, rs.stage_cache,
@@ -976,25 +1146,32 @@ class ContinuousBatchingEngine:
         cfg, alloc, nA = self.cfg, self.allocator, self.n_attn
         reuse = paged_mod.reuse_enabled(cfg)
         req, slot = work.req, work.slot
-        t0 = time.time()
+        t0 = perf_counter()
+        tr = self.tracer
+        tid = request_tid(req.uid)
         if not self.prefill_chunk:
-            padded, last = self.scheduler.pad_prompt(req.tokens)
             T0 = req.prompt_len
-            rs.rng, sub = jax.random.split(rs.rng)
-            tok_dev, cache, pstats = self._prefill_paged(
-                self.params, {"tokens": jnp.asarray(padded[None])},
-                jnp.asarray([last], jnp.int32), sub)
+            with tr.span("prefill[0]", tid, tokens=T0), \
+                    tr.annotate("prefill_paged"):
+                padded, last = self.scheduler.pad_prompt(req.tokens)
+                rs.rng, sub = jax.random.split(rs.rng)
+                tok_dev, cache, pstats = self._prefill_paged(
+                    self.params, {"tokens": jnp.asarray(padded[None])},
+                    jnp.asarray([last], jnp.int32), sub)
             gates = np.asarray(pstats["attn_gate"], np.float32)[:, 0]
         else:
             # worst-case pages were reserved at admission time in
             # _run_paged (the reservation must not trail the _can_place
             # check across iterations)
-            logits = self._chunk_forward(rs, work)
+            idx = work.start // self.prefill_chunk
+            with tr.span(f"prefill[{idx}]", tid, tokens=len(work.tokens)), \
+                    tr.annotate("prefill_chunk"):
+                logits = self._chunk_forward(rs, work)
             if not work.is_last:
                 # no sync: chunk compute overlaps this iteration's decode
                 # step (see _prefill_work_dense)
-                rs.stats.prefill_chunks += 1
-                rs.stats.prefill_s += time.time() - t0
+                rs.metrics.inc("prefill_chunks_total")
+                rs.metrics.inc("prefill_seconds_total", perf_counter() - t0)
                 self.scheduler.prefill_advance(work)
                 return store
             T0 = req.prompt_len
@@ -1034,10 +1211,8 @@ class ContinuousBatchingEngine:
         then one ragged decode step over every resident slot."""
         cfg = self.cfg
         sched = self.scheduler
-        rng = rng if rng is not None else jax.random.PRNGKey(0)
-        rs = _RunState(stats=ServeStats(), results={}, t_run=time.time(),
-                       rng=rng)
-        stats = rs.stats
+        rs = self._new_run_state(rng, paged=False)
+        m, tr = rs.metrics, self.tracer
         L_attn = max(len(cfg.attention_layers), 1)
         measure = cfg.skip.enabled and cfg.skip.kv_reuse
 
@@ -1049,63 +1224,105 @@ class ContinuousBatchingEngine:
             pool = jax.device_put(pool, self._pool_sh)
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
-        t_loop = time.time()
+        t_loop = perf_counter()
 
         while sched.has_work():
+            tr.begin("step", idx=rs.disp_idx)
+            self._step_gauges(rs)
             # -- prefill work from the step planner ------------------------
             pre_active = bool(sched.active)
             did_prefill = False
             while True:
-                plan = sched.plan_step(token_budget=self.step_tokens)
+                with tr.span("plan"):
+                    plan = sched.plan_step(token_budget=self.step_tokens)
+                self._note_admission(rs)
                 if plan.prefill is None:
                     break
-                pool = self._prefill_work_dense(rs, plan.prefill, pool)
+                with tr.span("prefill"):
+                    pool = self._prefill_work_dense(rs, plan.prefill, pool)
                 did_prefill = True
                 if self.prefill_chunk:
                     break
             if did_prefill and pre_active:
-                stats.interleaved_steps += 1
+                m.inc("interleaved_steps_total")
 
             if not sched.active:
+                self._poll_compiles(rs)
+                tr.end()                  # step
                 continue
 
             # -- one ragged decode step over the whole pool ----------------
             for slot, st in sched.active.items():
                 feed[slot] = st.next_token
                 pos[slot] = st.pos
-            t0 = time.time()
-            logits, pool, dstats = self._decode(
-                self.params, pool, {"tokens": jnp.asarray(feed[:, None])},
-                jnp.asarray(pos))
-            rs.rng, sub = jax.random.split(rs.rng)
-            tok_dev = sample(logits, sub, self.temperature)
-            stats.decode_dispatches += 1
-            t_sync = time.time()
-            toks = np.asarray(tok_dev)
-            gates = (np.asarray(dstats["attn_gate"], np.float32)
-                     if "attn_gate" in dstats else None)
-            now = time.time()
-            stats.device_s += now - t_sync
+            t0 = perf_counter()
+            with tr.span("dispatch"), tr.annotate("decode_step"):
+                logits, pool, dstats = self._decode(
+                    self.params, pool,
+                    {"tokens": jnp.asarray(feed[:, None])},
+                    jnp.asarray(pos))
+                rs.rng, sub = jax.random.split(rs.rng)
+                tok_dev = sample(logits, sub, self.temperature)
+            m.inc("decode_dispatches_total")
+            t_sync = perf_counter()
+            with tr.span("sync"):
+                toks = np.asarray(tok_dev)
+                gates = (np.asarray(dstats["attn_gate"], np.float32)
+                         if "attn_gate" in dstats else None)
+            now = perf_counter()
+            m.inc("device_seconds_total", now - t_sync)
             step_s = now - t0
-            stats.decode_s += step_s
+            m.inc("decode_seconds_total", step_s)
+            m.observe("step_seconds", step_s)
 
-            for slot in list(sched.active):
-                st = sched.active[slot]
-                g = gates[:, slot] if gates is not None else None
-                if g is not None:
-                    rs.keep_acc += float(g.sum())
-                    rs.keep_n += L_attn
-                reason = self._advance_slot(st, int(toks[slot]), g, step_s,
-                                            stats, measure, L_attn)
-                if reason:
-                    self._finish(rs, slot, reason)
+            with tr.span("bookkeep"):
+                cur = list(sched.active)
+                if tr.enabled:
+                    t0u, t1u = tr.to_us(t0), tr.to_us(now)
+                    for slot in cur:
+                        tr.span_at(f"decode[{rs.disp_idx}]",
+                                   request_tid(sched.active[slot].req.uid),
+                                   t0u, t1u, tokens=1)
+                lay = (gates[:, cur].mean(axis=1) if gates is not None
+                       else None)
+                for slot in cur:
+                    st = sched.active[slot]
+                    g = gates[:, slot] if gates is not None else None
+                    if g is not None:
+                        rs.keep_acc += float(g.sum())
+                        rs.keep_n += L_attn
+                    reason = self._advance_slot(rs, st, int(toks[slot]), g,
+                                                step_s, measure, L_attn)
+                    if reason:
+                        self._finish(rs, slot, reason)
+                self._record_step_series(rs, lay)
+            rs.step_idx += 1
+            rs.disp_idx += 1
+            self._poll_compiles(rs)
+            tr.end()                      # step
 
-        stats.host_s += (time.time() - t_loop) - stats.device_s
+        m.inc("host_seconds_total",
+              (perf_counter() - t_loop) - m.value("device_seconds_total"))
         return self._finalize(rs)
 
     def _finalize(self, rs: _RunState) -> Dict[str, object]:
-        """Aggregate per-request accounting into the run's ServeStats."""
-        stats, results = rs.stats, rs.results
+        """Derive the run's ServeStats from the metrics registry (the flat
+        dataclass is a *view* — every counter field reads out of the
+        registry, which the returned dict carries too), fold per-request
+        accounting into the aggregate KV numbers, and flush the trace."""
+        stats, results, m = rs.stats, rs.results, rs.metrics
+        stats.prefill_tokens = int(m.value("prefill_tokens_total"))
+        stats.decode_tokens = int(m.value("decode_tokens_total"))
+        stats.prefill_s = m.value("prefill_seconds_total")
+        stats.decode_s = m.value("decode_seconds_total")
+        stats.prefill_chunks = int(m.value("prefill_chunks_total"))
+        stats.interleaved_steps = int(m.value("interleaved_steps_total"))
+        stats.requests_completed = int(m.value("requests_completed_total"))
+        stats.decode_dispatches = int(m.value("decode_dispatches_total"))
+        stats.device_s = m.value("device_seconds_total")
+        stats.host_s = m.value("host_seconds_total")
+        stats.preemptions = int(m.value("preemptions_total"))
+        stats.compiles = int(m.value("compiles_total"))
         stats.attn_keep_frac = (rs.keep_acc / rs.keep_n if rs.keep_n
                                 else 1.0)
         tot_dense = sum(r.kv_dense for r in results.values())
@@ -1120,7 +1337,12 @@ class ContinuousBatchingEngine:
             stats.kv_entries_dense = alloc.stats.entries_dense
             stats.history_hit_rate = rs.hist.hit_rate
             stats.history_hits_per_layer = rs.hist.per_layer_hit_rate
-        return {"results": results, "stats": stats}
+            m.set("pages_peak", alloc.stats.pages_peak)
+            for i, h in enumerate(rs.hist.per_layer_hit_rate):
+                m.set("history_hit_rate", h, layer=i)
+        if self.tracer.enabled and self.tracer.path is not None:
+            self.tracer.save()
+        return {"results": results, "stats": stats, "metrics": m}
 
     def _run_paged(self, rng: Optional[jax.Array] = None
                    ) -> Dict[str, object]:
@@ -1142,15 +1364,10 @@ class ContinuousBatchingEngine:
         sched = self.scheduler
         alloc = self.allocator
         nA = self.n_attn
-        rng = rng if rng is not None else jax.random.PRNGKey(0)
         reuse = paged_mod.reuse_enabled(cfg)
         measure = cfg.skip.enabled and cfg.skip.kv_reuse
-        rs = _RunState(
-            stats=ServeStats(kv_mode="paged", page_size=self.page_size,
-                             pages_total=self.num_pages),
-            results={}, t_run=time.time(), rng=rng,
-            hist=history_mod.HistoryAccounting(nA, self.max_slots, reuse))
-        stats = rs.stats
+        rs = self._new_run_state(rng, paged=True)
+        m, tr = rs.metrics, self.tracer
 
         store = paged_mod.init_store(cfg, self.num_pages, self.page_size)
         if self.policy is not None:
@@ -1159,29 +1376,35 @@ class ContinuousBatchingEngine:
             store = jax.device_put(store, self._store_sh)
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
-        t_loop = time.time()
+        t_loop = perf_counter()
 
         while sched.has_work():
+            tr.begin("step", idx=rs.disp_idx)
+            self._step_gauges(rs)
             # -- proactive headroom first: every resident can absorb one
             # full step before anyone new is let in (a newcomer admitted
             # into pages the residents need would be preempted right back,
             # throwing its prefill away)
-            for slot in sorted(sched.active):
-                if slot not in sched.active:     # preempted below
-                    continue
-                while not alloc.ensure(slot, int(alloc.fill[slot]) + nA):
-                    if not self._preempt_youngest(rs, exclude=slot):
-                        raise RuntimeError(
-                            f"page pool exhausted with a single resident "
-                            f"request (slot {slot}) — submit() should have "
-                            "rejected it")
+            with tr.span("headroom"):
+                for slot in sorted(sched.active):
+                    if slot not in sched.active:     # preempted below
+                        continue
+                    while not alloc.ensure(slot,
+                                           int(alloc.fill[slot]) + nA):
+                        if not self._preempt_youngest(rs, exclude=slot):
+                            raise RuntimeError(
+                                f"page pool exhausted with a single "
+                                f"resident request (slot {slot}) — "
+                                "submit() should have rejected it")
 
             # -- prefill work from the step planner: admission gated on
             # free pages, one work unit per iteration so each _can_place
             # check sees the pages the previous admission consumed
             pre_active = bool(sched.active)
-            plan = sched.plan_step(can_place=self._can_place,
-                                   token_budget=self.step_tokens)
+            with tr.span("plan"):
+                plan = sched.plan_step(can_place=self._can_place,
+                                       token_budget=self.step_tokens)
+            self._note_admission(rs)
             # reserve a newly admitted prompt's worst-case pages NOW,
             # inside the same iteration as its _can_place check: chunked
             # execution and budget deferrals can postpone the first
@@ -1200,11 +1423,15 @@ class ContinuousBatchingEngine:
                         "iteration as a successful _can_place admission "
                         "check — allocator bug")
             if plan.prefill is not None:
-                store = self._prefill_work_paged(rs, plan.prefill, store)
+                with tr.span("prefill"):
+                    store = self._prefill_work_paged(rs, plan.prefill,
+                                                     store)
                 if pre_active:
-                    stats.interleaved_steps += 1
+                    m.inc("interleaved_steps_total")
 
             if not sched.active:
+                self._poll_compiles(rs)
+                tr.end()                  # step
                 continue
 
             # -- one ragged decode step over the whole pool ----------------
@@ -1218,37 +1445,56 @@ class ContinuousBatchingEngine:
             j_live = max(1, alloc.max_chain_pages())
             j_step = min(1 << (j_live - 1).bit_length(),
                          alloc.pages_per_slot)
-            t0 = time.time()
-            logits, store, dstats = self._decode_paged(
-                self.params, store, {"tokens": jnp.asarray(feed[:, None])},
-                jnp.asarray(pos),
-                jnp.asarray(alloc.block_table[:, :j_step]),
-                jnp.asarray(alloc.fill))
-            rs.rng, sub = jax.random.split(rs.rng)
-            tok_dev = sample(logits, sub, self.temperature)
-            stats.decode_dispatches += 1
-            t_sync = time.time()
-            toks = np.asarray(tok_dev)
-            gates = np.asarray(dstats["attn_gate"], np.float32)
-            now = time.time()
-            stats.device_s += now - t_sync
+            t0 = perf_counter()
+            with tr.span("dispatch"), tr.annotate("paged_decode_step"):
+                logits, store, dstats = self._decode_paged(
+                    self.params, store,
+                    {"tokens": jnp.asarray(feed[:, None])},
+                    jnp.asarray(pos),
+                    jnp.asarray(alloc.block_table[:, :j_step]),
+                    jnp.asarray(alloc.fill))
+                rs.rng, sub = jax.random.split(rs.rng)
+                tok_dev = sample(logits, sub, self.temperature)
+            m.inc("decode_dispatches_total")
+            t_sync = perf_counter()
+            with tr.span("sync"):
+                toks = np.asarray(tok_dev)
+                gates = np.asarray(dstats["attn_gate"], np.float32)
+            now = perf_counter()
+            m.inc("device_seconds_total", now - t_sync)
             step_s = now - t0
-            stats.decode_s += step_s
+            m.inc("decode_seconds_total", step_s)
+            m.observe("step_seconds", step_s)
 
-            for slot in list(sched.active):
-                st = sched.active[slot]
-                g = gates[:, slot]
-                fresh_n = int(1 + (g[1:] > 0.5).sum()) if reuse else nA
-                alloc.append(slot, fresh_n, nA)
-                rs.hist.on_decode_step(slot, g)
-                rs.keep_acc += float(g.sum())
-                rs.keep_n += nA
-                reason = self._advance_slot(st, int(toks[slot]), g, step_s,
-                                            stats, measure, nA)
-                if reason:
-                    self._finish(rs, slot, reason)
+            with tr.span("bookkeep"):
+                cur = list(sched.active)
+                if tr.enabled:
+                    t0u, t1u = tr.to_us(t0), tr.to_us(now)
+                    for slot in cur:
+                        tr.span_at(f"decode[{rs.disp_idx}]",
+                                   request_tid(sched.active[slot].req.uid),
+                                   t0u, t1u, tokens=1)
+                lay = gates[:, cur].mean(axis=1)
+                for slot in cur:
+                    st = sched.active[slot]
+                    g = gates[:, slot]
+                    fresh_n = int(1 + (g[1:] > 0.5).sum()) if reuse else nA
+                    alloc.append(slot, fresh_n, nA)
+                    rs.hist.on_decode_step(slot, g)
+                    rs.keep_acc += float(g.sum())
+                    rs.keep_n += nA
+                    reason = self._advance_slot(rs, st, int(toks[slot]), g,
+                                                step_s, measure, nA)
+                    if reason:
+                        self._finish(rs, slot, reason)
+                self._record_step_series(rs, lay)
+            rs.step_idx += 1
+            rs.disp_idx += 1
+            self._poll_compiles(rs)
+            tr.end()                      # step
 
-        stats.host_s += (time.time() - t_loop) - stats.device_s
+        m.inc("host_seconds_total",
+              (perf_counter() - t_loop) - m.value("device_seconds_total"))
         return self._finalize(rs)
 
     # -- fused-epoch run loops (decode_steps > 1) --------------------------
@@ -1296,52 +1542,76 @@ class ContinuousBatchingEngine:
         the paged hook (allocator append + history replay).  A host/device
         divergence in finish detection raises instead of silently
         desyncing the KV state."""
-        cfg, sched, stats = self.cfg, self.scheduler, rs.stats
+        cfg, sched = self.cfg, self.scheduler
+        m, tr = rs.metrics, self.tracer
         L_attn = max(len(cfg.attention_layers), 1)
         measure = cfg.skip.enabled and cfg.skip.kv_reuse
-        t_sync = time.time()
-        toks = np.asarray(out["tokens"])                     # [n, S]
-        step_act = np.asarray(out["step_active"])            # [n, S]
-        gates = (np.asarray(out["attn_gate"], np.float32)
-                 if out["attn_gate"] is not None else None)  # [n, L, S]
-        fin_act = np.asarray(out["active"])
-        now = time.time()
-        stats.device_s += now - t_sync
+        t_sync = perf_counter()
+        with tr.span("sync"):
+            toks = np.asarray(out["tokens"])                     # [n, S]
+            step_act = np.asarray(out["step_active"])            # [n, S]
+            gates = (np.asarray(out["attn_gate"], np.float32)
+                     if out["attn_gate"] is not None else None)  # [n, L, S]
+            fin_act = np.asarray(out["active"])
+        now = perf_counter()
+        m.inc("device_seconds_total", now - t_sync)
         epoch_s = now - t_disp
-        stats.decode_s += epoch_s
+        m.inc("decode_seconds_total", epoch_s)
+        m.observe("step_seconds", epoch_s)
         n_run = toks.shape[0]
         step_s = epoch_s / n_run
 
-        # deferred first tokens first: their slots either join the epoch
-        # replay below (normal) or were entry-killed on device and finish
-        # here with the stop reason (step_active all False)
-        self._resolve_pending(rs)
+        with tr.span("bookkeep"):
+            # deferred first tokens first: their slots either join the
+            # epoch replay below (normal) or were entry-killed on device
+            # and finish here with the stop reason (step_active all False)
+            self._resolve_pending(rs)
 
-        for slot in slots:
-            st = sched.active.get(slot)
-            if st is None:
-                continue      # entry-killed pending slot, finished above
-            reason = None
-            for s in range(n_run):
-                if not step_act[s, slot]:
-                    continue
-                g = gates[s, :, slot] if gates is not None else None
-                if g is not None:
-                    rs.keep_acc += float(g.sum())
-                    rs.keep_n += L_attn
-                if per_step is not None:
-                    per_step(slot, g)
-                reason = self._advance_slot(st, int(toks[s, slot]), g,
-                                            step_s, stats, measure, L_attn)
-                if reason:
-                    self._finish(rs, slot, reason)
-                    break
-            if (reason is None) != bool(fin_act[slot]):
-                raise RuntimeError(
-                    f"fused-epoch divergence on slot {slot}: host finish "
-                    f"reason {reason!r} vs device active "
-                    f"{bool(fin_act[slot])} — the device loop's stop/"
-                    "length conditions no longer mirror _advance_slot")
+            if tr.enabled:
+                t0u, t1u = tr.to_us(t_disp), tr.to_us(now)
+                for slot in slots:
+                    st = sched.active.get(slot)
+                    if st is not None:
+                        tr.span_at(f"decode[{rs.disp_idx}]",
+                                   request_tid(st.req.uid), t0u, t1u,
+                                   tokens=int(step_act[:, slot].sum()))
+
+            for slot in slots:
+                st = sched.active.get(slot)
+                if st is None:
+                    continue  # entry-killed pending slot, finished above
+                reason = None
+                for s in range(n_run):
+                    if not step_act[s, slot]:
+                        continue
+                    g = gates[s, :, slot] if gates is not None else None
+                    if g is not None:
+                        rs.keep_acc += float(g.sum())
+                        rs.keep_n += L_attn
+                    if per_step is not None:
+                        per_step(slot, g)
+                    reason = self._advance_slot(rs, st, int(toks[s, slot]),
+                                                g, step_s, measure, L_attn)
+                    if reason:
+                        self._finish(rs, slot, reason)
+                        break
+                if (reason is None) != bool(fin_act[slot]):
+                    raise RuntimeError(
+                        f"fused-epoch divergence on slot {slot}: host "
+                        f"finish reason {reason!r} vs device active "
+                        f"{bool(fin_act[slot])} — the device loop's stop/"
+                        "length conditions no longer mirror _advance_slot")
+
+            lay = None
+            if gates is not None:
+                msum = float(step_act.sum())
+                if msum:
+                    # per-layer keep rate over every executed (step, slot)
+                    lay = (gates * step_act[:, None, :]).sum(axis=(0, 2)) \
+                        / msum
+            self._record_step_series(rs, lay)
+        rs.step_idx += n_run
+        rs.disp_idx += 1
 
     def _run_dense_fused(self, rng: Optional[jax.Array] = None
                          ) -> Dict[str, object]:
@@ -1357,17 +1627,17 @@ class ContinuousBatchingEngine:
         is identical to ``_run_dense`` at temperature 0."""
         cfg = self.cfg
         sched = self.scheduler
-        rng = rng if rng is not None else jax.random.PRNGKey(0)
-        rs = _RunState(stats=ServeStats(), results={}, t_run=time.time(),
-                       rng=rng)
-        stats = rs.stats
+        rs = self._new_run_state(rng, paged=False)
+        m, tr = rs.metrics, self.tracer
 
         pool = init_pool(cfg, self.max_slots, self.max_len)
         if self.policy is not None:
             pool = jax.device_put(pool, self._pool_sh)
-        t_loop = time.time()
+        t_loop = perf_counter()
 
         while sched.has_work():
+            tr.begin("step", idx=rs.disp_idx)
+            self._step_gauges(rs)
             # -- (1) dispatch one N-step epoch over the residents ----------
             out = None
             slots: List[int] = []
@@ -1382,36 +1652,47 @@ class ContinuousBatchingEngine:
                         # deferred first token: overlay the device value
                         # into the feed carry (no host sync)
                         feed_dev = feed_dev.at[slot].set(tok_dev[0])
-                t_disp = time.time()
-                pool, out = self._dense_loop(n_eff)(
-                    self.params, pool, feed_dev, jnp.asarray(pos),
-                    jnp.asarray(act), jnp.asarray(budget),
-                    jnp.asarray(stop), rs.rng)
-                rs.rng = out["rng"]
-                stats.decode_dispatches += 1
+                t_disp = perf_counter()
+                with tr.span("dispatch", n=n_eff), \
+                        tr.annotate("decode_epoch"):
+                    pool, out = self._dense_loop(n_eff)(
+                        self.params, pool, feed_dev, jnp.asarray(pos),
+                        jnp.asarray(act), jnp.asarray(budget),
+                        jnp.asarray(stop), rs.rng)
+                    rs.rng = out["rng"]
+                m.inc("decode_dispatches_total")
 
             # -- (2) host scheduling work overlapping the in-flight epoch --
             pre_active = bool(sched.active)
             did_prefill = False
-            while True:
-                plan = sched.plan_step(token_budget=self.step_tokens,
-                                       decode_steps=n_eff)
-                if plan.prefill is None:
-                    break
-                pool = self._prefill_work_dense(rs, plan.prefill, pool)
-                did_prefill = True
-                if self.prefill_chunk:
-                    break
+            with tr.span("plan"):
+                while True:
+                    plan = sched.plan_step(token_budget=self.step_tokens,
+                                           decode_steps=n_eff)
+                    self._note_admission(rs)
+                    if plan.prefill is None:
+                        break
+                    with tr.span("prefill"):
+                        pool = self._prefill_work_dense(rs, plan.prefill,
+                                                        pool)
+                    did_prefill = True
+                    if self.prefill_chunk:
+                        break
             if did_prefill and pre_active:
-                stats.interleaved_steps += 1
+                m.inc("interleaved_steps_total")
 
             if out is None:
+                self._poll_compiles(rs)
+                tr.end()                  # step
                 continue
 
             # -- (3) one sync per epoch + bookkeeping replay ---------------
             self._process_epoch(rs, out, slots, t_disp)
+            self._poll_compiles(rs)
+            tr.end()                      # step
 
-        stats.host_s += (time.time() - t_loop) - stats.device_s
+        m.inc("host_seconds_total",
+              (perf_counter() - t_loop) - m.value("device_seconds_total"))
         return self._finalize(rs)
 
     def _run_paged_fused(self, rng: Optional[jax.Array] = None
@@ -1433,19 +1714,14 @@ class ContinuousBatchingEngine:
         sched = self.scheduler
         alloc = self.allocator
         nA = self.n_attn
-        rng = rng if rng is not None else jax.random.PRNGKey(0)
         reuse = paged_mod.reuse_enabled(cfg)
-        rs = _RunState(
-            stats=ServeStats(kv_mode="paged", page_size=self.page_size,
-                             pages_total=self.num_pages),
-            results={}, t_run=time.time(), rng=rng,
-            hist=history_mod.HistoryAccounting(nA, self.max_slots, reuse))
-        stats = rs.stats
+        rs = self._new_run_state(rng, paged=True)
+        m, tr = rs.metrics, self.tracer
 
         store = paged_mod.init_store(cfg, self.num_pages, self.page_size)
         if self.policy is not None:
             store = jax.device_put(store, self._store_sh)
-        t_loop = time.time()
+        t_loop = perf_counter()
 
         def per_step(slot, g):
             fresh_n = int(1 + (g[1:] > 0.5).sum()) if reuse else nA
@@ -1453,6 +1729,8 @@ class ContinuousBatchingEngine:
             rs.hist.on_decode_step(slot, g)
 
         while sched.has_work():
+            tr.begin("step", idx=rs.disp_idx)
+            self._step_gauges(rs)
             out = None
             slots: List[int] = []
             n_eff = 1
@@ -1464,45 +1742,50 @@ class ContinuousBatchingEngine:
                         self.max_len - st.pos)
                 n_eff = self._epoch_len(rem)
                 # epoch-granular headroom: shrink before preempting
-                while True:
-                    failed = None
-                    for slot in sorted(sched.active):
-                        need = (int(alloc.fill[slot])
-                                + min(n_eff, rem.get(slot, 1)) * nA)
-                        if not alloc.ensure(slot, need):
-                            failed = slot
+                with tr.span("headroom"):
+                    while True:
+                        failed = None
+                        for slot in sorted(sched.active):
+                            need = (int(alloc.fill[slot])
+                                    + min(n_eff, rem.get(slot, 1)) * nA)
+                            if not alloc.ensure(slot, need):
+                                failed = slot
+                                break
+                        if failed is None:
                             break
-                    if failed is None:
-                        break
-                    if n_eff > 1:
-                        n_eff //= 2
-                        continue
-                    if not self._preempt_youngest(rs, exclude=failed):
-                        raise RuntimeError(
-                            f"page pool exhausted with a single resident "
-                            f"request (slot {failed}) — submit() should "
-                            "have rejected it")
+                        if n_eff > 1:
+                            n_eff //= 2
+                            continue
+                        if not self._preempt_youngest(rs, exclude=failed):
+                            raise RuntimeError(
+                                f"page pool exhausted with a single "
+                                f"resident request (slot {failed}) — "
+                                "submit() should have rejected it")
                 feed, pos, act, budget, stop, slots = self._epoch_args({})
                 j_live = max(1, alloc.max_chain_pages())
                 j_step = min(1 << (j_live - 1).bit_length(),
                              alloc.pages_per_slot)
-                t_disp = time.time()
-                store, out = self._paged_loop(n_eff)(
-                    self.params, store, jnp.asarray(feed),
-                    jnp.asarray(pos), jnp.asarray(alloc.fill),
-                    jnp.asarray(act), jnp.asarray(budget),
-                    jnp.asarray(stop), rs.rng,
-                    jnp.asarray(alloc.block_table[:, :j_step]))
-                rs.rng = out["rng"]
-                stats.decode_dispatches += 1
+                t_disp = perf_counter()
+                with tr.span("dispatch", n=n_eff), \
+                        tr.annotate("paged_decode_epoch"):
+                    store, out = self._paged_loop(n_eff)(
+                        self.params, store, jnp.asarray(feed),
+                        jnp.asarray(pos), jnp.asarray(alloc.fill),
+                        jnp.asarray(act), jnp.asarray(budget),
+                        jnp.asarray(stop), rs.rng,
+                        jnp.asarray(alloc.block_table[:, :j_step]))
+                    rs.rng = out["rng"]
+                m.inc("decode_dispatches_total")
 
             # -- host scheduling work overlapping the in-flight epoch ------
             # (admission sees the free list net of the epoch reservation,
             # preserving the same-iteration _can_place invariant)
             pre_active = bool(sched.active)
-            plan = sched.plan_step(can_place=self._can_place,
-                                   token_budget=self.step_tokens,
-                                   decode_steps=n_eff)
+            with tr.span("plan"):
+                plan = sched.plan_step(can_place=self._can_place,
+                                       token_budget=self.step_tokens,
+                                       decode_steps=n_eff)
+            self._note_admission(rs)
             pf = sched.prefilling
             if (pf is not None and pf.done == 0
                     and (self.prefill_chunk
@@ -1514,14 +1797,21 @@ class ContinuousBatchingEngine:
                         "iteration as a successful _can_place admission "
                         "check — allocator bug")
             if plan.prefill is not None:
-                store = self._prefill_work_paged(rs, plan.prefill, store)
+                with tr.span("prefill"):
+                    store = self._prefill_work_paged(rs, plan.prefill,
+                                                     store)
                 if pre_active:
-                    stats.interleaved_steps += 1
+                    m.inc("interleaved_steps_total")
 
             if out is None:
+                self._poll_compiles(rs)
+                tr.end()                  # step
                 continue
 
             self._process_epoch(rs, out, slots, t_disp, per_step=per_step)
+            self._poll_compiles(rs)
+            tr.end()                      # step
 
-        stats.host_s += (time.time() - t_loop) - stats.device_s
+        m.inc("host_seconds_total",
+              (perf_counter() - t_loop) - m.value("device_seconds_total"))
         return self._finalize(rs)

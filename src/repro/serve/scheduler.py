@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from time import perf_counter
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -52,11 +53,14 @@ class Request:
                        sampled from the prefill logits.
       stop_token     — optional token id that ends generation early (it
                        is still emitted as the last output token).
+      submit_s       — ``perf_counter`` stamp set by ``Scheduler.submit``
+                       (feeds the engine's queue-wait histogram).
     """
     uid: int
     tokens: np.ndarray               # [T0] int32 prompt
     max_new_tokens: int
     stop_token: Optional[int] = None
+    submit_s: float = 0.0
 
     @property
     def prompt_len(self) -> int:
@@ -205,6 +209,7 @@ class Scheduler:
             raise ValueError(
                 f"request {req.uid}: prompt_len={req.prompt_len} leaves no "
                 f"decode headroom within max_len={self.max_len}")
+        req.submit_s = perf_counter()
         self.queue.append(req)
 
     @property

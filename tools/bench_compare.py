@@ -15,10 +15,10 @@ tolerance are reported (so the baseline can be re-pinned) but pass.
 A second, stricter class of gates — ``FLOORS`` — checks the *fresh*
 artifact against an absolute bound, independent of the baseline.  These
 exist for claims the repo must keep true on every machine, not merely
-"no worse than last time": today that is the continuous-vs-lockstep
-goodput ratio with the fused decode loop on, which must stay >= 1.1.
-Speedup ratios are same-machine quotients, so they travel across hosts
-where raw wall-clock rows do not.
+"no worse than last time": the continuous-vs-lockstep goodput ratio with
+the fused decode loop on (>= 1.1), and the tracing-overhead guard
+(traced goodput >= 0.97x untraced).  Speedup ratios are same-machine
+quotients, so they travel across hosts where raw wall-clock rows do not.
 
 This is the consumer of the perf-trajectory artifacts bench-smoke has
 been uploading since PR 3: the baselines under ``benchmarks/baselines/``
@@ -78,6 +78,11 @@ FLOORS = {
         # PR-6 headline: the fused N-step continuous engine must beat the
         # lock-step engine on useful-token goodput by >= 1.1x
         ("meta.goodput.speedup", 1.1),
+    ],
+    "observability": [
+        # tracing must cost < 3% goodput: traced/untraced same-machine
+        # ratio (PR-7 overhead guard; see benchmarks/bench_observability)
+        ("meta.overhead.traced_goodput_ratio", 0.97),
     ],
 }
 

@@ -1,0 +1,185 @@
+#!/usr/bin/env python
+"""Summarize a Chrome trace-event JSON emitted by ``repro.obs.Tracer``.
+
+Usage:
+    python tools/trace_summary.py trace.json [--top N] [--json]
+
+Reports, from the span structure alone (no engine imports):
+
+* engine time-in-phase breakdown — how each run-loop iteration's wall
+  time splits across plan / headroom / prefill / dispatch / sync /
+  bookkeep (the host-side anatomy of a step);
+* top-N slowest requests by wall time (queued → finish), with their
+  queued/prefill time split and decode-epoch count;
+* preemption and recompile report: every ``preempt`` instant with its
+  kind, and every ``compile`` instant with the step it landed in.
+
+``--json`` prints the summary dict instead of the human table (what the
+schema test and CI consume).  Exit code is non-zero on malformed traces
+(unbalanced begin/end), so CI can gate on it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+ENGINE_TID = 0
+
+
+def load_events(path: str) -> List[dict]:
+    """Read a trace file; accepts both the wrapped ``{"traceEvents": []}``
+    object form and a bare event array."""
+    with open(path) as f:
+        data = json.load(f)
+    events = data["traceEvents"] if isinstance(data, dict) else data
+    if not isinstance(events, list):
+        raise ValueError("trace is neither an event array nor an object "
+                         "with a traceEvents array")
+    return events
+
+
+def pair_spans(events: List[dict]) -> Dict[int, List[dict]]:
+    """Match ``B``/``E`` events per tid into span dicts
+    ``{name, tid, ts, dur, depth}`` (LIFO pairing, as the format
+    requires).  Raises ValueError on unbalanced or crossed spans."""
+    spans: Dict[int, List[dict]] = defaultdict(list)
+    stacks: Dict[int, List[dict]] = defaultdict(list)
+    for ev in events:
+        ph, tid = ev.get("ph"), ev.get("tid", 0)
+        if ph == "B":
+            stacks[tid].append(ev)
+        elif ph == "E":
+            if not stacks[tid]:
+                raise ValueError(
+                    f"unbalanced trace: 'E' at ts={ev.get('ts')} on tid "
+                    f"{tid} with no open span")
+            b = stacks[tid].pop()
+            spans[tid].append({
+                "name": b["name"], "tid": tid, "ts": b["ts"],
+                "dur": ev["ts"] - b["ts"], "depth": len(stacks[tid]),
+                "args": b.get("args", {})})
+    leftover = {t: [b["name"] for b in s] for t, s in stacks.items() if s}
+    if leftover:
+        raise ValueError(f"unbalanced trace: unclosed spans {leftover}")
+    return dict(spans)
+
+
+def track_names(events: List[dict]) -> Dict[int, str]:
+    return {ev["tid"]: ev["args"]["name"] for ev in events
+            if ev.get("ph") == "M" and ev.get("name") == "thread_name"}
+
+
+def summarize(events: List[dict], top: int = 5) -> dict:
+    spans = pair_spans(events)
+    names = track_names(events)
+
+    # -- engine time-in-phase ----------------------------------------------
+    eng = spans.get(ENGINE_TID, [])
+    steps = [s for s in eng if s["name"] == "step"]
+    phase_us: Dict[str, float] = defaultdict(float)
+    for s in eng:
+        if s["name"] != "step":
+            phase_us[s["name"]] += s["dur"]
+    step_us = sum(s["dur"] for s in steps)
+    accounted = sum(d for n, d in phase_us.items() if n in
+                    ("plan", "headroom", "prefill", "dispatch", "sync",
+                     "bookkeep"))
+    if step_us:
+        phase_us["other"] = max(0.0, step_us - accounted)
+
+    # -- per-request lifecycles --------------------------------------------
+    requests = []
+    for tid, sp in spans.items():
+        if tid == ENGINE_TID:
+            continue
+        root = [s for s in sp if s["name"] == "request"]
+        if not root:
+            continue
+        decode = [s for s in sp if s["name"].startswith("decode[")]
+        requests.append({
+            "track": names.get(tid, f"tid {tid}"),
+            "wall_us": root[0]["dur"],
+            "queued_us": sum(s["dur"] for s in sp if s["name"] == "queued"),
+            "prefill_us": sum(s["dur"] for s in sp
+                              if s["name"] == "prefill"),
+            "decode_epochs": len(decode),
+            "decode_tokens": sum(int(s["args"].get("tokens", 0))
+                                 for s in decode),
+        })
+    requests.sort(key=lambda r: -r["wall_us"])
+
+    # -- instants: preemptions + recompiles --------------------------------
+    preempts = [{"track": names.get(ev.get("tid", 0), "?"),
+                 "ts": ev["ts"], **ev.get("args", {})}
+                for ev in events
+                if ev.get("ph") == "i" and ev.get("name") == "preempt"]
+    compiles = [{"ts": ev["ts"], **ev.get("args", {})} for ev in events
+                if ev.get("ph") == "i" and ev.get("name") == "compile"]
+
+    return {
+        "n_events": len(events),
+        "n_steps": len(steps),
+        "step_wall_us": step_us,
+        "phase_us": dict(sorted(phase_us.items(), key=lambda kv: -kv[1])),
+        "slowest_requests": requests[:top],
+        "n_requests": len(requests),
+        "preemptions": preempts,
+        "compiles": compiles,
+    }
+
+
+def _fmt_us(us: float) -> str:
+    return f"{us / 1e3:10.3f} ms"
+
+
+def print_summary(s: dict) -> None:
+    print(f"{s['n_events']} events · {s['n_steps']} engine steps · "
+          f"{s['n_requests']} requests")
+    print(f"\nengine time-in-phase (total step wall "
+          f"{s['step_wall_us'] / 1e3:.3f} ms):")
+    for name, us in s["phase_us"].items():
+        pct = 100.0 * us / s["step_wall_us"] if s["step_wall_us"] else 0.0
+        print(f"  {name:<10}{_fmt_us(us)}  {pct:5.1f}%")
+    print(f"\nslowest requests (of {s['n_requests']}):")
+    for r in s["slowest_requests"]:
+        print(f"  {r['track']:<10} wall {_fmt_us(r['wall_us'])}  queued "
+              f"{_fmt_us(r['queued_us'])}  prefill "
+              f"{_fmt_us(r['prefill_us'])}  "
+              f"{r['decode_tokens']} tok / {r['decode_epochs']} epochs")
+    print(f"\npreemptions: {len(s['preemptions'])}")
+    for p in s["preemptions"]:
+        print(f"  {p['track']:<10} at {_fmt_us(p['ts'])}  "
+              f"kind={p.get('kind', '?')}")
+    n_new = sum(int(c.get("n_new", 1)) for c in s["compiles"])
+    print(f"recompiles: {n_new} new compiled variants in "
+          f"{len(s['compiles'])} events")
+    for c in s["compiles"]:
+        print(f"  at {_fmt_us(c['ts'])}  +{c.get('n_new', 1)}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--top", type=int, default=5,
+                    help="slowest requests to show (default 5)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the summary as JSON")
+    args = ap.parse_args(argv)
+    try:
+        summary = summarize(load_events(args.trace), top=args.top)
+    except (ValueError, KeyError) as e:
+        print(f"error: malformed trace: {e}", file=sys.stderr)
+        return 1
+    if args.json:
+        json.dump(summary, sys.stdout, indent=2)
+        print()
+    else:
+        print_summary(summary)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
