@@ -1,0 +1,152 @@
+"""Fault-storm goodput guard + kill/resume recovery time.
+
+The robustness layer (``serve/faults.py``, ``serve/snapshot.py``) only
+earns its place if surviving faults is *cheap*: a storm of injected
+faults — dispatch errors, sync stalls, page-alloc OOMs — must keep
+useful-token goodput at >= 0.85x the clean run on the same engine
+(floor-gated as ``meta.fault_storm.goodput_ratio`` by
+tools/bench_compare.py), and the survivors' tokens must stay
+bit-identical (recorded as ``meta.fault_storm.bit_identical``).
+
+The full (non ``--quick``) run also measures crash recovery: a run
+killed at a step boundary (after its crash-consistent snapshot), then a
+*fresh* engine resuming from the snapshot directory and draining the
+survivors — ``meta.recovery.resume_s`` is the wall time from
+``resume()`` to completion, dominated by the fresh process's compiles
+(exactly the real restart cost; see docs/robustness.md).
+"""
+from __future__ import annotations
+
+import tempfile
+from time import perf_counter
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.engine import ContinuousBatchingEngine
+from repro.serve.errors import SimulatedKill
+from repro.serve.faults import Fault, FaultPlan, as_fault_plan
+
+MAX_LEN = 64
+SLOTS = 4
+DECODE_STEPS = 8
+
+
+def _workload(cfg, n: int = 8):
+    rng = np.random.default_rng(0)
+    lens = [44, 8, 12, 16, 40, 8, 12, 20][:n]
+    news = [2, 16, 4, 16, 2, 16, 4, 12][:n]
+    return [(rng.integers(0, cfg.vocab_size, (l,), dtype=np.int32), k)
+            for l, k in zip(lens, news)]
+
+
+def _storm():
+    # one of each recoverable kind, spread across the run's iterations;
+    # fresh plan per pass (faults fire exactly once per plan)
+    return [Fault("dispatch_error", step=2),
+            Fault("oom", step=3, pages=0),
+            Fault("stall", step=4, stall_s=0.004),
+            Fault("dispatch_error", step=6)]
+
+
+def _engine(cfg, params, **kw):
+    return ContinuousBatchingEngine(cfg, params, max_slots=SLOTS,
+                                    max_len=MAX_LEN, kv_mode="paged",
+                                    page_size=8,
+                                    decode_steps=DECODE_STEPS, **kw)
+
+
+def _run(eng, work, faults=None):
+    eng.faults = as_fault_plan(faults)
+    t0 = perf_counter()
+    uids = [eng.submit(p, max_new_tokens=n) for p, n in work]
+    out = eng.run()
+    return perf_counter() - t0, out, uids
+
+
+def _tokens(out, uids):
+    return [np.asarray(out["results"][u].tokens) for u in uids]
+
+
+def run(quick: bool = False) -> Rows:
+    rows = Rows()
+    cfg = get_config("llama2-7b").smoke()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    work = _workload(cfg)
+    useful = sum(n for _, n in work)
+    passes = 2 if quick else 5
+
+    clean = _engine(cfg, params)
+    stormy = _engine(cfg, params)
+    # warm both engines (compiles), then interleave timed passes so host
+    # drift hits both arms equally; min-of-N sheds interference noise
+    _, ref_out, ref_uids = _run(clean, work)
+    ref = _tokens(ref_out, ref_uids)
+    _run(stormy, work)
+    clean_ts, storm_ts = [], []
+    identical, faults_fired = True, 0
+    for _ in range(passes):
+        s, _, _ = _run(clean, work)
+        clean_ts.append(s)
+        s, out, uids = _run(stormy, work, faults=_storm())
+        storm_ts.append(s)
+        faults_fired += len(stormy.faults.fired)
+        identical &= all(np.array_equal(a, b)
+                         for a, b in zip(_tokens(out, uids), ref))
+    clean_s = float(np.min(clean_ts))
+    storm_s = float(np.min(storm_ts))
+    clean_tps = useful / clean_s
+    storm_tps = useful / storm_s
+    ratio = storm_tps / clean_tps
+
+    rows.add("faults/clean", clean_s * 1e6 / useful,
+             f"useful_tok_s={clean_tps:.1f}")
+    rows.add("faults/storm", storm_s * 1e6 / useful,
+             f"useful_tok_s={storm_tps:.1f};ratio={ratio:.3f};"
+             f"identical={identical}")
+    rows.meta["fault_storm"] = {
+        "clean_tok_s": round(clean_tps, 2),
+        "storm_tok_s": round(storm_tps, 2),
+        # the floor-gated guard: a fault storm must keep >= 0.85x goodput
+        "goodput_ratio": round(ratio, 4),
+        "faults_per_pass": len(_storm()),
+        "faults_fired": faults_fired,
+        # int, not bool: bench_compare floors gate numerics only
+        "bit_identical": int(identical),
+    }
+
+    if not quick:
+        with tempfile.TemporaryDirectory() as snap_dir:
+            victim = _engine(cfg, params, snapshot_dir=snap_dir)
+            victim.faults = FaultPlan([Fault("kill", step=6)])
+            for p, n in work:
+                victim.submit(p, max_new_tokens=n)
+            try:
+                victim.run()
+                raise RuntimeError("injected kill never fired")
+            except SimulatedKill:
+                pass
+            fresh = _engine(cfg, params, snapshot_dir=snap_dir)
+            t0 = perf_counter()
+            at = fresh.resume()
+            out = fresh.run()
+            resume_s = perf_counter() - t0
+            res = [np.asarray(r.tokens)
+                   for _, r in sorted(out["results"].items())]
+            rec_ok = all(np.array_equal(a, b) for a, b in zip(res, ref))
+            rows.add("faults/kill_resume", resume_s * 1e6 / useful,
+                     f"resume_s={resume_s:.2f};boundary={at};"
+                     f"identical={rec_ok}")
+            rows.meta["recovery"] = {
+                "resume_s": round(resume_s, 3),
+                "resumed_boundary": at,
+                "bit_identical": int(rec_ok),
+            }
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -24,10 +24,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_bandwidth, bench_chunked_prefill,
-                            bench_end_to_end, bench_fused_linear,
-                            bench_kv_storage, bench_mha_dataflow,
-                            bench_observability, bench_paged_kv,
-                            bench_pe_accuracy, bench_roofline, bench_serve)
+                            bench_end_to_end, bench_fault_tolerance,
+                            bench_fused_linear, bench_kv_storage,
+                            bench_mha_dataflow, bench_observability,
+                            bench_paged_kv, bench_pe_accuracy,
+                            bench_roofline, bench_serve)
     suite = {
         "table1_pe_accuracy": bench_pe_accuracy,
         "fig8_mha_dataflow": bench_mha_dataflow,
@@ -39,6 +40,7 @@ def main() -> None:
         "fused_linear": bench_fused_linear,
         "chunked_prefill": bench_chunked_prefill,
         "observability": bench_observability,
+        "fault_tolerance": bench_fault_tolerance,
         "roofline": bench_roofline,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -153,11 +153,34 @@ class PageAllocator:
         for the same tokens (savings accounting)."""
         self.fill[slot] += n_entries
         if self.fill[slot] > self.capacity(slot):
-            raise RuntimeError(
+            # deferred import: repro.serve.__init__ imports PageAllocator,
+            # so a module-level import here would be a cycle
+            from repro.serve.errors import PageExhausted
+            raise PageExhausted(
                 f"slot {slot}: fill {self.fill[slot]} exceeds page capacity "
-                f"{self.capacity(slot)} — ensure() not called proactively")
+                f"{self.capacity(slot)} — ensure() not called proactively",
+                slot=slot, free_pages=self.free_pages,
+                pages_total=self.num_pages)
         self.stats.entries_appended += n_entries
         self.stats.entries_dense += dense_entries
+
+    def hide_pages(self, n: int = 0) -> List[int]:
+        """Fault injection (``serve/faults.py`` kind ``"oom"``): pop ``n``
+        pages (0 = all) off the free list so reservations fail exactly as
+        if residents had filled the pool.  Returns the hidden pages; the
+        caller MUST hand them back to :meth:`unhide_pages` within the same
+        engine iteration — the pair restores the free list byte-identical,
+        so leak accounting stays exact."""
+        n = len(self._free) if n <= 0 else min(n, len(self._free))
+        hidden = [self._free.pop() for _ in range(n)]
+        self.stats.pages_in_use = self.num_pages - len(self._free)
+        return hidden
+
+    def unhide_pages(self, pages: List[int]) -> None:
+        """Return pages taken by :meth:`hide_pages`, restoring the free
+        list to its exact pre-hide order (pop/push are both LIFO)."""
+        self._free.extend(reversed(pages))
+        self.stats.pages_in_use = self.num_pages - len(self._free)
 
     def release(self, slot: int) -> int:
         """Evict: return every page of ``slot`` to the free list."""

@@ -58,6 +58,45 @@ def main() -> None:
                     help="write the run's metrics snapshot (.prom suffix "
                          "= Prometheus text format, else JSON; requires "
                          "--continuous)")
+    # robustness / lifecycle flags (docs/robustness.md; all require
+    # --continuous)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget from submission; "
+                         "past it a request finishes with reason "
+                         "'deadline' and releases its slot/pages at the "
+                         "next step boundary")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="write crash-consistent engine snapshots at "
+                         "quiescent step boundaries (resume with --resume)")
+    ap.add_argument("--snapshot-every", type=int, default=1,
+                    help="boundaries between snapshots (default 1)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest snapshot under "
+                         "--snapshot-dir instead of submitting fresh "
+                         "requests; at temperature 0 the survivors' "
+                         "tokens are bit-identical to the uninterrupted "
+                         "run")
+    ap.add_argument("--kill-at", type=int, default=None, metavar="N",
+                    help="inject a SimulatedKill at step boundary N "
+                         "(after its snapshot) — exits with code 3; used "
+                         "by tools/kill_resume_smoke.py")
+    ap.add_argument("--watchdog-timeout-s", type=float, default=None,
+                    help="hard bound on one dispatch+sync; past it the "
+                         "run aborts with HungDispatch (trace attached)")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="shed new submissions once the queue is this "
+                         "deep")
+    ap.add_argument("--max-queue-delay-s", type=float, default=None,
+                    help="shed new submissions once the queue head has "
+                         "waited past this bound")
+    ap.add_argument("--max-preemptions", type=int, default=None,
+                    help="per-request eviction retry budget; past it a "
+                         "victim keeps its partial tokens (reason "
+                         "'preempt_budget') instead of requeueing")
+    ap.add_argument("--results-out", default=None, metavar="FILE",
+                    help="write per-request results (tokens, finish "
+                         "reason) as JSON — the kill/resume smoke "
+                         "compares these across runs")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -88,12 +127,25 @@ def main() -> None:
         raise SystemExit("--tp requires --continuous")
     if (args.trace_out or args.metrics_out) and not args.continuous:
         raise SystemExit("--trace-out/--metrics-out require --continuous")
+    robust = (args.deadline_s, args.snapshot_dir, args.kill_at,
+              args.watchdog_timeout_s, args.max_queue_depth,
+              args.max_queue_delay_s, args.max_preemptions,
+              args.results_out, args.resume or None)
+    if any(v is not None for v in robust) and not args.continuous:
+        raise SystemExit("robustness flags (--deadline-s/--snapshot-dir/"
+                         "--resume/--kill-at/...) require --continuous")
     mesh = None
     if args.tp:
         from repro.launch.mesh import make_serve_mesh
         mesh = make_serve_mesh(args.tp)
         print(f"tensor-parallel serving: mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}")
     if args.continuous:
+        from repro.serve.errors import SimulatedKill
+        from repro.serve.faults import Fault, Watchdog
+        faults = ([Fault("kill", step=args.kill_at)]
+                  if args.kill_at is not None else None)
+        watchdog = (Watchdog(timeout_s=args.watchdog_timeout_s)
+                    if args.watchdog_timeout_s is not None else None)
         eng = ContinuousBatchingEngine(
             cfg, params, max_slots=args.batch, max_len=max_len,
             temperature=args.temperature,
@@ -102,14 +154,31 @@ def main() -> None:
             prefill_chunk=args.prefill_chunk,
             decode_steps=args.decode_steps or None,
             trace=args.trace_out,
-            mesh=mesh)
-        # mixed-length synthetic traffic: 2x oversubscribed slots
-        for _ in range(2 * args.batch):
-            ln = int(rng.integers(max(args.prompt_len // 4, 1),
-                                  args.prompt_len + 1))
-            eng.submit(rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32),
-                       max_new_tokens=args.new_tokens)
-        out = eng.run()
+            mesh=mesh,
+            faults=faults, watchdog=watchdog,
+            snapshot_dir=args.snapshot_dir,
+            snapshot_every=args.snapshot_every,
+            max_queue_depth=args.max_queue_depth,
+            max_queue_delay_s=args.max_queue_delay_s,
+            max_preemptions=args.max_preemptions)
+        if args.resume:
+            at = eng.resume()
+            print(f"resumed from snapshot boundary {at} "
+                  f"under {args.snapshot_dir}")
+        else:
+            # mixed-length synthetic traffic: 2x oversubscribed slots
+            for _ in range(2 * args.batch):
+                ln = int(rng.integers(max(args.prompt_len // 4, 1),
+                                      args.prompt_len + 1))
+                eng.submit(rng.integers(0, cfg.vocab_size, (ln,),
+                                        dtype=np.int32),
+                           max_new_tokens=args.new_tokens,
+                           deadline_s=args.deadline_s)
+        try:
+            out = eng.run()
+        except SimulatedKill as e:
+            print(f"simulated kill: {e}")
+            raise SystemExit(3)
         s = out["stats"]
         print(f"prefill: {s.prefill_tokens} tok in {s.prefill_s:.2f}s | "
               f"decode: {s.decode_tok_per_s:.1f} tok/s | "
@@ -131,9 +200,27 @@ def main() -> None:
                   f"saving {s.kv_entries_saved_fraction:.1%} | history "
                   f"hit rate {s.history_hit_rate:.1%} | "
                   f"preemptions {s.preemptions}")
+        if (s.faults_injected or s.requests_cancelled or s.deadline_exceeded
+                or s.requests_shed or s.snapshots or s.resumes):
+            print(f"robustness: faults {s.faults_injected} | retries "
+                  f"{s.dispatch_retries} | deadline {s.deadline_exceeded} "
+                  f"| cancelled {s.requests_cancelled} | shed "
+                  f"{s.requests_shed} | snapshots {s.snapshots} | "
+                  f"resumes {s.resumes}")
         for uid, r in sorted(out["results"].items()):
             print(f"  req {uid}: T0={r.prompt_len} +{r.decode_tokens} "
                   f"TTFT {r.ttft_s*1e3:.1f}ms ({r.finish_reason})")
+        if args.results_out:
+            import json
+            import pathlib
+            rpath = pathlib.Path(args.results_out)
+            rpath.parent.mkdir(parents=True, exist_ok=True)
+            rpath.write_text(json.dumps(
+                {str(uid): {"tokens": [int(t) for t in r.tokens],
+                            "prompt_len": r.prompt_len,
+                            "finish_reason": r.finish_reason}
+                 for uid, r in sorted(out["results"].items())}, indent=1))
+            print(f"results written to {args.results_out}")
         if args.trace_out:
             print(f"trace written to {args.trace_out} "
                   "(open in https://ui.perfetto.dev)")

@@ -6,3 +6,15 @@ from repro.serve.scheduler import (PrefillChunk, Request,  # noqa: F401
 # paged-KV engine mode building blocks (kv_mode="paged")
 from repro.kvcache.history import HistoryAccounting  # noqa: F401
 from repro.kvcache.paged import PageAllocator, can_page  # noqa: F401
+
+# robustness layer: typed errors, fault injection, crash-consistent
+# snapshots (docs/robustness.md)
+from repro.serve.errors import (AdmissionRejected,  # noqa: F401
+                                DeadlineExceeded, EngineAborted,
+                                HungDispatch, PageExhausted, ServeError,
+                                SimulatedKill)
+from repro.serve.faults import (Fault, FaultInjected,  # noqa: F401
+                                FaultPlan, Watchdog)
+from repro.serve.snapshot import (latest_snapshot_step,  # noqa: F401
+                                  list_snapshot_steps, load_snapshot,
+                                  save_snapshot)

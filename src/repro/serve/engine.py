@@ -40,6 +40,11 @@ from repro.kvcache import paged as paged_mod
 from repro.models import model as model_lib
 from repro.obs import (MetricsRegistry, as_tracer, jit_cache_size,
                        request_tid)
+from repro.serve import snapshot as snapshot_mod
+from repro.serve.errors import (AdmissionRejected, HungDispatch,
+                                PageExhausted, SimulatedKill)
+from repro.serve.faults import (FaultInjected, Watchdog, as_fault_plan,
+                                sleep_stall)
 from repro.serve.sampling import sample
 from repro.serve.scheduler import (ActiveRequest, PrefillChunk, Request,
                                    Scheduler, can_bucket,
@@ -130,6 +135,17 @@ class ServeStats:
     history_hit_rate: float = 0.0         # reads served by the history buf
     history_hits_per_layer: List[float] = dataclasses.field(
         default_factory=list)
+    # -- robustness / lifecycle (docs/robustness.md) -----------------------
+    faults_injected: int = 0              # FaultPlan faults that fired
+    dispatch_retries: int = 0             # iterations abandoned + replanned
+    watchdog_strikes: int = 0             # straggler strikes (soft)
+    requests_cancelled: int = 0           # finish_reason == "cancelled"
+    deadline_exceeded: int = 0            # finish_reason == "deadline"
+    requests_shed: int = 0                # submit()-time load shedding
+    preempt_budget_exhausted: int = 0     # finish_reason == "preempt_budget"
+    epoch_shrinks: int = 0                # adaptive decode_steps halvings
+    snapshots: int = 0                    # boundary snapshots written
+    resumes: int = 0                      # runs continued from a snapshot
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -169,8 +185,14 @@ class RequestResult:
                      head-of-line metric chunked prefill bounds (an
                      eager monolithic prefill of a long newcomer shows
                      up here for every resident).
-      finish_reason — "length" (budget), "stop" (stop token), or
-                     "max_len" (slot position hit the pool's max_len).
+      finish_reason — why generation ended:
+                     "length" (budget), "stop" (stop token), "max_len"
+                     (slot position hit the pool's max_len); or a
+                     lifecycle outcome — "deadline" (per-request deadline
+                     elapsed; tokens are the partial output), "cancelled"
+                     (cooperative cancellation honored at a step/epoch
+                     boundary), "preempt_budget" (preempted more than the
+                     engine's ``max_preemptions`` retry budget allows).
       kv_stored / kv_dense — measured compact-store entry writes vs the
                      per-layer-dense baseline for this request's decode
                      steps."""
@@ -179,7 +201,7 @@ class RequestResult:
     prompt_len: int
     ttft_s: float                        # submit → first token
     decode_s: float                      # time in this request's decode steps
-    finish_reason: str                   # "length" | "stop" | "max_len"
+    finish_reason: str                   # "length"|"stop"|"max_len"|...
     kv_stored: int = 0                   # measured compact-store entries
     kv_dense: int = 0                    # dense-baseline entries
     max_decode_stall_s: float = 0.0      # worst inter-token emission gap
@@ -349,8 +371,13 @@ class _RunState:
     admitted: set = dataclasses.field(default_factory=set)   # prefill spans
     # paged-mode extras
     hist: Optional[history_mod.HistoryAccounting] = None
-    admit_seq: Dict[int, int] = dataclasses.field(default_factory=dict)
-    seq: int = 0
+    # crash consistency: last boundary a snapshot was published at
+    last_snap: int = -1
+    # adaptive degradation (paged fused mode): cross-epoch decode_steps
+    # cap remembered after a page-pressure shrink (0 = uncapped), and the
+    # clean-epoch streak that grows it back (hysteresis)
+    epoch_cap: int = 0
+    clean_epochs: int = 0
     # chunked-prefill staging (at most one prompt in flight at a time)
     stage_cache: Optional[Dict] = None
     stage_gates: List[np.ndarray] = dataclasses.field(default_factory=list)
@@ -421,6 +448,29 @@ class ContinuousBatchingEngine:
                              unchanged — see docs/distributed.md.
       sharding_policy      — optional pre-built serve-mode policy (defaults
                              to ``ShardingPolicy(mesh, cfg, mode="serve")``).
+
+    Robustness levers (docs/robustness.md):
+      faults               — a ``serve.faults.FaultPlan`` (or list of
+                             ``Fault``) of scheduled injections consumed
+                             at the engine's seams; None = no faults.
+      watchdog             — a ``serve.faults.Watchdog``: per-dispatch
+                             wall-time monitor; a sync past its hard
+                             timeout raises ``HungDispatch`` with the
+                             flushed trace path attached.
+      snapshot_dir         — directory for crash-consistent boundary
+                             snapshots (None = off); ``snapshot_every``
+                             sets the cadence in engine iterations.
+                             ``resume()`` restores the newest snapshot.
+      max_queue_depth /    — load shedding: ``submit()`` raises
+      max_queue_delay_s      ``AdmissionRejected`` when the queue is this
+                             deep, or when the queue head has already
+                             waited past the delay bound (the request
+                             would only be joining a queue that is
+                             already falling behind).
+      max_preemptions      — retry budget: a request preempted more than
+                             this many times finishes with reason
+                             "preempt_budget" (partial tokens) instead of
+                             requeueing forever; None = unlimited.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
@@ -432,7 +482,13 @@ class ContinuousBatchingEngine:
                  decode_steps: Optional[int] = None,
                  step_tokens: Optional[int] = None,
                  trace=None,
-                 mesh=None, sharding_policy: Optional[ShardingPolicy] = None):
+                 mesh=None, sharding_policy: Optional[ShardingPolicy] = None,
+                 faults=None, watchdog: Optional[Watchdog] = None,
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 1,
+                 max_queue_depth: Optional[int] = None,
+                 max_queue_delay_s: Optional[float] = None,
+                 max_preemptions: Optional[int] = None):
         self.cfg = cfg
         self.tracer = as_tracer(trace)
         self.metrics: Optional[MetricsRegistry] = None   # last run's registry
@@ -621,6 +677,17 @@ class ContinuousBatchingEngine:
                 in_sh=(self._param_sh, self._store_sh, rep, rep, rep, rep),
                 out_sh=(rep, self._store_sh, rep))
         self._uid = 0
+        # -- robustness state (docs/robustness.md) --------------------------
+        self.faults = as_fault_plan(faults)
+        self.watchdog = watchdog
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = max(1, int(snapshot_every))
+        self.max_queue_depth = max_queue_depth
+        self.max_queue_delay_s = max_queue_delay_s
+        self.max_preemptions = max_preemptions
+        self._cancelled: set = set()     # uids awaiting cooperative cancel
+        self._shed_pending: List[str] = []   # shed reasons since last run
+        self._resume = None              # (device_tree, host, step) to apply
 
     # -- jit plumbing ------------------------------------------------------
     def _jit_step(self, fn, donate=(), in_sh=None, out_sh=None):
@@ -705,12 +772,22 @@ class ContinuousBatchingEngine:
 
     # -- request intake ----------------------------------------------------
     def submit(self, tokens: np.ndarray, max_new_tokens: int,
-               stop_token: Optional[int] = None) -> int:
-        """Queue one prompt; returns its uid."""
+               stop_token: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue one prompt; returns its uid.
+
+        ``deadline_s`` is a wall-clock budget measured from submission:
+        past it the request finishes with ``finish_reason == "deadline"``
+        (partial tokens kept) and releases its slot/pages at the next
+        step/epoch boundary.  Raises ``AdmissionRejected`` when the
+        request can never be served (empty prompt, no decode headroom,
+        paged worst-case KV over the pool) or when the engine is
+        shedding load (``max_queue_depth`` / ``max_queue_delay_s``)."""
         uid = self._uid
         self._uid += 1
         req = Request(uid=uid, tokens=np.asarray(tokens, np.int32),
-                      max_new_tokens=max_new_tokens, stop_token=stop_token)
+                      max_new_tokens=max_new_tokens, stop_token=stop_token,
+                      deadline_s=deadline_s)
         tr = self.tracer
         tr.track(request_tid(uid), f"req {uid}")
         tr.instant("submit", request_tid(uid), prompt_len=req.prompt_len,
@@ -723,12 +800,80 @@ class ContinuousBatchingEngine:
             worst = max(self._worst_case_entries(req),
                         (req.prompt_len + 1) * self.n_attn)
             if self.allocator.pages_for(worst) > self.num_pages:
-                raise ValueError(
+                raise AdmissionRejected(
                     f"request {uid}: worst-case KV ({worst} entries) "
                     f"exceeds the page pool ({self.num_pages} pages × "
-                    f"{self.page_size}) — OOM-safe admission impossible")
+                    f"{self.page_size}) — OOM-safe admission impossible",
+                    reason="kv_worst_case", uid=uid)
+        self._maybe_shed(req)
         self.scheduler.submit(req)
         return uid
+
+    def _maybe_shed(self, req: Request) -> None:
+        """Load shedding at the submit boundary: refuse to grow a queue
+        that is over the depth bound or whose *head* has already waited
+        past the delay bound (the head's age is the deterministic lower
+        bound on what a newcomer would wait — if the oldest queued
+        request is past the bound, everything behind it is too)."""
+        q = self.scheduler.queue
+        reason = detail = None
+        if (self.max_queue_depth is not None
+                and len(q) >= self.max_queue_depth):
+            reason = "queue_depth"
+            detail = (f"queue depth {len(q)} at the shed bound "
+                      f"{self.max_queue_depth}")
+        elif self.max_queue_delay_s is not None and q:
+            head_age = perf_counter() - q[0].submit_s
+            if head_age > self.max_queue_delay_s:
+                reason = "queue_delay"
+                detail = (f"queue head has waited {head_age:.3f}s > "
+                          f"bound {self.max_queue_delay_s:.3f}s")
+        if reason is not None:
+            self._shed_pending.append(reason)
+            self.tracer.instant("shed", request_tid(req.uid), reason=reason)
+            raise AdmissionRejected(
+                f"request {req.uid} shed: {detail}", reason=reason,
+                uid=req.uid)
+
+    def cancel(self, uid: int) -> None:
+        """Cooperative cancellation: mark ``uid`` for removal at the next
+        step/epoch boundary — a queued request is dropped, an in-flight
+        prefill is aborted, a resident finishes with its partial tokens
+        (``finish_reason == "cancelled"``) and its slot/pages released.
+        Unknown or already-finished uids are a no-op."""
+        self._cancelled.add(uid)
+        self.tracer.instant("cancel", request_tid(uid))
+
+    # -- crash-consistent snapshots (serve/snapshot.py) --------------------
+    def resume(self, snapshot_dir: Optional[str] = None,
+               step: Optional[int] = None) -> int:
+        """Load the newest (or the given ``step``) boundary snapshot under
+        ``snapshot_dir`` (default: the engine's own) — the next ``run()``
+        continues from it: scheduler queue/residents, allocator chains,
+        finished results and the device KV state are all restored, so at
+        temperature 0 the surviving requests' tokens are bit-identical to
+        the run the dead process would have completed.  Returns the
+        boundary index restored.  Requests submitted to this engine
+        before ``run()`` are merged into the restored queue in age
+        order."""
+        snap_dir = snapshot_dir or self.snapshot_dir
+        if snap_dir is None:
+            raise ValueError("resume() needs a snapshot_dir (argument or "
+                             "constructor)")
+        template = {"kv": self._init_kv_state(), "rng": jax.random.PRNGKey(0)}
+        device_tree, host, at = snapshot_mod.load_snapshot(
+            snap_dir, template, step)
+        snapshot_mod.check_fingerprint(self, host)
+        self._resume = (device_tree, host, at)
+        return at
+
+    def _init_kv_state(self):
+        """Fresh device KV state for the engine's mode (the run loops and
+        the snapshot restore template build it the same way)."""
+        if self.kv_mode == "paged":
+            return paged_mod.init_store(self.cfg, self.num_pages,
+                                        self.page_size)
+        return init_pool(self.cfg, self.max_slots, self.max_len)
 
     # -- paged-mode memory policy -------------------------------------------
     def _worst_case_entries(self, req: Request) -> int:
@@ -792,6 +937,11 @@ class ContinuousBatchingEngine:
                        rng=rng, hist=hist)
         rs.compiled_seen = jit_cache_size(self._jitted)
         self.metrics = rs.metrics
+        # credit submit-time load sheds to this run's registry (each one
+        # already emitted its "shed" trace instant at submit)
+        for _ in self._shed_pending:
+            rs.metrics.inc("requests_shed_total")
+        self._shed_pending.clear()
         tr = self.tracer
         for req in self.scheduler.queue:
             rs.traced.add(req.uid)
@@ -855,6 +1005,217 @@ class ContinuousBatchingEngine:
                      1.0 - m.value("kv_entries_stored_measured_total")
                      / dense)
 
+    # -- robustness: boundary pass, fault seams, watchdog ------------------
+    def _boundary(self, rs: _RunState, kv_state) -> None:
+        """Step/epoch-boundary pass shared by all four run loops, run
+        before each iteration's dispatch: (1) the request-lifecycle sweep
+        (cooperative cancellation + deadline expiry — resources release
+        within one step/epoch of the event); (2) a crash-consistent
+        snapshot when due; (3) the injected host kill, which fires
+        *after* the boundary snapshot so a resume loses nothing."""
+        self._lifecycle(rs)
+        self._maybe_snapshot(rs, kv_state)
+        f = self.faults.take("kill", rs.disp_idx)
+        if f is not None:
+            rs.metrics.inc("faults_injected_total")
+            self.tracer.instant("fault", kind="kill", step=rs.disp_idx)
+            raise SimulatedKill(
+                f"injected host kill at boundary {rs.disp_idx}: {f.message}",
+                trace_path=self._flush_trace())
+
+    def _expired(self, req: Request, now: float) -> Optional[str]:
+        """The request's lifecycle verdict at ``now``: "cancelled",
+        "deadline", or None (keep going)."""
+        if req.uid in self._cancelled:
+            return "cancelled"
+        if (req.deadline_s is not None and req.submit_s
+                and now - req.submit_s > req.deadline_s):
+            return "deadline"
+        return None
+
+    def _lifecycle(self, rs: _RunState) -> None:
+        """Sweep every request the engine holds — queued, mid-prefill,
+        resident — for cancellation / deadline expiry and retire the hits
+        (slot + pages released, typed finish reason, trace span closed)."""
+        sched = self.scheduler
+        now = perf_counter()
+        for req in list(sched.queue):
+            reason = self._expired(req, now)
+            if reason is not None:
+                sched.remove_queued(req.uid)
+                self.tracer.end(request_tid(req.uid))    # queued span
+                self._finish_unplaced(rs, req, reason)
+        pf = sched.prefilling
+        if pf is not None:
+            reason = self._expired(pf.req, now)
+            if reason is not None:
+                sched.abort_prefill(requeue=False)
+                if self.kv_mode == "paged":
+                    self.allocator.release(pf.slot)
+                rs.stage_cache = None
+                rs.stage_gates = []
+                rs.admitted.discard(pf.req.uid)
+                self.tracer.end(request_tid(pf.req.uid))  # prefill span
+                self._finish_unplaced(rs, pf.req, reason)
+        for slot in sorted(sched.active):
+            st = sched.active[slot]
+            reason = self._expired(st.req, now)
+            if reason is not None:
+                tok_dev = rs.pending.pop(slot, None)
+                if tok_dev is not None:
+                    # materialize the deferred first token so the partial
+                    # result carries the real value, not the placeholder
+                    tok = int(np.asarray(tok_dev)[0])
+                    st.out_tokens[0] = tok
+                    st.next_token = tok
+                self._finish(rs, slot, reason)
+
+    def _finish_unplaced(self, rs: _RunState, req: Request,
+                         reason: str) -> None:
+        """Retire a request that never (or no longer) holds a slot —
+        removed from the queue or aborted mid-prefill — with an empty
+        token result and a typed reason."""
+        self._cancelled.discard(req.uid)
+        rs.results[req.uid] = RequestResult(
+            uid=req.uid, tokens=np.zeros((0,), np.int32),
+            prompt_len=req.prompt_len, ttft_s=0.0, decode_s=0.0,
+            finish_reason=reason)
+        self._count_lifecycle(rs, reason)
+        tid = request_tid(req.uid)
+        self.tracer.instant("finish", tid, reason=reason, tokens=0)
+        if req.uid in rs.traced:
+            self.tracer.end(tid)          # close the request root span
+
+    def _count_lifecycle(self, rs: _RunState, reason: str) -> None:
+        if reason == "cancelled":
+            rs.metrics.inc("requests_cancelled_total")
+        elif reason == "deadline":
+            rs.metrics.inc("deadline_exceeded_total")
+        elif reason == "preempt_budget":
+            rs.metrics.inc("preempt_budget_exhausted_total")
+
+    def _maybe_snapshot(self, rs: _RunState, kv_state) -> None:
+        """Publish a crash-consistent snapshot when one is due and the
+        boundary is quiescent (no prefill in flight, no deferred first
+        tokens, no staging cache) — at such a boundary host structures +
+        device KV are the complete engine state (serve/snapshot.py)."""
+        if self.snapshot_dir is None or kv_state is None:
+            return
+        if rs.disp_idx - max(rs.last_snap, 0) < self.snapshot_every \
+                or rs.disp_idx == 0:
+            return
+        if (self.scheduler.prefilling is not None or rs.pending
+                or rs.stage_cache is not None):
+            return
+        with self.tracer.span("snapshot", step=rs.disp_idx):
+            host = snapshot_mod.encode_host_state(self, rs)
+            snapshot_mod.save_snapshot(
+                self.snapshot_dir, rs.disp_idx,
+                {"kv": kv_state, "rng": rs.rng}, host)
+        rs.last_snap = rs.disp_idx
+        rs.metrics.inc("snapshots_total")
+        self.tracer.instant("snapshot", step=rs.disp_idx)
+
+    def _apply_resume(self, rs: _RunState, kv_state):
+        """Consume a pending ``resume()``: rebuild the host state, swap
+        in the restored device KV (re-placed under the engine's
+        shardings when meshed), and reopen trace spans for the restored
+        requests.  Returns the KV state the run loop should use."""
+        if self._resume is None:
+            return kv_state
+        device_tree, host, at = self._resume
+        self._resume = None
+        snapshot_mod.apply_host_state(self, rs, host)
+        rs.last_snap = at
+        rs.rng = device_tree["rng"]
+        kv = device_tree["kv"]
+        if self.policy is not None:
+            sh = (self._store_sh if self.kv_mode == "paged"
+                  else self._pool_sh)
+            kv = jax.device_put(kv, sh)
+        tr = self.tracer
+        for req in self.scheduler.queue:
+            if req.uid not in rs.traced:
+                rs.traced.add(req.uid)
+                tid = request_tid(req.uid)
+                tr.track(tid, f"req {req.uid}")
+                tr.begin("request", tid)
+                tr.begin("queued", tid)
+        for st in self.scheduler.active.values():
+            uid = st.req.uid
+            rs.traced.add(uid)
+            rs.admitted.add(uid)
+            tid = request_tid(uid)
+            tr.track(tid, f"req {uid}")
+            tr.begin("request", tid)
+        rs.metrics.inc("resumes_total")
+        tr.instant("resume", step=at)
+        return kv
+
+    def _fault_dispatch(self, rs: _RunState) -> None:
+        """Dispatch-seam fault: raise the scheduled ``FaultInjected``
+        *before* the jitted call (donated buffers untouched) — the run
+        loop's retry path abandons the iteration and re-plans."""
+        f = self.faults.take("dispatch_error", rs.disp_idx)
+        if f is not None:
+            rs.metrics.inc("faults_injected_total")
+            self.tracer.instant("fault", kind="dispatch_error",
+                                step=rs.disp_idx)
+            raise FaultInjected(f.message)
+
+    def _fault_stall(self, rs: _RunState) -> None:
+        """Sync-seam fault: sleep inside the sync span, emulating a hung
+        device dispatch the watchdog then observes."""
+        f = self.faults.take("stall", rs.disp_idx)
+        if f is not None:
+            rs.metrics.inc("faults_injected_total")
+            self.tracer.instant("fault", kind="stall", step=rs.disp_idx,
+                                stall_s=f.stall_s)
+            sleep_stall(f.stall_s)
+
+    def _fault_oom(self, rs: _RunState) -> List[int]:
+        """Headroom-seam fault (paged): hide free pages for this
+        iteration so reservations fail exactly as if residents had
+        filled the pool; the run loop returns them via
+        ``allocator.unhide_pages`` before admission."""
+        f = self.faults.take("oom", rs.disp_idx)
+        if f is None:
+            return []
+        hidden = self.allocator.hide_pages(f.pages)
+        rs.metrics.inc("faults_injected_total")
+        self.tracer.instant("fault", kind="oom", step=rs.disp_idx,
+                            pages=len(hidden))
+        return hidden
+
+    def _watch(self, rs: _RunState, phase: str, seconds: float) -> None:
+        """Feed one dispatch+sync wall time to the watchdog; a straggler
+        strike is counted and traced, a hard-timeout breach flushes the
+        trace and re-raises ``HungDispatch`` with its path attached."""
+        wd = self.watchdog
+        if wd is None:
+            return
+        try:
+            if wd.observe(phase, seconds):
+                rs.metrics.inc("watchdog_strikes_total")
+                self.tracer.instant("watchdog", phase=phase,
+                                    elapsed_s=round(seconds, 6),
+                                    strikes=wd.strikes)
+        except HungDispatch as e:
+            rs.metrics.inc("watchdog_timeouts_total")
+            self.tracer.instant("watchdog", phase=phase,
+                                elapsed_s=round(seconds, 6), timeout=True)
+            e.trace_path = self._flush_trace()
+            raise
+
+    def _flush_trace(self) -> Optional[str]:
+        """Best-effort trace flush on the abort path (open spans and all)
+        so the failure is diagnosable post-mortem; returns the path."""
+        tr = self.tracer
+        if tr.enabled and tr.path is not None:
+            tr.save()
+            return str(tr.path)
+        return None
+
     # -- run-loop bookkeeping shared by both KV modes ----------------------
     @staticmethod
     def _make_result(st: ActiveRequest, reason: str) -> RequestResult:
@@ -902,9 +1263,10 @@ class ContinuousBatchingEngine:
         if self.kv_mode == "paged":
             self.allocator.release(slot)
             rs.hist.on_release(slot)
-            rs.admit_seq.pop(slot, None)
         res = self._make_result(st, reason)
         rs.results[st.req.uid] = res
+        self._cancelled.discard(st.req.uid)
+        self._count_lifecycle(rs, reason)
         m = rs.metrics
         m.inc("requests_completed_total")
         m.observe("ttft_seconds", res.ttft_s)
@@ -917,44 +1279,77 @@ class ContinuousBatchingEngine:
         self.tracer.end(tid)              # close the request root span
 
     def _preempt_youngest(self, rs: _RunState, exclude: int) -> bool:
-        """OOM backpressure (paged mode): evict the most recently admitted
-        request (≠ ``exclude``) and requeue it at the head of the FIFO —
-        its pages return to the free list and it will re-prefill from
-        scratch when memory frees up.  An in-flight chunked prefill is
-        always the newest admission and holds its worst-case reservation
-        without yet being a resident, so it is aborted first (no decode
-        progress lost; decode steps between the abort and the re-try keep
-        the residents progressing, so this cannot livelock)."""
+        """OOM backpressure (paged mode): evict the *youngest* request —
+        by original ``submit_s``, which requeueing preserves — (≠
+        ``exclude``) and put it back into the queue at its age-ordered
+        position; its pages return to the free list and it will
+        re-prefill from scratch when memory frees up.  An in-flight
+        chunked prefill is always the newest admission and holds its
+        worst-case reservation without yet being a resident, so it is
+        aborted first (no decode progress lost; decode steps between the
+        abort and the re-try keep the residents progressing, so this
+        cannot livelock).
+
+        Victim age is the request's original submission stamp, NOT its
+        admission recency: under the old admission-order rule a
+        re-admitted request became "newest" again and the same request
+        could be re-victimized forever while genuinely younger residents
+        ran to completion (the preemption-storm starvation the
+        ``test_fault_tolerance.py`` fairness regression pins down).  A
+        victim past the ``max_preemptions`` retry budget finishes with
+        its partial tokens (reason "preempt_budget") instead of
+        requeueing."""
         sched = self.scheduler
         m, tr = rs.metrics, self.tracer
         pf = sched.prefilling
         if pf is not None and pf.slot != exclude:
-            sched.abort_prefill()
+            sched.abort_prefill(requeue=False)
             self.allocator.release(pf.slot)
             rs.stage_cache = None
             rs.stage_gates = []
             m.inc("preemptions_total")
             rs.admitted.discard(pf.req.uid)
+            pf.req.preempt_count += 1
             tid = request_tid(pf.req.uid)
             tr.end(tid)                   # abort the open prefill span
-            tr.instant("preempt", tid, kind="prefill_abort")
-            tr.begin("queued", tid)       # requeued at the FIFO head
+            tr.instant("preempt", tid, kind="prefill_abort",
+                       count=pf.req.preempt_count)
+            if self._budget_spent(pf.req):
+                self._finish_unplaced(rs, pf.req, "preempt_budget")
+            else:
+                sched.requeue(pf.req)     # age-preserving re-admission
+                tr.begin("queued", tid)
             return True
         victims = [s for s in sched.active if s != exclude]
         if not victims:
             return False
-        slot = max(victims, key=lambda s: rs.admit_seq[s])
+        slot = max(victims, key=lambda s: sched.active[s].req.submit_s)
         st = sched.release(slot)
         self.allocator.release(slot)
         rs.hist.on_release(slot)
-        rs.admit_seq.pop(slot, None)
-        sched.requeue_front(st.req)
+        rs.pending.pop(slot, None)
         m.inc("preemptions_total")
         rs.admitted.discard(st.req.uid)
+        st.req.preempt_count += 1
         tid = request_tid(st.req.uid)
-        tr.instant("preempt", tid, kind="evict", slot=slot)
-        tr.begin("queued", tid)
+        tr.instant("preempt", tid, kind="evict", slot=slot,
+                   count=st.req.preempt_count)
+        if self._budget_spent(st.req):
+            self._account_prefill(rs, st)
+            rs.results[st.req.uid] = self._make_result(st, "preempt_budget")
+            self._cancelled.discard(st.req.uid)
+            self._count_lifecycle(rs, "preempt_budget")
+            tr.instant("finish", tid, reason="preempt_budget",
+                       tokens=len(st.out_tokens))
+            tr.end(tid)                   # close the request root span
+        else:
+            sched.requeue(st.req)         # age-preserving re-admission
+            tr.begin("queued", tid)
         return True
+
+    def _budget_spent(self, req: Request) -> bool:
+        return (self.max_preemptions is not None
+                and req.preempt_count > self.max_preemptions)
 
     def _activate_prefilled(self, rs: _RunState, req: Request, slot: int,
                             tok: int, now: float, tok_known: bool = True):
@@ -1185,17 +1580,14 @@ class ContinuousBatchingEngine:
             tok_dev = self._sample_tok(logits, sub)
         n_ent = paged_mod.prefill_entry_count(gates, T0, reuse)
         if not alloc.ensure(slot, n_ent + nA):
-            raise RuntimeError(
+            raise PageExhausted(
                 "page reservation failed after a successful _can_place "
-                "worst-case check — allocator bug")
+                "worst-case check — allocator bug", slot=slot,
+                free_pages=alloc.free_pages, pages_total=self.num_pages)
         store = self._pack(store, cache, jnp.asarray(gates), jnp.int32(T0),
                            jnp.asarray(alloc.block_table[slot]))
         alloc.append(slot, n_ent, nA * T0)
         rs.hist.on_prefill(slot, gates, T0)
-        # admission order drives preemption victim choice; _finish pops the
-        # entry again when the first token already ends the request
-        rs.admit_seq[slot] = rs.seq
-        rs.seq += 1
         self._finish_prefill(rs, work, tok_dev, t0, gates)
         return store
 
@@ -1222,11 +1614,15 @@ class ContinuousBatchingEngine:
             # donated step — host-side insert/evict then always sees (and
             # scatters into) head-sharded rows
             pool = jax.device_put(pool, self._pool_sh)
+        pool = self._apply_resume(rs, pool)
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
         t_loop = perf_counter()
 
         while sched.has_work():
+            self._boundary(rs, pool)
+            if not sched.has_work():      # lifecycle sweep drained the run
+                break
             tr.begin("step", idx=rs.disp_idx)
             self._step_gauges(rs)
             # -- prefill work from the step planner ------------------------
@@ -1256,16 +1652,27 @@ class ContinuousBatchingEngine:
                 feed[slot] = st.next_token
                 pos[slot] = st.pos
             t0 = perf_counter()
-            with tr.span("dispatch"), tr.annotate("decode_step"):
-                logits, pool, dstats = self._decode(
-                    self.params, pool,
-                    {"tokens": jnp.asarray(feed[:, None])},
-                    jnp.asarray(pos))
-                rs.rng, sub = jax.random.split(rs.rng)
-                tok_dev = sample(logits, sub, self.temperature)
+            try:
+                with tr.span("dispatch"), tr.annotate("decode_step"):
+                    self._fault_dispatch(rs)
+                    logits, pool, dstats = self._decode(
+                        self.params, pool,
+                        {"tokens": jnp.asarray(feed[:, None])},
+                        jnp.asarray(pos))
+                    rs.rng, sub = jax.random.split(rs.rng)
+                    tok_dev = sample(logits, sub, self.temperature)
+            except FaultInjected:
+                # raised before the jitted call: pool untouched, no token
+                # lost — abandon the iteration and re-plan (the retry path
+                # a real transient dispatch failure would take)
+                m.inc("dispatch_retries_total")
+                self._poll_compiles(rs)
+                tr.end()                  # step
+                continue
             m.inc("decode_dispatches_total")
             t_sync = perf_counter()
             with tr.span("sync"):
+                self._fault_stall(rs)
                 toks = np.asarray(tok_dev)
                 gates = (np.asarray(dstats["attn_gate"], np.float32)
                          if "attn_gate" in dstats else None)
@@ -1274,6 +1681,7 @@ class ContinuousBatchingEngine:
             step_s = now - t0
             m.inc("decode_seconds_total", step_s)
             m.observe("step_seconds", step_s)
+            self._watch(rs, "decode_step", step_s)
 
             with tr.span("bookkeep"):
                 cur = list(sched.active)
@@ -1323,6 +1731,17 @@ class ContinuousBatchingEngine:
         stats.host_s = m.value("host_seconds_total")
         stats.preemptions = int(m.value("preemptions_total"))
         stats.compiles = int(m.value("compiles_total"))
+        stats.faults_injected = int(m.value("faults_injected_total"))
+        stats.dispatch_retries = int(m.value("dispatch_retries_total"))
+        stats.watchdog_strikes = int(m.value("watchdog_strikes_total"))
+        stats.requests_cancelled = int(m.value("requests_cancelled_total"))
+        stats.deadline_exceeded = int(m.value("deadline_exceeded_total"))
+        stats.requests_shed = int(m.value("requests_shed_total"))
+        stats.preempt_budget_exhausted = int(
+            m.value("preempt_budget_exhausted_total"))
+        stats.epoch_shrinks = int(m.value("epoch_shrinks_total"))
+        stats.snapshots = int(m.value("snapshots_total"))
+        stats.resumes = int(m.value("resumes_total"))
         stats.attn_keep_frac = (rs.keep_acc / rs.keep_n if rs.keep_n
                                 else 1.0)
         tot_dense = sum(r.kv_dense for r in results.values())
@@ -1374,17 +1793,22 @@ class ContinuousBatchingEngine:
             # head-sharded page pools, replicated entry metadata — the
             # host-side PageAllocator stays global (see cache_specs)
             store = jax.device_put(store, self._store_sh)
+        store = self._apply_resume(rs, store)
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
         t_loop = perf_counter()
 
         while sched.has_work():
+            self._boundary(rs, store)
+            if not sched.has_work():      # lifecycle sweep drained the run
+                break
             tr.begin("step", idx=rs.disp_idx)
             self._step_gauges(rs)
             # -- proactive headroom first: every resident can absorb one
             # full step before anyone new is let in (a newcomer admitted
             # into pages the residents need would be preempted right back,
             # throwing its prefill away)
+            hidden = self._fault_oom(rs)
             with tr.span("headroom"):
                 for slot in sorted(sched.active):
                     if slot not in sched.active:     # preempted below
@@ -1392,10 +1816,21 @@ class ContinuousBatchingEngine:
                     while not alloc.ensure(slot,
                                            int(alloc.fill[slot]) + nA):
                         if not self._preempt_youngest(rs, exclude=slot):
-                            raise RuntimeError(
+                            if hidden:
+                                # the injected OOM drove the pool all the
+                                # way down to one resident; return the
+                                # hidden pages instead of dying
+                                alloc.unhide_pages(hidden)
+                                hidden = []
+                                continue
+                            raise PageExhausted(
                                 f"page pool exhausted with a single "
                                 f"resident request (slot {slot}) — "
-                                "submit() should have rejected it")
+                                "submit() should have rejected it",
+                                slot=slot, free_pages=alloc.free_pages,
+                                pages_total=self.num_pages)
+            if hidden:
+                alloc.unhide_pages(hidden)
 
             # -- prefill work from the step planner: admission gated on
             # free pages, one work unit per iteration so each _can_place
@@ -1446,18 +1881,28 @@ class ContinuousBatchingEngine:
             j_step = min(1 << (j_live - 1).bit_length(),
                          alloc.pages_per_slot)
             t0 = perf_counter()
-            with tr.span("dispatch"), tr.annotate("paged_decode_step"):
-                logits, store, dstats = self._decode_paged(
-                    self.params, store,
-                    {"tokens": jnp.asarray(feed[:, None])},
-                    jnp.asarray(pos),
-                    jnp.asarray(alloc.block_table[:, :j_step]),
-                    jnp.asarray(alloc.fill))
-                rs.rng, sub = jax.random.split(rs.rng)
-                tok_dev = sample(logits, sub, self.temperature)
+            try:
+                with tr.span("dispatch"), tr.annotate("paged_decode_step"):
+                    self._fault_dispatch(rs)
+                    logits, store, dstats = self._decode_paged(
+                        self.params, store,
+                        {"tokens": jnp.asarray(feed[:, None])},
+                        jnp.asarray(pos),
+                        jnp.asarray(alloc.block_table[:, :j_step]),
+                        jnp.asarray(alloc.fill))
+                    rs.rng, sub = jax.random.split(rs.rng)
+                    tok_dev = sample(logits, sub, self.temperature)
+            except FaultInjected:
+                # pre-dispatch raise: store and allocator untouched —
+                # abandon the iteration and re-plan (see _run_dense)
+                m.inc("dispatch_retries_total")
+                self._poll_compiles(rs)
+                tr.end()                  # step
+                continue
             m.inc("decode_dispatches_total")
             t_sync = perf_counter()
             with tr.span("sync"):
+                self._fault_stall(rs)
                 toks = np.asarray(tok_dev)
                 gates = np.asarray(dstats["attn_gate"], np.float32)
             now = perf_counter()
@@ -1465,6 +1910,7 @@ class ContinuousBatchingEngine:
             step_s = now - t0
             m.inc("decode_seconds_total", step_s)
             m.observe("step_seconds", step_s)
+            self._watch(rs, "decode_step", step_s)
 
             with tr.span("bookkeep"):
                 cur = list(sched.active)
@@ -1548,6 +1994,7 @@ class ContinuousBatchingEngine:
         measure = cfg.skip.enabled and cfg.skip.kv_reuse
         t_sync = perf_counter()
         with tr.span("sync"):
+            self._fault_stall(rs)
             toks = np.asarray(out["tokens"])                     # [n, S]
             step_act = np.asarray(out["step_active"])            # [n, S]
             gates = (np.asarray(out["attn_gate"], np.float32)
@@ -1558,6 +2005,7 @@ class ContinuousBatchingEngine:
         epoch_s = now - t_disp
         m.inc("decode_seconds_total", epoch_s)
         m.observe("step_seconds", epoch_s)
+        self._watch(rs, "decode_epoch", epoch_s)
         n_run = toks.shape[0]
         step_s = epoch_s / n_run
 
@@ -1633,9 +2081,13 @@ class ContinuousBatchingEngine:
         pool = init_pool(cfg, self.max_slots, self.max_len)
         if self.policy is not None:
             pool = jax.device_put(pool, self._pool_sh)
+        pool = self._apply_resume(rs, pool)
         t_loop = perf_counter()
 
         while sched.has_work():
+            self._boundary(rs, pool)
+            if not sched.has_work():      # lifecycle sweep drained the run
+                break
             tr.begin("step", idx=rs.disp_idx)
             self._step_gauges(rs)
             # -- (1) dispatch one N-step epoch over the residents ----------
@@ -1653,13 +2105,22 @@ class ContinuousBatchingEngine:
                         # into the feed carry (no host sync)
                         feed_dev = feed_dev.at[slot].set(tok_dev[0])
                 t_disp = perf_counter()
-                with tr.span("dispatch", n=n_eff), \
-                        tr.annotate("decode_epoch"):
-                    pool, out = self._dense_loop(n_eff)(
-                        self.params, pool, feed_dev, jnp.asarray(pos),
-                        jnp.asarray(act), jnp.asarray(budget),
-                        jnp.asarray(stop), rs.rng)
-                    rs.rng = out["rng"]
+                try:
+                    with tr.span("dispatch", n=n_eff), \
+                            tr.annotate("decode_epoch"):
+                        self._fault_dispatch(rs)
+                        pool, out = self._dense_loop(n_eff)(
+                            self.params, pool, feed_dev, jnp.asarray(pos),
+                            jnp.asarray(act), jnp.asarray(budget),
+                            jnp.asarray(stop), rs.rng)
+                        rs.rng = out["rng"]
+                except FaultInjected:
+                    # pre-dispatch raise: pool untouched — abandon the
+                    # epoch and re-plan (see _run_dense)
+                    m.inc("dispatch_retries_total")
+                    self._poll_compiles(rs)
+                    tr.end()              # step
+                    continue
                 m.inc("decode_dispatches_total")
 
             # -- (2) host scheduling work overlapping the in-flight epoch --
@@ -1721,6 +2182,7 @@ class ContinuousBatchingEngine:
         store = paged_mod.init_store(cfg, self.num_pages, self.page_size)
         if self.policy is not None:
             store = jax.device_put(store, self._store_sh)
+        store = self._apply_resume(rs, store)
         t_loop = perf_counter()
 
         def per_step(slot, g):
@@ -1729,6 +2191,9 @@ class ContinuousBatchingEngine:
             rs.hist.on_decode_step(slot, g)
 
         while sched.has_work():
+            self._boundary(rs, store)
+            if not sched.has_work():      # lifecycle sweep drained the run
+                break
             tr.begin("step", idx=rs.disp_idx)
             self._step_gauges(rs)
             out = None
@@ -1741,7 +2206,14 @@ class ContinuousBatchingEngine:
                         st.req.max_new_tokens - len(st.out_tokens),
                         self.max_len - st.pos)
                 n_eff = self._epoch_len(rem)
+                if rs.epoch_cap:
+                    # adaptive degradation: sustained page pressure left a
+                    # cross-epoch cap; start from it instead of
+                    # re-discovering the shrink every iteration
+                    n_eff = min(n_eff, rs.epoch_cap)
                 # epoch-granular headroom: shrink before preempting
+                hidden = self._fault_oom(rs)
+                shrunk = False
                 with tr.span("headroom"):
                     while True:
                         failed = None
@@ -1755,26 +2227,59 @@ class ContinuousBatchingEngine:
                             break
                         if n_eff > 1:
                             n_eff //= 2
+                            shrunk = True
                             continue
                         if not self._preempt_youngest(rs, exclude=failed):
-                            raise RuntimeError(
+                            if hidden:
+                                alloc.unhide_pages(hidden)
+                                hidden = []
+                                continue
+                            raise PageExhausted(
                                 f"page pool exhausted with a single "
                                 f"resident request (slot {failed}) — "
-                                "submit() should have rejected it")
+                                "submit() should have rejected it",
+                                slot=failed, free_pages=alloc.free_pages,
+                                pages_total=self.num_pages)
+                if hidden:
+                    alloc.unhide_pages(hidden)
+                if shrunk:
+                    # remember the length that fit; grow back only after
+                    # consecutive clean epochs (hysteresis, so a storm
+                    # doesn't thrash shrink/grow every iteration)
+                    rs.epoch_cap = n_eff
+                    rs.clean_epochs = 0
+                    m.inc("epoch_shrinks_total")
+                    tr.instant("epoch_shrink", n_eff=n_eff)
+                elif rs.epoch_cap:
+                    rs.clean_epochs += 1
+                    if rs.clean_epochs >= 2:
+                        grown = rs.epoch_cap * 2
+                        rs.epoch_cap = (0 if grown >= self.decode_steps
+                                        else grown)
+                        rs.clean_epochs = 0
                 feed, pos, act, budget, stop, slots = self._epoch_args({})
                 j_live = max(1, alloc.max_chain_pages())
                 j_step = min(1 << (j_live - 1).bit_length(),
                              alloc.pages_per_slot)
                 t_disp = perf_counter()
-                with tr.span("dispatch", n=n_eff), \
-                        tr.annotate("paged_decode_epoch"):
-                    store, out = self._paged_loop(n_eff)(
-                        self.params, store, jnp.asarray(feed),
-                        jnp.asarray(pos), jnp.asarray(alloc.fill),
-                        jnp.asarray(act), jnp.asarray(budget),
-                        jnp.asarray(stop), rs.rng,
-                        jnp.asarray(alloc.block_table[:, :j_step]))
-                    rs.rng = out["rng"]
+                try:
+                    with tr.span("dispatch", n=n_eff), \
+                            tr.annotate("paged_decode_epoch"):
+                        self._fault_dispatch(rs)
+                        store, out = self._paged_loop(n_eff)(
+                            self.params, store, jnp.asarray(feed),
+                            jnp.asarray(pos), jnp.asarray(alloc.fill),
+                            jnp.asarray(act), jnp.asarray(budget),
+                            jnp.asarray(stop), rs.rng,
+                            jnp.asarray(alloc.block_table[:, :j_step]))
+                        rs.rng = out["rng"]
+                except FaultInjected:
+                    # pre-dispatch raise: store/allocator untouched —
+                    # abandon the epoch and re-plan (see _run_dense)
+                    m.inc("dispatch_retries_total")
+                    self._poll_compiles(rs)
+                    tr.end()              # step
+                    continue
                 m.inc("decode_dispatches_total")
 
             # -- host scheduling work overlapping the in-flight epoch ------

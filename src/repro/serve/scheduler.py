@@ -39,6 +39,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ATTN, ModelConfig
+from repro.serve.errors import AdmissionRejected
 
 
 @dataclasses.dataclass
@@ -54,13 +55,25 @@ class Request:
       stop_token     — optional token id that ends generation early (it
                        is still emitted as the last output token).
       submit_s       — ``perf_counter`` stamp set by ``Scheduler.submit``
-                       (feeds the engine's queue-wait histogram).
+                       (feeds the engine's queue-wait histogram, and is the
+                       request's *age* for preemption-victim ordering —
+                       preserved across requeues, so a preempted request
+                       never loses its FIFO seniority).
+      deadline_s     — optional wall-clock budget measured from submit;
+                       past it the engine finishes the request with
+                       ``finish_reason == "deadline"`` and releases its
+                       resources at the next step/epoch boundary.
+      preempt_count  — times this request has been preempted (OOM victim
+                       or aborted in-flight prefill); against the
+                       engine's ``max_preemptions`` retry budget.
     """
     uid: int
     tokens: np.ndarray               # [T0] int32 prompt
     max_new_tokens: int
     stop_token: Optional[int] = None
     submit_s: float = 0.0
+    deadline_s: Optional[float] = None
+    preempt_count: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -204,13 +217,25 @@ class Scheduler:
     # -- queue -------------------------------------------------------------
     def submit(self, req: Request) -> None:
         if req.prompt_len < 1:
-            raise ValueError(f"request {req.uid}: empty prompt")
+            raise AdmissionRejected(f"request {req.uid}: empty prompt",
+                                    reason="empty_prompt", uid=req.uid)
         if req.prompt_len + 1 > self.max_len:
-            raise ValueError(
+            raise AdmissionRejected(
                 f"request {req.uid}: prompt_len={req.prompt_len} leaves no "
-                f"decode headroom within max_len={self.max_len}")
+                f"decode headroom within max_len={self.max_len}",
+                reason="prompt_too_long", uid=req.uid)
         req.submit_s = perf_counter()
         self.queue.append(req)
+
+    def remove_queued(self, uid: int) -> Optional[Request]:
+        """Remove (and return) a still-queued request — the cheap half of
+        cooperative cancellation; returns None when ``uid`` is not in the
+        queue (already admitted, finished, or unknown)."""
+        for i, req in enumerate(self.queue):
+            if req.uid == uid:
+                del self.queue[i]
+                return req
+        return None
 
     @property
     def free_slots(self) -> int:
@@ -290,10 +315,11 @@ class Scheduler:
         iterations; monolithic prefill completes within its own)."""
         return self._prefilling
 
-    def abort_prefill(self) -> _InflightPrefill:
+    def abort_prefill(self, requeue: bool = True) -> _InflightPrefill:
         """Cancel the in-flight prefill: its slot returns to the free
-        list and the request goes back to the head of the FIFO (it will
-        re-prefill from scratch).  The paged engine uses this as OOM
+        list and (unless ``requeue=False`` — cancellation) the request
+        goes back into the FIFO at its age-ordered position, where it
+        will re-prefill from scratch.  The paged engine uses this as OOM
         backpressure — the in-flight prompt is the newest admission and
         has no decode progress to lose, so it is the cheapest victim
         when residents need page headroom."""
@@ -301,7 +327,8 @@ class Scheduler:
         assert pf is not None, "no prefill in flight"
         self._prefilling = None
         self._free.append(pf.slot)
-        self.queue.appendleft(pf.req)
+        if requeue:
+            self.requeue(pf.req)
         return pf
 
     # -- admission / eviction ---------------------------------------------
@@ -327,10 +354,22 @@ class Scheduler:
             admitted.append((slot, self.queue.popleft()))
         return admitted
 
-    def requeue_front(self, req: Request) -> None:
-        """Put a preempted request back at the head of the queue (it will
-        re-prefill from scratch when memory frees up)."""
-        self.queue.appendleft(req)
+    def requeue(self, req: Request) -> None:
+        """Put a preempted request back into the queue at its
+        *age-ordered* position: before every queued request submitted
+        later, after every one submitted earlier.  The old behavior
+        (append at head) inverted the order of two requests preempted in
+        the same storm and — combined with victim selection by admission
+        recency — let a single request be re-victimized forever while
+        later arrivals ran to completion.  Ordering by the original
+        ``submit_s`` (which requeue never touches) makes re-admission
+        FIFO-fair: a thrice-preempted request still finishes before
+        later arrivals (regression-tested in test_fault_tolerance.py)."""
+        for i, queued in enumerate(self.queue):
+            if queued.submit_s > req.submit_s:
+                self.queue.insert(i, req)
+                return
+        self.queue.append(req)
 
     def activate(self, state: ActiveRequest) -> None:
         self.active[state.slot] = state

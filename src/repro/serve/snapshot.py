@@ -1,0 +1,336 @@
+"""Crash-consistent engine snapshots: serialize a running
+``ContinuousBatchingEngine`` at an epoch boundary, survive a host kill,
+and ``resume()`` with bit-identical survivor tokens.
+
+Reuses the ``train/checkpoint.py`` machinery and its two load-bearing
+properties:
+
+* **atomic publish** — the snapshot is written to ``serve_XXXXXXXX.tmp``,
+  fsynced, then renamed; a writer killed mid-snapshot never corrupts the
+  latest good snapshot (the ``PreemptionGuard`` idiom's precondition);
+* **template restore** — device arrays (the KV slot pool or paged store,
+  plus the run's RNG key) round-trip through the same
+  ``_flatten``/dtype-cast path training checkpoints use, so bf16 pools
+  restore bit-exact (bf16 → f32 → bf16 is lossless) and a sharded engine
+  re-places leaves under its own NamedShardings.
+
+Layout (one directory per boundary)::
+
+    snapshot_dir/serve_00000012.tmp/  -> written, fsynced, renamed to
+    snapshot_dir/serve_00000012/
+        host.json      scheduler queue/active/free, allocator chains,
+                       finished results, lifecycle ages, fingerprint
+        arrays.npz     KV pool/store leaves + RNG (template-restored)
+
+**What a snapshot means.**  Snapshots are taken only at *quiescent* step
+boundaries: no prefill chunk in flight, no deferred first tokens pending
+on device.  At such a boundary the host structures (scheduler, allocator,
+per-request token lists) plus the device KV state are the *complete*
+engine state, so a resumed run re-executes exactly the decode steps the
+dead process ran after the boundary — at temperature 0 the tokens are
+bit-identical (asserted in tests/test_fault_tolerance.py).  Wall-clock
+fields are stored as *elapsed* intervals and rebased onto the resuming
+process's clock, so queue-age ordering (preemption fairness, FIFO
+re-admission) survives the restart.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from time import perf_counter
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.scheduler import ActiveRequest, Request
+from repro.train.checkpoint import _flatten
+
+SNAP_PREFIX = "serve_"
+
+
+# ---------------------------------------------------------------------------
+# Atomic directory write / template read (the checkpoint idiom)
+# ---------------------------------------------------------------------------
+
+def save_snapshot(snap_dir, step: int, device_tree: Any,
+                  host_state: Dict[str, Any], keep: int = 3) -> Path:
+    """Atomically publish one snapshot; prunes to the newest ``keep``."""
+    snap_dir = Path(snap_dir)
+    snap_dir.mkdir(parents=True, exist_ok=True)
+    final = snap_dir / f"{SNAP_PREFIX}{step:08d}"
+    tmp = snap_dir / f"{SNAP_PREFIX}{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    arrays, (treedef, keys) = _flatten(device_tree)
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = dict(host_state)
+    manifest["_snapshot"] = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": keys,
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }
+    with open(tmp / "host.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)                       # atomic publish
+    if keep:
+        steps = sorted(list_snapshot_steps(snap_dir))
+        for old in steps[:-keep]:
+            shutil.rmtree(snap_dir / f"{SNAP_PREFIX}{old:08d}",
+                          ignore_errors=True)
+    return final
+
+
+def list_snapshot_steps(snap_dir) -> List[int]:
+    p = Path(snap_dir)
+    if not p.exists():
+        return []
+    return sorted(int(d.name[len(SNAP_PREFIX):]) for d in p.iterdir()
+                  if d.is_dir() and d.name.startswith(SNAP_PREFIX)
+                  and not d.name.endswith(".tmp"))
+
+
+def latest_snapshot_step(snap_dir) -> Optional[int]:
+    steps = list_snapshot_steps(snap_dir)
+    return steps[-1] if steps else None
+
+
+def load_snapshot(snap_dir, device_template: Any,
+                  step: Optional[int] = None
+                  ) -> Tuple[Any, Dict[str, Any], int]:
+    """Restore ``(device_tree, host_state, step)`` from the newest (or
+    the given) snapshot, casting leaves through ``device_template``'s
+    dtypes exactly as ``train/checkpoint.load_checkpoint`` does."""
+    if step is None:
+        step = latest_snapshot_step(snap_dir)
+        if step is None:
+            raise FileNotFoundError(f"no engine snapshot under {snap_dir}")
+    d = Path(snap_dir) / f"{SNAP_PREFIX}{step:08d}"
+    with open(d / "host.json") as f:
+        host = json.load(f)
+    data = np.load(d / "arrays.npz")
+    flat_t, treedef = jax.tree_util.tree_flatten(device_template)
+    raw = [data[f"leaf_{i:05d}"] for i in range(len(flat_t))]
+
+    def restore(leaf, tmpl):
+        if hasattr(tmpl, "dtype") and jnp.issubdtype(tmpl.dtype,
+                                                     jax.dtypes.prng_key):
+            return jax.random.wrap_key_data(jnp.asarray(leaf))
+        return jnp.asarray(leaf.astype(tmpl.dtype))
+
+    device_tree = treedef.unflatten(
+        [restore(l, t) for l, t in zip(raw, flat_t)])
+    return device_tree, host, step
+
+
+# ---------------------------------------------------------------------------
+# Host-state encode / decode (the engine's scheduler + allocator + results)
+# ---------------------------------------------------------------------------
+
+def _encode_request(req: Request, now: float) -> dict:
+    return {
+        "uid": req.uid,
+        "tokens": np.asarray(req.tokens, np.int32).tolist(),
+        "max_new_tokens": req.max_new_tokens,
+        "stop_token": req.stop_token,
+        "age_s": max(0.0, now - req.submit_s) if req.submit_s else 0.0,
+        "deadline_s": req.deadline_s,
+        "preempt_count": req.preempt_count,
+    }
+
+
+def _decode_request(d: dict, now: float) -> Request:
+    return Request(uid=d["uid"],
+                   tokens=np.asarray(d["tokens"], np.int32),
+                   max_new_tokens=d["max_new_tokens"],
+                   stop_token=d["stop_token"],
+                   submit_s=now - d["age_s"],
+                   deadline_s=d.get("deadline_s"),
+                   preempt_count=d.get("preempt_count", 0))
+
+
+def _encode_active(st: ActiveRequest, now: float) -> dict:
+    d = {
+        "req": _encode_request(st.req, now),
+        "slot": st.slot,
+        "pos": st.pos,
+        "next_token": st.next_token,
+        "out_tokens": [int(t) for t in st.out_tokens],
+        "kv_stored": st.kv_stored,
+        "kv_dense": st.kv_dense,
+        "run_age_s": max(0.0, now - st.submit_s) if st.submit_s else 0.0,
+        "ttft_s": (st.first_token_s - st.submit_s
+                   if st.first_token_s else -1.0),
+        "decode_s": st.decode_s,
+        "max_stall_s": st.max_stall_s,
+        "pf_gates": None,
+    }
+    if st.pf_gates is not None:
+        # prompt-phase gate log, resolved to 0/1 ints (the accounting
+        # only thresholds it at 0.5)
+        g = np.asarray(st.pf_gates, np.float32)
+        d["pf_gates"] = (g > 0.5).astype(np.int32).tolist()
+    return d
+
+
+def _decode_active(d: dict, now: float) -> ActiveRequest:
+    submit_s = now - d["run_age_s"]
+    st = ActiveRequest(
+        req=_decode_request(d["req"], now),
+        slot=d["slot"], pos=d["pos"], next_token=d["next_token"],
+        out_tokens=list(d["out_tokens"]),
+        kv_stored=d["kv_stored"], kv_dense=d["kv_dense"],
+        submit_s=submit_s,
+        first_token_s=(submit_s + d["ttft_s"] if d["ttft_s"] >= 0 else 0.0),
+        decode_s=d["decode_s"], max_stall_s=d["max_stall_s"],
+        # stall tracking restarts at the resume boundary (the dead
+        # process's wall time is not comparable)
+        last_emit_s=now,
+    )
+    if d["pf_gates"] is not None:
+        st.pf_gates = np.asarray(d["pf_gates"], np.float32)
+    return st
+
+
+def encode_host_state(engine, rs) -> Dict[str, Any]:
+    """Everything outside the device arrays that ``resume()`` needs,
+    JSON-able.  ``rs`` is the engine's ``_RunState``; requires a
+    quiescent boundary (no in-flight prefill, no pending device
+    tokens) — the engine guards this."""
+    now = perf_counter()
+    sched = engine.scheduler
+    host: Dict[str, Any] = {
+        "fingerprint": {
+            "cfg": engine.cfg.name,
+            "kv_mode": engine.kv_mode,
+            "max_slots": engine.max_slots,
+            "max_len": engine.max_len,
+            "decode_steps": engine.decode_steps,
+            "prefill_chunk": engine.prefill_chunk,
+            "temperature": engine.temperature,
+            "page_size": getattr(engine, "page_size", 0),
+            "num_pages": getattr(engine, "num_pages", 0),
+        },
+        "uid": engine._uid,
+        "queue": [_encode_request(r, now) for r in sched.queue],
+        "active": {str(s): _encode_active(st, now)
+                   for s, st in sched.active.items()},
+        "free_slots": list(sched._free),
+        "results": {str(uid): {
+            "uid": r.uid,
+            "tokens": np.asarray(r.tokens, np.int32).tolist(),
+            "prompt_len": r.prompt_len,
+            "ttft_s": r.ttft_s,
+            "decode_s": r.decode_s,
+            "finish_reason": r.finish_reason,
+            "kv_stored": r.kv_stored,
+            "kv_dense": r.kv_dense,
+            "max_decode_stall_s": r.max_decode_stall_s,
+        } for uid, r in rs.results.items()},
+        "rs": {
+            "step_idx": rs.step_idx,
+            "disp_idx": rs.disp_idx,
+            "keep_acc": rs.keep_acc,
+            "keep_n": rs.keep_n,
+            "run_age_s": max(0.0, now - rs.t_run),
+        },
+    }
+    if engine.kv_mode == "paged":
+        alloc = engine.allocator
+        host["alloc"] = {
+            "free": list(alloc._free),
+            "chains": {str(s): list(c) for s, c in alloc._chains.items()},
+            "fill": alloc.fill.tolist(),
+            "stats": {
+                "pages_peak": alloc.stats.pages_peak,
+                "entries_appended": alloc.stats.entries_appended,
+                "entries_dense": alloc.stats.entries_dense,
+            },
+        }
+        host["hist"] = {
+            "fresh": rs.hist._fresh.tolist(),
+            "ctx": rs.hist._ctx.tolist(),
+            "hits": rs.hist.hits.tolist(),
+            "reads": rs.hist.reads.tolist(),
+        }
+    return host
+
+
+def check_fingerprint(engine, host: Dict[str, Any]) -> None:
+    """Refuse to resume onto an engine whose geometry differs from the
+    one that wrote the snapshot (a silent mismatch would corrupt the KV
+    interpretation, not just the stats)."""
+    fp = host["fingerprint"]
+    mine = {
+        "cfg": engine.cfg.name, "kv_mode": engine.kv_mode,
+        "max_slots": engine.max_slots, "max_len": engine.max_len,
+        "decode_steps": engine.decode_steps,
+        "prefill_chunk": engine.prefill_chunk,
+        "temperature": engine.temperature,
+        "page_size": getattr(engine, "page_size", 0),
+        "num_pages": getattr(engine, "num_pages", 0),
+    }
+    diffs = {k: (fp.get(k), mine[k]) for k in mine if fp.get(k) != mine[k]}
+    if diffs:
+        raise ValueError(
+            f"snapshot fingerprint mismatch (snapshot vs engine): {diffs}")
+
+
+def apply_host_state(engine, rs, host: Dict[str, Any]) -> None:
+    """Rebuild the scheduler / allocator / accounting from a snapshot's
+    host state, rebasing wall-clock ages onto this process's clock."""
+    from repro.serve.engine import RequestResult     # local: avoid cycle
+    now = perf_counter()
+    sched = engine.scheduler
+    # requests submitted to the resuming engine before run() merge into
+    # the restored queue in age order (their stamps are later than every
+    # rebased snapshot age, so they land at the tail)
+    fresh = list(sched.queue)
+    sched.queue.clear()
+    for d in host["queue"]:
+        sched.queue.append(_decode_request(d, now))
+    for req in fresh:
+        sched.requeue(req)
+    sched.active = {int(s): _decode_active(d, now)
+                    for s, d in host["active"].items()}
+    sched._free = list(host["free_slots"])
+    sched._prefilling = None
+    engine._uid = max(engine._uid, host["uid"])
+    rs.results.update({int(uid): RequestResult(**d)
+                       for uid, d in host["results"].items()})
+    for r in rs.results.values():
+        r.tokens = np.asarray(r.tokens, np.int32)
+    h = host["rs"]
+    rs.step_idx = h["step_idx"]
+    rs.disp_idx = h["disp_idx"]
+    rs.keep_acc = h["keep_acc"]
+    rs.keep_n = h["keep_n"]
+    rs.t_run = now - h["run_age_s"]
+    if engine.kv_mode == "paged":
+        alloc = engine.allocator
+        a = host["alloc"]
+        alloc._free = list(a["free"])
+        alloc._chains = {int(s): list(c) for s, c in a["chains"].items()}
+        alloc.fill = np.asarray(a["fill"], np.int32)
+        alloc.block_table[:] = 0
+        for s, chain in alloc._chains.items():
+            for j, page in enumerate(chain):
+                alloc.block_table[s, j] = page
+        alloc.stats.pages_in_use = alloc.num_pages - len(alloc._free)
+        alloc.stats.pages_peak = a["stats"]["pages_peak"]
+        alloc.stats.entries_appended = a["stats"]["entries_appended"]
+        alloc.stats.entries_dense = a["stats"]["entries_dense"]
+        rs.hist._fresh = np.asarray(host["hist"]["fresh"], np.int64)
+        rs.hist._ctx = np.asarray(host["hist"]["ctx"], np.int64)
+        rs.hist.hits = np.asarray(host["hist"]["hits"], np.int64)
+        rs.hist.reads = np.asarray(host["hist"]["reads"], np.int64)

@@ -1,0 +1,585 @@
+"""Fault-injection matrix + request-lifecycle hardening
+(``serve/faults.py``, ``serve/errors.py``, ``serve/snapshot.py``).
+
+Acceptance bar (docs/robustness.md): every injected fault is survivable
+with **bit-identical** survivor tokens at temperature 0, no page/slot
+leaks, and counters that agree with the emitted trace instants; a host
+kill at a step boundary is recoverable from the crash-consistent
+snapshot by a *fresh* engine; deadline/cancellation release resources
+within one step/epoch boundary; preemption victims are chosen (and
+re-admitted) by original submission age so a preemption storm cannot
+starve an old request.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.routing import neutral_router_bias
+from repro.models import model as M
+from repro.obs import Tracer, request_tid
+from repro.serve.engine import ContinuousBatchingEngine
+from repro.serve.errors import (AdmissionRejected, EngineAborted,
+                                HungDispatch, PageExhausted, ServeError,
+                                SimulatedKill)
+from repro.serve.faults import (Fault, FaultInjected, FaultPlan, Watchdog,
+                                as_fault_plan)
+from repro.serve import snapshot as snap
+from repro.serve.scheduler import Request, Scheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**over):
+    cfg = get_config("llama2-7b").smoke()
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (l,), dtype=np.int32)
+            for l in lens]
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return _cfg()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    # neutral bias => the router actually skips, so the paged/Δ-KV
+    # machinery (and its fault seams) is exercised, not bypassed
+    return neutral_router_bias(M.init_params(KEY, cfg))
+
+
+WORKLOAD_LENS = [9, 16, 5, 21]
+MAX_NEW = 6
+
+# the four engine paths the fault matrix must cover
+MATRIX = [(False, False), (False, True), (True, False), (True, True)]
+_IDS = ["dense-single", "dense-fused", "paged-single", "paged-fused"]
+
+
+def _make_engine(cfg, params, *, paged, fused, **kw):
+    if paged:
+        kw.setdefault("kv_mode", "paged")
+        kw.setdefault("page_size", 8)
+    return ContinuousBatchingEngine(
+        cfg, params, max_slots=2, max_len=48,
+        decode_steps=4 if fused else 1, **kw)
+
+
+@pytest.fixture(scope="module")
+def engines(cfg, params):
+    """One engine per (paged, fused) path, shared across the matrix tests
+    (the jitted steps stay warm, so only the first run per path pays the
+    compiles).  Each engine's first run is the fault-free baseline the
+    faulted reruns are compared against bit-for-bit."""
+    cache = {}
+
+    def get(paged, fused):
+        key = (paged, fused)
+        if key not in cache:
+            eng = _make_engine(cfg, params, paged=paged, fused=fused)
+            prompts = _prompts(cfg, WORKLOAD_LENS)
+            uids = [eng.submit(p, max_new_tokens=MAX_NEW) for p in prompts]
+            out = eng.run()
+            clean = [np.asarray(out["results"][u].tokens) for u in uids]
+            assert all(len(t) == MAX_NEW for t in clean)
+            cache[key] = (eng, clean)
+        return cache[key]
+
+    return get
+
+
+def _fault_run(eng, cfg, faults):
+    """Re-run the shared engine's workload with a fault plan + in-memory
+    tracer attached; restores the engine's inert plan afterwards."""
+    eng.faults = as_fault_plan(faults)
+    eng.tracer = tr = Tracer()
+    uids = [eng.submit(p, max_new_tokens=MAX_NEW)
+            for p in _prompts(cfg, WORKLOAD_LENS)]
+    try:
+        out = eng.run()
+    finally:
+        plan = eng.faults
+        eng.faults = FaultPlan()
+    return out, uids, plan, tr
+
+
+def _instants(tr, name):
+    return [e for e in tr.events if e.get("ph") == "i"
+            and e.get("name") == name]
+
+
+def _assert_no_leaks(eng):
+    assert not eng.scheduler.active and not eng.scheduler.queue
+    assert eng.scheduler.prefilling is None
+    assert eng.scheduler.free_slots == eng.max_slots
+    if eng.kv_mode == "paged":
+        assert eng.allocator.free_pages == eng.num_pages
+        assert (eng.allocator.fill == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / Watchdog unit semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_pops_once_and_fires_late():
+    plan = FaultPlan([Fault("oom", step=3, pages=2),
+                      Fault("oom", step=5),
+                      Fault("kill", step=4)])
+    assert plan and plan.take("oom", 0) is None       # not due yet
+    assert plan.take("dispatch_error", 99) is None    # kind mismatch
+    f = plan.take("oom", 7)                           # late seam still fires
+    assert f is not None and f.step == 3 and f.pages == 2
+    assert plan.take("oom", 4) is None                # step-5 one not due
+    assert plan.take("oom", 5).step == 5              # ...now it is
+    assert [f.kind for f in plan.fired] == ["oom", "oom"]
+    assert [f.kind for f in plan.unfired()] == ["kill"]
+    assert plan and plan.take("kill", 4) and not plan
+
+
+def test_fault_validation_and_normalization():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("meteor", step=0)
+    with pytest.raises(ValueError, match="step"):
+        Fault("oom", step=-1)
+    assert not as_fault_plan(None)
+    p = FaultPlan([Fault("kill", 0)])
+    assert as_fault_plan(p) is p
+    assert as_fault_plan([Fault("kill", 0)]).take("kill", 0)
+
+
+def test_watchdog_strikes_and_hard_timeout():
+    wd = Watchdog(timeout_s=1.0, factor=4.0, window=8, min_samples=3)
+    for _ in range(4):
+        assert not wd.observe("step", 0.01)           # steady state
+    assert wd.observe("step", 0.1)                    # 10x median: strike
+    assert wd.strikes == 1
+    assert not wd.observe("step", 0.012)              # recovery: no strike
+    with pytest.raises(HungDispatch) as ei:
+        wd.observe("step", 1.5)                       # hard bound
+    assert ei.value.phase == "step" and ei.value.elapsed_s == 1.5
+    assert isinstance(ei.value, EngineAborted)
+
+
+def test_watchdog_cold_start_immune():
+    wd = Watchdog(factor=2.0, min_samples=5)
+    # first observations are compile-dominated and wildly bimodal; no
+    # strike may fire before min_samples
+    for s in (5.0, 0.01, 0.01, 0.01):
+        assert not wd.observe("step", s)
+
+
+# ---------------------------------------------------------------------------
+# Typed error hierarchy (back-compat: old except ValueError/RuntimeError
+# call sites keep working)
+# ---------------------------------------------------------------------------
+
+def test_error_hierarchy_and_exports():
+    import repro.serve as S
+    for name in ("ServeError", "AdmissionRejected", "PageExhausted",
+                 "DeadlineExceeded", "EngineAborted", "HungDispatch",
+                 "SimulatedKill", "Fault", "FaultPlan", "Watchdog"):
+        assert hasattr(S, name), name
+    assert issubclass(AdmissionRejected, ValueError)
+    assert issubclass(AdmissionRejected, ServeError)
+    assert issubclass(PageExhausted, RuntimeError)
+    assert issubclass(SimulatedKill, EngineAborted)
+    assert issubclass(HungDispatch, EngineAborted)
+    assert issubclass(FaultInjected, ServeError)
+
+
+def test_admission_rejection_carries_reason(cfg, params):
+    eng = _make_engine(cfg, params, paged=True, fused=False, num_pages=6)
+    with pytest.raises(AdmissionRejected) as ei:
+        eng.submit(_prompts(cfg, [40])[0], max_new_tokens=8)
+    assert ei.value.reason == "kv_worst_case" and ei.value.uid == 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: age-preserving re-admission (the starvation fix)
+# ---------------------------------------------------------------------------
+
+def test_requeue_is_age_ordered_not_front():
+    sched = Scheduler(2, 32)
+    a, b, c = (Request(uid=i, tokens=np.arange(4, dtype=np.int32),
+                       max_new_tokens=2) for i in range(3))
+    for r in (a, b, c):
+        sched.submit(r)
+    sched.queue.popleft()                             # a admitted...
+    sched.queue.popleft()                             # ...and b
+    sched.requeue(b)                                  # b preempted
+    assert [r.uid for r in sched.queue] == [1, 2]     # before younger c
+    sched.requeue(a)                                  # a preempted too
+    assert [r.uid for r in sched.queue] == [0, 1, 2]  # full age order
+    # submit_s is the *original* stamp: requeueing must not refresh it
+    assert a.submit_s < b.submit_s < c.submit_s
+
+
+# ---------------------------------------------------------------------------
+# The fault matrix: each fault kind x all four engine paths.
+# Survivors must be bit-identical to the fault-free baseline, nothing
+# may leak, and the counters must agree with the trace instants.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged,fused", MATRIX, ids=_IDS)
+@pytest.mark.parametrize("kind", ["dispatch_error", "stall", "oom"])
+def test_fault_matrix_bit_identical_survivors(kind, paged, fused,
+                                              engines, cfg):
+    if kind == "oom" and not paged:
+        pytest.skip("page-alloc OOM is a paged-KV seam")
+    eng, clean = engines(paged, fused)
+    # a fused run takes ~1/decode_steps as many iterations (epochs) as a
+    # single-step run — schedule its faults into iterations that exist
+    d, s = (1, 2) if fused else (2, 5)
+    faults = {
+        "dispatch_error": [Fault("dispatch_error", step=d),
+                           Fault("dispatch_error", step=s)],
+        "stall": [Fault("stall", step=d, stall_s=0.05)],
+        "oom": [Fault("oom", step=d, pages=0)],   # hide ALL free pages
+    }[kind]
+    out, uids, plan, tr = _fault_run(eng, cfg, faults)
+
+    assert not plan.unfired(), plan.unfired()     # every fault triggered
+    for u, want in zip(uids, clean):
+        r = out["results"][u]
+        assert r.finish_reason == "length"
+        np.testing.assert_array_equal(np.asarray(r.tokens), want)
+    _assert_no_leaks(eng)
+
+    s, m = out["stats"], out["metrics"]
+    assert s.faults_injected == len(faults)
+    assert s.faults_injected == len(_instants(tr, "fault"))
+    if kind == "dispatch_error":
+        assert s.dispatch_retries == len(faults)
+        assert m.value("dispatch_retries_total") == len(faults)
+    if kind == "oom" and not fused:
+        # hiding the whole free list forces the normal OOM backpressure
+        assert s.preemptions >= 1 or s.faults_injected == 1
+    if kind == "oom" and fused:
+        # fused path degrades first: epoch shrink before preemption
+        assert s.epoch_shrinks == len(_instants(tr, "epoch_shrink"))
+
+
+@pytest.mark.parametrize("paged,fused", MATRIX, ids=_IDS)
+def test_kill_and_resume_bit_identical(paged, fused, engines, cfg, params,
+                                       tmp_path):
+    eng, clean = engines(paged, fused)
+    snap_dir = str(tmp_path / "snaps")
+    eng.snapshot_dir = snap_dir
+    # fused epochs cover decode_steps tokens per boundary, so the whole
+    # run spans only a handful of boundaries — kill early enough to fire
+    eng.faults = as_fault_plan([Fault("kill", step=2 if fused else 6,
+                                      message="pulled the plug")])
+    uids = [eng.submit(p, max_new_tokens=MAX_NEW)
+            for p in _prompts(cfg, WORKLOAD_LENS)]
+    try:
+        with pytest.raises(SimulatedKill, match="pulled the plug"):
+            eng.run()
+        assert eng.metrics.value("faults_injected_total") == 1
+        assert eng.metrics.value("snapshots_total") >= 1
+        assert snap.latest_snapshot_step(snap_dir) is not None
+    finally:
+        # the killed engine is dead to us: drop its leftover state so the
+        # shared fixture stays clean for any later test on this path
+        eng.snapshot_dir = None
+        eng.faults = FaultPlan()
+        eng.scheduler = Scheduler(eng.max_slots, eng.max_len,
+                                  buckets=eng.scheduler.buckets,
+                                  prefill_chunk=eng.prefill_chunk)
+        if paged:
+            eng.allocator = type(eng.allocator)(
+                eng.num_pages, eng.page_size, eng.max_slots,
+                slot_entry_capacity=eng.max_len * eng.n_attn)
+
+    # a *fresh* engine (fresh process, same geometry) resumes and drains
+    eng2 = _make_engine(cfg, params, paged=paged, fused=fused,
+                        snapshot_dir=snap_dir)
+    at = eng2.resume()
+    assert at >= 1
+    out = eng2.run()
+    assert out["stats"].resumes == 1
+    # every request — finished pre-kill (restored results) or surviving
+    # (recomputed) — must match the fault-free baseline bit for bit
+    assert sorted(out["results"]) == sorted(uids)
+    for u, want in zip(uids, clean):
+        r = out["results"][u]
+        assert r.finish_reason == "length"
+        np.testing.assert_array_equal(np.asarray(r.tokens), want)
+    _assert_no_leaks(eng2)
+
+
+def test_resume_fingerprint_rejects_geometry_change(cfg, params, engines,
+                                                    tmp_path):
+    eng, _ = engines(False, False)
+    snap_dir = str(tmp_path / "snaps")
+    eng.snapshot_dir = snap_dir
+    uids = [eng.submit(p, max_new_tokens=MAX_NEW)
+            for p in _prompts(cfg, WORKLOAD_LENS)]
+    try:
+        eng.run()
+    finally:
+        eng.snapshot_dir = None
+    assert uids and snap.latest_snapshot_step(snap_dir) is not None
+    other = ContinuousBatchingEngine(cfg, params, max_slots=3, max_len=48,
+                                     snapshot_dir=snap_dir)
+    with pytest.raises(ValueError, match="fingerprint"):
+        other.resume()
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: deadlines, cancellation, shedding, retry budget
+# ---------------------------------------------------------------------------
+
+def test_deadline_expires_queued_request(engines, cfg):
+    eng, clean = engines(False, False)
+    prompts = _prompts(cfg, WORKLOAD_LENS)
+    uids = [eng.submit(p, max_new_tokens=MAX_NEW) for p in prompts[:2]]
+    doomed = eng.submit(prompts[2], max_new_tokens=MAX_NEW,
+                        deadline_s=0.0)          # expired on arrival
+    out = eng.run()
+    r = out["results"][doomed]
+    assert r.finish_reason == "deadline" and len(r.tokens) == 0
+    assert out["stats"].deadline_exceeded == 1
+    for u, want in zip(uids, clean[:2]):
+        np.testing.assert_array_equal(np.asarray(out["results"][u].tokens),
+                                      want)
+    _assert_no_leaks(eng)
+
+
+def test_cancel_resident_keeps_partial_and_releases(engines, cfg):
+    """Mid-run cancellation of a *resident*: the request finishes with
+    the tokens it had at the next boundary (reason "cancelled"), its
+    slot/pages are released within one step, survivors are unaffected."""
+    eng, clean = engines(True, False)
+    eng.tracer = tr = Tracer()
+    prompts = _prompts(cfg, WORKLOAD_LENS)
+    victim = eng.submit(prompts[0], max_new_tokens=MAX_NEW)
+    keeper = eng.submit(prompts[1], max_new_tokens=MAX_NEW)
+    real_boundary = eng._boundary
+    fired = []
+
+    def hook(rs, kv_state):
+        real_boundary(rs, kv_state)
+        resident = {st.req.uid for st in eng.scheduler.active.values()}
+        # cancel early (the sweep acts at the NEXT boundary): by the time
+        # a later boundary sweeps, a 6-token request may have finished
+        if not fired and victim in resident and rs.disp_idx >= 2:
+            eng.cancel(victim)
+            fired.append(rs.disp_idx)
+
+    eng._boundary = hook
+    try:
+        out = eng.run()
+    finally:
+        eng._boundary = real_boundary
+        eng.tracer = Tracer()
+    assert fired, "victim never became resident"
+    r = out["results"][victim]
+    assert r.finish_reason == "cancelled"
+    assert 0 < len(r.tokens) < MAX_NEW
+    # the partial prefix is the real greedy prefix, not garbage
+    np.testing.assert_array_equal(np.asarray(r.tokens),
+                                  clean[0][:len(r.tokens)])
+    np.testing.assert_array_equal(
+        np.asarray(out["results"][keeper].tokens), clean[1])
+    assert out["stats"].requests_cancelled == 1
+    assert len(_instants(tr, "cancel")) == 1
+    _assert_no_leaks(eng)
+
+
+def test_cancel_unknown_uid_is_noop(engines, cfg):
+    eng, clean = engines(False, False)
+    eng.cancel(10_000)
+    uid = eng.submit(_prompts(cfg, WORKLOAD_LENS)[0],
+                     max_new_tokens=MAX_NEW)
+    out = eng.run()
+    np.testing.assert_array_equal(np.asarray(out["results"][uid].tokens),
+                                  clean[0])
+    assert out["stats"].requests_cancelled == 0
+
+
+def test_shed_on_queue_depth(engines, cfg):
+    eng, _ = engines(False, False)
+    eng.max_queue_depth = 2
+    prompts = _prompts(cfg, WORKLOAD_LENS)
+    try:
+        ok = [eng.submit(p, max_new_tokens=2) for p in prompts[:2]]
+        with pytest.raises(AdmissionRejected) as ei:
+            eng.submit(prompts[2], max_new_tokens=2)
+        assert ei.value.reason == "queue_depth"
+        # shedding rejects the newcomer, never the queued work
+        assert [r.uid for r in eng.scheduler.queue] == ok
+        out = eng.run()
+    finally:
+        eng.max_queue_depth = None
+    assert out["stats"].requests_shed == 1
+    assert all(out["results"][u].finish_reason == "length" for u in ok)
+
+
+def test_shed_on_queue_delay(engines, cfg):
+    import time
+    eng, _ = engines(False, False)
+    eng.max_queue_delay_s = 0.01
+    prompts = _prompts(cfg, WORKLOAD_LENS)
+    try:
+        head = eng.submit(prompts[0], max_new_tokens=2)
+        time.sleep(0.03)                     # head now past the bound
+        with pytest.raises(AdmissionRejected) as ei:
+            eng.submit(prompts[1], max_new_tokens=2)
+        assert ei.value.reason == "queue_delay"
+        out = eng.run()
+    finally:
+        eng.max_queue_delay_s = None
+    assert out["stats"].requests_shed == 1
+    assert out["results"][head].finish_reason == "length"
+
+
+def test_preempt_budget_finishes_with_partial(cfg, params):
+    """max_preemptions=0: the first eviction retires the victim with its
+    partial tokens (reason "preempt_budget") instead of requeueing."""
+    eng = _make_engine(cfg, params, paged=True, fused=False,
+                       max_preemptions=0)
+    prompts = _prompts(cfg, [8, 8], seed=1)
+    a = eng.submit(prompts[0], max_new_tokens=12)
+    b = eng.submit(prompts[1], max_new_tokens=12)
+    real_boundary = eng._boundary
+    forced = []
+
+    def hook(rs, kv_state):
+        real_boundary(rs, kv_state)
+        if (not forced and rs.disp_idx >= 4
+                and len(eng.scheduler.active) == 2
+                and eng.scheduler.prefilling is None):
+            assert eng._preempt_youngest(rs, exclude=-1)
+            forced.append(rs.disp_idx)
+
+    eng._boundary = hook
+    try:
+        out = eng.run()
+    finally:
+        eng._boundary = real_boundary
+    assert forced
+    rb = out["results"][b]                       # b is youngest-by-submit
+    assert rb.finish_reason == "preempt_budget"
+    assert len(rb.tokens) < 12
+    assert out["results"][a].finish_reason == "length"
+    assert out["stats"].preempt_budget_exhausted == 1
+    assert out["stats"].preemptions == 1
+    _assert_no_leaks(eng)
+
+
+def test_fairness_thrice_preempted_beats_later_arrivals(cfg, params):
+    """The starvation regression: a request evicted three times is still
+    re-admitted by *original submission age*, so it finishes before
+    requests that arrived after it (under the old admission-recency
+    victim rule it was re-victimized forever)."""
+    eng = _make_engine(cfg, params, paged=True, fused=False)
+    eng.tracer = tr = Tracer()
+    prompts = _prompts(cfg, [8, 8, 8, 8], seed=2)
+    a = eng.submit(prompts[0], max_new_tokens=24)    # oldest, long-running
+    b = eng.submit(prompts[1], max_new_tokens=12)    # the storm victim
+    late = [eng.submit(p, max_new_tokens=12) for p in prompts[2:]]
+    real_boundary = eng._boundary
+    forced = []
+
+    def hook(rs, kv_state):
+        real_boundary(rs, kv_state)
+        resident = {st.req.uid for st in eng.scheduler.active.values()}
+        if (len(forced) < 3 and b in resident and a in resident
+                and eng.scheduler.prefilling is None):
+            assert eng._preempt_youngest(rs, exclude=-1)
+            forced.append(rs.disp_idx)
+            # age order: b re-enters the queue AHEAD of the later arrivals
+            assert [r.uid for r in eng.scheduler.queue][0] == b
+
+    eng._boundary = hook
+    try:
+        out = eng.run()
+    finally:
+        eng._boundary = real_boundary
+        eng.tracer = Tracer()
+    assert len(forced) == 3, forced
+    assert out["stats"].preemptions == 3
+    for u in (a, b, *late):
+        assert out["results"][u].finish_reason == "length"
+    # b finished before both later arrivals despite three evictions
+    finish_ts = {e["tid"]: e["ts"] for e in _instants(tr, "finish")}
+    for u in late:
+        assert finish_ts[request_tid(b)] < finish_ts[request_tid(u)], \
+            (finish_ts, b, u)
+    _assert_no_leaks(eng)
+
+
+# ---------------------------------------------------------------------------
+# Watchdog wired into the engine
+# ---------------------------------------------------------------------------
+
+def test_watchdog_converts_stall_into_hung_dispatch(cfg, params, tmp_path):
+    trace_path = tmp_path / "hung.json"
+    eng = _make_engine(
+        cfg, params, paged=False, fused=False,
+        trace=str(trace_path),
+        watchdog=Watchdog(timeout_s=0.25),
+        faults=[Fault("stall", step=0, stall_s=0.5)])
+    eng.submit(_prompts(cfg, [8])[0], max_new_tokens=4)
+    with pytest.raises(HungDispatch, match="declared hung") as ei:
+        eng.run()
+    # the PR-7 trace is flushed on the abort path and rides the exception
+    assert ei.value.trace_path == str(trace_path)
+    assert trace_path.exists()
+    assert eng.metrics.value("watchdog_timeouts_total") == 1
+    assert eng.faults.fired and eng.faults.fired[0].kind == "stall"
+
+
+# ---------------------------------------------------------------------------
+# Snapshot store unit semantics (engine-independent)
+# ---------------------------------------------------------------------------
+
+def test_snapshot_roundtrip_prune_and_select(tmp_path):
+    d = str(tmp_path)
+    key = jax.random.PRNGKey(7)
+    tree = {"kv": {"k": jax.numpy.arange(6, dtype=jax.numpy.bfloat16),
+                   "t": np.arange(3, dtype=np.int32)},
+            "rng": key}
+    for step in (2, 4, 6, 8):
+        snap.save_snapshot(d, step, tree, {"step": step}, keep=3)
+    assert snap.list_snapshot_steps(d) == [4, 6, 8]   # pruned to keep=3
+    assert snap.latest_snapshot_step(d) == 8
+    template = {"kv": {"k": jax.numpy.zeros(6, jax.numpy.bfloat16),
+                       "t": np.zeros(3, np.int32)},
+                "rng": jax.random.PRNGKey(0)}
+    restored, host, at = snap.load_snapshot(d, template, step=6)
+    assert at == 6 and host["step"] == 6
+    np.testing.assert_array_equal(
+        np.asarray(restored["kv"]["k"], np.float32),
+        np.asarray(tree["kv"]["k"], np.float32))
+    assert restored["kv"]["k"].dtype == jax.numpy.bfloat16
+    np.testing.assert_array_equal(
+        jax.random.key_data(restored["rng"]), jax.random.key_data(key))
+    # tokens drawn from the restored key are the crash-consistency bar
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.uniform(restored["rng"], (4,))),
+        np.asarray(jax.random.uniform(key, (4,))))
+    with pytest.raises(FileNotFoundError):
+        snap.load_snapshot(d, template, step=2)       # pruned away
+
+
+def test_page_hide_unhide_restores_free_list_order():
+    from repro.kvcache.paged import PageAllocator
+    a = PageAllocator(num_pages=8, page_size=4, max_slots=2,
+                      slot_entry_capacity=16)
+    before = list(a._free)
+    hidden = a.hide_pages(3)
+    assert len(hidden) == 3 and a.free_pages == 5
+    a.unhide_pages(hidden)
+    assert list(a._free) == before                    # exact order back
+    hidden = a.hide_pages(0)                          # 0 = hide everything
+    assert a.free_pages == 0 and len(hidden) == 8
+    a.unhide_pages(hidden)
+    assert list(a._free) == before

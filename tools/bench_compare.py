@@ -84,6 +84,13 @@ FLOORS = {
         # ratio (PR-7 overhead guard; see benchmarks/bench_observability)
         ("meta.overhead.traced_goodput_ratio", 0.97),
     ],
+    "fault_tolerance": [
+        # PR-8 robustness guard: a storm of injected faults (dispatch
+        # error, OOM, stall) must keep >= 0.85x clean goodput AND the
+        # survivors' tokens bit-identical (bool floor: 1 = True)
+        ("meta.fault_storm.goodput_ratio", 0.85),
+        ("meta.fault_storm.bit_identical", 1),
+    ],
 }
 
 

@@ -12,7 +12,10 @@ Reports, from the span structure alone (no engine imports):
 * top-N slowest requests by wall time (queued → finish), with their
   queued/prefill time split and decode-epoch count;
 * preemption and recompile report: every ``preempt`` instant with its
-  kind, and every ``compile`` instant with the step it landed in.
+  kind, and every ``compile`` instant with the step it landed in;
+* robustness report: injected faults, load sheds, cancellations,
+  snapshots/resumes, watchdog strikes and epoch shrinks — the lifecycle
+  instants the fault-injection harness emits (docs/robustness.md).
 
 ``--json`` prints the summary dict instead of the human table (what the
 schema test and CI consume).  Exit code is non-zero on malformed traces
@@ -119,6 +122,21 @@ def summarize(events: List[dict], top: int = 5) -> dict:
     compiles = [{"ts": ev["ts"], **ev.get("args", {})} for ev in events
                 if ev.get("ph") == "i" and ev.get("name") == "compile"]
 
+    # -- robustness instants (serve/faults.py lifecycle hardening) ---------
+    robust_names = ("fault", "shed", "cancel", "snapshot", "resume",
+                    "watchdog", "epoch_shrink")
+    robustness: Dict[str, List[dict]] = {n: [] for n in robust_names}
+    for ev in events:
+        if ev.get("ph") == "i" and ev.get("name") in robustness:
+            robustness[ev["name"]].append(
+                {"ts": ev["ts"],
+                 "track": names.get(ev.get("tid", 0), "engine"),
+                 **ev.get("args", {})})
+    finish_reasons: Dict[str, int] = defaultdict(int)
+    for ev in events:
+        if ev.get("ph") == "i" and ev.get("name") == "finish":
+            finish_reasons[ev.get("args", {}).get("reason", "?")] += 1
+
     return {
         "n_events": len(events),
         "n_steps": len(steps),
@@ -128,6 +146,8 @@ def summarize(events: List[dict], top: int = 5) -> dict:
         "n_requests": len(requests),
         "preemptions": preempts,
         "compiles": compiles,
+        "robustness": {k: v for k, v in robustness.items() if v},
+        "finish_reasons": dict(finish_reasons),
     }
 
 
@@ -158,6 +178,20 @@ def print_summary(s: dict) -> None:
           f"{len(s['compiles'])} events")
     for c in s["compiles"]:
         print(f"  at {_fmt_us(c['ts'])}  +{c.get('n_new', 1)}")
+    robust = s.get("robustness", {})
+    if robust or s.get("finish_reasons"):
+        counts = " · ".join(f"{k}={len(v)}" for k, v in robust.items())
+        print(f"\nrobustness: {counts or 'no incidents'}")
+        for kind, evs in robust.items():
+            for e in evs:
+                extra = {k: v for k, v in e.items()
+                         if k not in ("ts", "track")}
+                print(f"  {kind:<12} at {_fmt_us(e['ts'])}  "
+                      f"{e['track']:<10} {extra}")
+        reasons = s.get("finish_reasons", {})
+        if reasons:
+            print("finish reasons: " + ", ".join(
+                f"{k}={v}" for k, v in sorted(reasons.items())))
 
 
 def main(argv=None) -> int:
