@@ -1,0 +1,147 @@
+"""Self-speculative decoding vs. plain continuous decoding.
+
+The speculative loop (docs/speculative.md) buys decode throughput the
+same way the fused-epoch loop does — fewer host round-trips per emitted
+token — plus the layer-skip lever: the k-token draft runs device-resident
+in ONE dispatch (a ``lax.scan``, like the fused loop) and the k+1-column
+verify is one more, so a fully-accepted window emits k+1 tokens for 2
+dispatches where the plain engine pays k+1.  Acceptance-friendly traffic
+here means greedy decoding with an unbiased draft (``draft_keep=1``): the
+draft pass IS the target pass, acceptance is 100%, and the window's
+emitted chain is bit-identical to plain greedy decoding — asserted below
+and exported as ``meta.speculative.temp0_identical`` so the CI floor
+fails if speculation ever buys speed by changing tokens.
+
+``meta.speculative.speedup`` — speculative vs. plain decode tok/s on the
+same machine, decode-dominant workload — is floor-gated (>= 1.2) by
+tools/bench_compare.py.
+"""
+from __future__ import annotations
+
+from time import perf_counter
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.engine import ContinuousBatchingEngine
+
+MAX_LEN = 64
+SLOTS = 4
+SPEC_K = 8
+
+
+def _workload(cfg, n: int):
+    """Decode-dominant traffic: short prompts, long generation budgets —
+    the regime where per-token dispatch overhead dominates and windowed
+    emission pays off."""
+    rng = np.random.default_rng(0)
+    lens = [8, 12, 6, 10, 8, 14, 6, 12][:n]
+    news = [24, 20, 24, 16, 24, 20, 24, 16][:n]
+    prompts = [rng.integers(0, cfg.vocab_size, (l,), dtype=np.int32)
+               for l in lens]
+    return list(zip(prompts, news))
+
+
+def _run(eng: ContinuousBatchingEngine, work):
+    t0 = perf_counter()
+    for p, n in work:
+        eng.submit(p, max_new_tokens=n)
+    out = eng.run()
+    return perf_counter() - t0, out
+
+
+def _tokens(out, uids_sorted_by_submit_order):
+    return [out["results"][u].tokens for u in uids_sorted_by_submit_order]
+
+
+def run(quick: bool = False) -> Rows:
+    rows = Rows()
+    cfg = get_config("llama2-7b").smoke()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    work = _workload(cfg, 4 if quick else 8)
+    useful = sum(n for _, n in work)
+    passes = 2 if quick else 5
+
+    plain = ContinuousBatchingEngine(cfg, params, max_slots=SLOTS,
+                                     max_len=MAX_LEN)
+    spec = ContinuousBatchingEngine(cfg, params, max_slots=SLOTS,
+                                    max_len=MAX_LEN, spec_k=SPEC_K)
+    # warm pass compiles the prefill buckets, the plain decode step and
+    # the per-γ draft/verify variants; timed passes are steady-state
+    _, out_p = _run(plain, work)
+    _, out_s = _run(spec, work)
+
+    # temperature-0 identity on the SAME engine path (dense vs dense):
+    # speculation must never buy speed by changing tokens
+    identical = True
+    for (tp, ts) in zip(sorted(out_p["results"]), sorted(out_s["results"])):
+        if not np.array_equal(out_p["results"][tp].tokens,
+                              out_s["results"][ts].tokens):
+            identical = False
+    assert identical, "speculative greedy diverged from plain greedy"
+
+    plain_ts, spec_ts = [], []
+    for _ in range(passes):
+        s, out_p = _run(plain, work)
+        plain_ts.append(s)
+        s, out_s = _run(spec, work)
+        spec_ts.append(s)
+    plain_s = float(np.min(plain_ts))
+    spec_s = float(np.min(spec_ts))
+    plain_tps = useful / plain_s
+    spec_tps = useful / spec_s
+    st = out_s["stats"]
+
+    rows.add("speculative/plain", plain_s * 1e6 / useful,
+             f"tok_s={plain_tps:.1f}")
+    rows.add("speculative/spec_k8", spec_s * 1e6 / useful,
+             f"tok_s={spec_tps:.1f};speedup={spec_tps / plain_tps:.2f};"
+             f"acceptance={st.spec_acceptance_rate:.3f}")
+    rows.add("speculative/windows", 0.0,
+             f"windows={st.spec_windows};"
+             f"dispatches={st.decode_dispatches};"
+             f"rolled_back={st.spec_entries_rolled_back}")
+
+    rows.meta["speculative"] = {
+        "speedup": round(spec_tps / plain_tps, 3),
+        "temp0_identical": int(identical),
+        "acceptance_rate": round(st.spec_acceptance_rate, 4),
+        "spec_k": SPEC_K,
+        "windows": st.spec_windows,
+        "tokens_drafted": st.spec_tokens_drafted,
+        "tokens_accepted": st.spec_tokens_accepted,
+        "decode_dispatches": st.decode_dispatches,
+        "plain_tok_s": round(plain_tps, 2),
+        "spec_tok_s": round(spec_tps, 2),
+    }
+
+    # paged twin: tentative-commit protocol on, acceptance unchanged,
+    # identity is same-path (spec-paged vs plain-paged)
+    pplain = ContinuousBatchingEngine(cfg, params, max_slots=SLOTS,
+                                      max_len=MAX_LEN, kv_mode="paged")
+    pspec = ContinuousBatchingEngine(cfg, params, max_slots=SLOTS,
+                                     max_len=MAX_LEN, kv_mode="paged",
+                                     spec_k=SPEC_K)
+    _, pout = _run(pplain, work)
+    _, sout = _run(pspec, work)
+    paged_identical = all(
+        np.array_equal(pout["results"][a].tokens, sout["results"][b].tokens)
+        for a, b in zip(sorted(pout["results"]), sorted(sout["results"])))
+    assert paged_identical, "paged speculative diverged from paged plain"
+    ps, pout = _run(pplain, work)
+    ss, sout = _run(pspec, work)
+    rows.add("speculative/paged_spec_k8", ss * 1e6 / useful,
+             f"tok_s={useful / ss:.1f};speedup={ps / ss:.2f};"
+             f"acceptance={sout['stats'].spec_acceptance_rate:.3f}")
+    rows.meta["speculative"]["paged_speedup"] = round(ps / ss, 3)
+    rows.meta["speculative"]["paged_temp0_identical"] = int(paged_identical)
+    rows.meta["speculative"]["paged_rolled_back"] = (
+        sout["stats"].spec_entries_rolled_back)
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

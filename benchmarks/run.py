@@ -28,7 +28,8 @@ def main() -> None:
                             bench_fused_linear, bench_kv_storage,
                             bench_mha_dataflow, bench_observability,
                             bench_paged_kv, bench_pe_accuracy,
-                            bench_roofline, bench_serve)
+                            bench_roofline, bench_serve,
+                            bench_speculative)
     suite = {
         "table1_pe_accuracy": bench_pe_accuracy,
         "fig8_mha_dataflow": bench_mha_dataflow,
@@ -41,6 +42,7 @@ def main() -> None:
         "chunked_prefill": bench_chunked_prefill,
         "observability": bench_observability,
         "fault_tolerance": bench_fault_tolerance,
+        "speculative": bench_speculative,
         "roofline": bench_roofline,
     }
     only = set(args.only.split(",")) if args.only else None

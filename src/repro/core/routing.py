@@ -102,6 +102,36 @@ def neutral_router_bias(params: Params) -> Params:
     return jax.tree_util.tree_map_with_path(one, params)
 
 
+# Logit-units-per-unit-keep-drop for the draft lever below.  The router
+# decision is ``logits[1] > logits[0]``, so shifting the *skip* bias up by
+# a few logits flips most marginal keep decisions without retraining; 4.0
+# saturates well past the trained decision margins.
+DRAFT_BIAS_SCALE = 4.0
+
+
+def draft_router_bias(params: Params, draft_keep: float) -> Params:
+    """Speculative-draft lever: a *view* of ``params`` whose router skip
+    biases are raised by ``DRAFT_BIAS_SCALE * (1 - draft_keep)``, making
+    the routed forward skip more aggressively — the self-speculative
+    draft model, sharing every weight leaf with the verifier (no copy).
+
+    ``draft_keep = 1.0`` returns ``params`` unchanged (object identity),
+    so the draft forward is bit-identical to the verifier — the all-accept
+    extreme the differential tests pin down.  Lower values trade draft
+    cost for acceptance rate (docs/speculative.md)."""
+    shift = DRAFT_BIAS_SCALE * (1.0 - float(draft_keep))
+    if shift == 0.0:
+        return params
+
+    def one(path, leaf):
+        names = [getattr(p, "key", "") for p in path]
+        if len(names) >= 2 and names[-2] == "router" and names[-1] == "b":
+            return leaf + jnp.asarray([shift, 0.0], leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
 def router_stats(p_keep: jnp.ndarray, gate: jnp.ndarray, cfg: ModelConfig
                  ) -> Dict[str, jnp.ndarray]:
     """Per-submodule routing statistics + the sparsity-control aux loss

@@ -492,6 +492,77 @@ def routed_attention_decode_paged(p: Params, x: jnp.ndarray,
     return x, (k_t, v_t), stats
 
 
+def routed_attention_chunk_paged(p: Params, x: jnp.ndarray,
+                                 kv_prev: Optional[kv_reuse.KVPair],
+                                 positions: jnp.ndarray, cfg: ModelConfig,
+                                 *, paged: Dict, layer,
+                                 carried_sq: Optional[jnp.ndarray] = None
+                                 ) -> Tuple[jnp.ndarray, kv_reuse.KVPair,
+                                            Stats]:
+    """Speculative verify window against the paged entry stream: the
+    C-token generalization of ``routed_attention_decode_paged`` (and the
+    paged twin of ``routed_attention_chunk``).
+
+    x: [B, C, D] — the window's activations [f0, d_1..d_k]; past tokens'
+    KV resolves through the *committed* entry prefix in ``paged`` by
+    effective position, while the window's own merged view ``(k_t, v_t)``
+    rides along explicitly, concatenated after the stream — the store is
+    never written here; the caller commits accepted columns afterwards
+    (``model.commit_verified``).  Within-window causality comes from the
+    shared position-comparison mask: window column j's position t0+j
+    admits stream entries (pos < t0) and columns ≤ j only.  Always the
+    jnp concat path — the Pallas paged kernel is single-query, and a
+    k+1-wide window doesn't need it."""
+    B, C, _ = x.shape
+    routed = cfg.skip.enabled and cfg.skip.route_attention
+    logits, nstats = _router_and_stats(p, x, cfg, routed, carried_sq)
+    gate, p_keep = _gate(logits, None, cfg, False, (B, C), routed)
+    gate = hint(gate, "gate")
+    inner = p["inner"]
+    fuse = layers.fuse_norm_linear(cfg)
+
+    if fuse:
+        q, k_new, v_new = attn_mod.project_qkv(
+            inner, x, positions, cfg, norm=p["norm"], stats=nstats)
+    else:
+        xn = layers.norm_apply(p["norm"], x, cfg, stats=nstats)
+        q = attn_mod.project_q(inner, xn, positions, cfg)
+        k_new, v_new = attn_mod.project_kv(inner, xn, positions, cfg)
+    if routed and cfg.skip.kv_reuse:
+        k_t, v_t = kv_reuse.merge_view(kv_prev, k_new, v_new, gate)
+    else:
+        k_t, v_t = kv_reuse.init_view(k_new, v_new)
+
+    from repro.kvcache import history
+    eff_pos = history.effective_positions(
+        paged["pos"], paged["l0"], paged["l1"], paged["in_fill"], layer)
+    q_pos = _q_index_positions(positions)                        # [B, C]
+    k_cat = jnp.concatenate(
+        [paged["k"], k_t.astype(paged["k"].dtype)], axis=1)
+    v_cat = jnp.concatenate(
+        [paged["v"], v_t.astype(paged["v"].dtype)], axis=1)
+    pos_cat = jnp.concatenate([eff_pos, q_pos], axis=1)
+    o = attn_mod.chunked_attention(
+        q, k_cat, v_cat, q_positions=q_pos, causal=True, window=0,
+        chunk=k_cat.shape[1], kv_positions=pos_cat)
+
+    stats = routing.router_stats(p_keep, gate, cfg) if routed else {
+        "keep_frac": jnp.float32(1.0), "router_loss": jnp.float32(0.0)}
+    if fuse:
+        x, sq = attn_mod.output_proj_fused(
+            inner, o, cfg, residual=x,
+            gate_mul=gate if routed else None, emit_sq=True)
+        x = hint(x, "activation")
+        stats["res_sq"] = hint(sq / x.shape[-1], "res_sq")
+    else:
+        y = attn_mod.output_proj(inner, o, cfg)
+        if routed:
+            y = y * gate.astype(y.dtype)[..., None]
+        x = x + hint(y, "activation")
+    stats["attn_gate"] = gate
+    return x, (k_t, v_t), stats
+
+
 def routed_ssm(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
                rng: Optional[jax.Array], train: bool,
                conv_state=None, ssm_state=None,

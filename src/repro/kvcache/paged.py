@@ -193,6 +193,26 @@ class PageAllocator:
         self.stats.pages_in_use = self.num_pages - len(self._free)
         return n
 
+    def trim(self, slot: int) -> int:
+        """Speculative-window rollback: return the tail pages a draft's
+        up-front ``ensure`` reserved beyond what the committed fill
+        actually uses (docs/speculative.md).  Tentative entries need no
+        device-side erase — the verifier rewrites the stream from the
+        pre-window fill and ``in_fill`` masks anything beyond — but the
+        *pages* backing the rejected tail must come back to the free
+        list, or every partially-accepted window leaks page headroom
+        until eviction.  Returns the number of pages freed."""
+        chain = self._chains[slot]
+        keep = self.pages_for(int(self.fill[slot]))
+        tail = chain[keep:]
+        if not tail:
+            return 0
+        del chain[keep:]
+        self._free.extend(reversed(tail))
+        self.block_table[slot, keep:keep + len(tail)] = 0
+        self.stats.pages_in_use = self.num_pages - len(self._free)
+        return len(tail)
+
     @property
     def saved_fraction(self) -> float:
         """Live compact-store saving (matches CompactKVStore.saved_fraction

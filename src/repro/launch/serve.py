@@ -35,6 +35,17 @@ def main() -> None:
                          "device-resident dispatch (0 = config default; "
                          "1 = per-token parity; requires --continuous; "
                          "see docs/serving.md)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative decoding: draft this many "
+                         "tokens per window with the layer-skip draft "
+                         "pass, verify them in one chunked dispatch "
+                         "(0 = off; requires --continuous, incompatible "
+                         "with --decode-steps; see docs/speculative.md)")
+    ap.add_argument("--draft-keep", type=float, default=None,
+                    help="draft-pass router keep-rate lever in (0, 1]: "
+                         "lower = cheaper, more aggressively skipped "
+                         "drafts at lower acceptance (default: serve "
+                         "keep rate; requires --spec-k)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill: process prompts this many "
                          "tokens at a time, interleaved with resident "
@@ -123,6 +134,13 @@ def main() -> None:
         raise SystemExit("--prefill-chunk requires --continuous")
     if args.decode_steps and not args.continuous:
         raise SystemExit("--decode-steps requires --continuous")
+    if args.spec_k and not args.continuous:
+        raise SystemExit("--spec-k requires --continuous")
+    if args.spec_k and args.decode_steps:
+        raise SystemExit("--spec-k and --decode-steps are mutually "
+                         "exclusive (both own the decode cadence)")
+    if args.draft_keep is not None and not args.spec_k:
+        raise SystemExit("--draft-keep requires --spec-k")
     if args.tp and not args.continuous:
         raise SystemExit("--tp requires --continuous")
     if (args.trace_out or args.metrics_out) and not args.continuous:
@@ -153,6 +171,7 @@ def main() -> None:
             page_size=args.page_size,
             prefill_chunk=args.prefill_chunk,
             decode_steps=args.decode_steps or None,
+            spec_k=args.spec_k, draft_keep=args.draft_keep,
             trace=args.trace_out,
             mesh=mesh,
             faults=faults, watchdog=watchdog,
@@ -185,6 +204,13 @@ def main() -> None:
               f"requests: {s.requests_completed} | "
               f"KV storage saved≈{s.kv_saved_fraction:.1%} (measured) | "
               f"compiles: {s.compiles}")
+        if args.spec_k:
+            print(f"speculative: k={args.spec_k} "
+                  f"draft_keep={eng.draft_keep:.2f} | "
+                  f"{s.spec_windows} windows | acceptance "
+                  f"{s.spec_acceptance_rate:.1%} "
+                  f"({s.spec_tokens_accepted}/{s.spec_tokens_drafted}) | "
+                  f"rolled back {s.spec_entries_rolled_back} entries")
         if eng.decode_steps > 1:
             print(f"fused decode: {eng.decode_steps} steps/dispatch | "
                   f"{s.decode_dispatches} dispatches | host "

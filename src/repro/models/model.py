@@ -357,24 +357,14 @@ def slice_cache_time(cache: Dict, length: int) -> Dict:
     return jax.tree_util.tree_map_with_path(one, cache)
 
 
-def prefill_chunk(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
-                  t0: jnp.ndarray, cfg: ModelConfig,
-                  last_index: Optional[jnp.ndarray] = None
-                  ) -> Tuple[jnp.ndarray, Dict, Dict]:
-    """One chunk of resumable prefill: C tokens appended at offset ``t0``.
-
-    The C-token sibling of ``decode_step``: ``cache`` (from
-    ``init_chunk_cache``) holds every layer's dense KV view of positions
-    [0, t0); this call computes the chunk's activations attending over
-    cached-prefix + chunk, appends each layer's merged view at
-    [t0, t0+C), and returns (logits [B, V] at ``last_index`` within the
-    chunk (default: the chunk's final position), new cache, stats).
-    ``stats['attn_gate']`` is [n_attn_layers, B, C] — the same per-token
-    execution-gate log monolithic ``prefill`` emits, chunk column-slice
-    by column-slice, so paged entry packing is unchanged.  Requires
-    masked-mode routing on an all-global-attn stack; the final chunk may
-    be right-padded (pass ``last_index`` = real length − 1) — pad columns
-    compute garbage that causal masking keeps out of every real token."""
+def _chunk_stack(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
+                 t0: jnp.ndarray, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """Shared stack pass of ``prefill_chunk`` / ``verify_chunk``: C tokens
+    at offset ``t0`` over the chunk staging cache, appending each layer's
+    merged KV view at [t0, t0+C).  Returns (final-normed activations
+    [B, C, D], new cache, stats) with ``stats['attn_gate']``
+    [n_attn_layers, B, C]."""
     B, C = batch["tokens"].shape if cfg.frontend == "token" \
         else batch["embeds"].shape[:2]
     t0 = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t0, jnp.int32)), (B,))
@@ -424,12 +414,53 @@ def prefill_chunk(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
 
     stats["attn_gate"] = gates
     x = layers.norm_apply(params["final_norm"], x, cfg, stats=sq)
+    return x, new_cache, stats
+
+
+def prefill_chunk(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
+                  t0: jnp.ndarray, cfg: ModelConfig,
+                  last_index: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """One chunk of resumable prefill: C tokens appended at offset ``t0``.
+
+    The C-token sibling of ``decode_step``: ``cache`` (from
+    ``init_chunk_cache``) holds every layer's dense KV view of positions
+    [0, t0); this call computes the chunk's activations attending over
+    cached-prefix + chunk, appends each layer's merged view at
+    [t0, t0+C), and returns (logits [B, V] at ``last_index`` within the
+    chunk (default: the chunk's final position), new cache, stats).
+    ``stats['attn_gate']`` is [n_attn_layers, B, C] — the same per-token
+    execution-gate log monolithic ``prefill`` emits, chunk column-slice
+    by column-slice, so paged entry packing is unchanged.  Requires
+    masked-mode routing on an all-global-attn stack; the final chunk may
+    be right-padded (pass ``last_index`` = real length − 1) — pad columns
+    compute garbage that causal masking keeps out of every real token."""
+    x, new_cache, stats = _chunk_stack(params, cache, batch, t0, cfg)
+    B = x.shape[0]
     if last_index is None:
         xl = x[:, -1:, :]
     else:
         xl = x[jnp.arange(B), last_index.astype(jnp.int32)][:, None, :]
     logits = layers.unembed(params["embed"], params.get("lm_head"),
                             xl, cfg)[:, 0]
+    return logits, new_cache, stats
+
+
+def verify_chunk(params: Params, cache: Dict, batch: Dict[str, jnp.ndarray],
+                 t0: jnp.ndarray, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """Speculative verification: ``prefill_chunk`` with *every* column
+    unembedded.  Feeding the window [f0, d_1..d_k] at positions
+    [t0, t0+k] returns logits [B, k+1, V] whose column j is the
+    verifier's next-token distribution after the prefix ending at the
+    j-th fed token — so column j judges draft d_{j+1} and column ``a``
+    supplies the correction after accepting ``a`` drafts
+    (``serve/sampling.py``).  KV for the whole window lands at
+    [t0, t0+C) exactly like a prefill chunk; rows past the accepted
+    prefix are dead weight the next window overwrites, masked until then
+    by decode's ``kv_valid_len`` (docs/speculative.md)."""
+    x, new_cache, stats = _chunk_stack(params, cache, batch, t0, cfg)
+    logits = layers.unembed(params["embed"], params.get("lm_head"), x, cfg)
     return logits, new_cache, stats
 
 
@@ -739,3 +770,219 @@ def paged_decode_loop(params: Params, store: Dict, feed: jnp.ndarray,
     return store, {"tokens": toks, "step_active": step_active,
                    "attn_gate": gates, "feed": feed, "t": t, "fill": fill,
                    "active": active, "emitted": emitted, "rng": rng}
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: draft loops + paged verify/commit
+# ---------------------------------------------------------------------------
+
+def draft_loop(params: Params, cache: Dict, feed: jnp.ndarray,
+               t: jnp.ndarray, rng: jnp.ndarray, *, n_steps: int,
+               cfg: ModelConfig, temperature: float = 0.0,
+               top_k: int = 0) -> Tuple[Dict, Dict]:
+    """Speculative draft: ``n_steps`` fused decode iterations under the
+    (usually skip-biased) draft parameters, proposing one token per step.
+
+    Unlike ``decode_loop`` there is no stop/budget/length masking: a
+    window is short (γ ≤ spec_k, pre-clamped by the host against
+    max_len) and the host truncates emission at acceptance time, so a
+    draft chain running past a stop token is dead weight, never an
+    error.  Per-step draft *logits* are stacked alongside the tokens so
+    temperature>0 acceptance can reconstruct the exact draft
+    distribution each proposal was drawn from.  Draft KV lands in the
+    cache rows the verify chunk immediately overwrites.  Returns
+    (cache, out): ``tokens`` [n, B], ``logits`` [n, B, V], final
+    ``feed``/``t`` and the advanced ``rng``."""
+    from repro.serve.sampling import split_sample
+
+    feed = jnp.asarray(feed, jnp.int32)
+    t = jnp.asarray(t, jnp.int32)
+
+    def body(carry, _):
+        cache, feed, t, rng = carry
+        logits, cache, _ = decode_step(
+            params, cache, {"tokens": feed[:, None]}, t, cfg)
+        rng, tok = split_sample(logits, rng, temperature, top_k)
+        return (cache, tok, t + 1, rng), (tok, logits)
+
+    with jax.named_scope(f"draft_x{n_steps}"):
+        (cache, feed, t, rng), (toks, logits) = jax.lax.scan(
+            body, (cache, feed, t, rng), None, length=n_steps)
+    return cache, {"tokens": toks, "logits": logits, "feed": feed,
+                   "t": t, "rng": rng}
+
+
+def paged_draft_loop(params: Params, store: Dict, feed: jnp.ndarray,
+                     t: jnp.ndarray, fill: jnp.ndarray,
+                     active: jnp.ndarray, rng: jnp.ndarray,
+                     block_table: jnp.ndarray, *, n_steps: int,
+                     cfg: ModelConfig, temperature: float = 0.0,
+                     top_k: int = 0) -> Tuple[Dict, Dict]:
+    """``draft_loop`` against the paged store: tentative entries append
+    at the live fill (the committed prefix below the window's entry
+    count stays untouched), fill advancing on device via the measured
+    fresh-entry count.  Every entry appended here is *tentative*:
+    ``paged_verify_chunk`` reads only the pre-window prefix, and
+    ``commit_verified`` rewrites the stream from the pre-window fill
+    with verifier KV for the accepted columns only — so a rejected
+    draft leaves no live residue (docs/speculative.md).  The host must
+    have pre-reserved page headroom for ``n_steps`` worst-case appends.
+    Returns the final ``fill`` so the host can count rolled-back
+    entries."""
+    from repro.kvcache import history as history_mod
+    from repro.kvcache import paged as paged_mod
+    from repro.serve.sampling import split_sample
+
+    reuse = paged_mod.reuse_enabled(cfg)
+    feed = jnp.asarray(feed, jnp.int32)
+    t = jnp.asarray(t, jnp.int32)
+    fill = jnp.asarray(fill, jnp.int32)
+    active = jnp.asarray(active, bool)
+
+    def body(carry, _):
+        store, feed, t, fill, rng = carry
+        logits, store, stats = paged_decode_step(
+            params, store, {"tokens": feed[:, None]}, t, block_table, fill,
+            cfg, commit_mask=active & (fill > 0))
+        rng, tok = split_sample(logits, rng, temperature, top_k)
+        n_fresh = history_mod.fresh_mask(stats["attn_gate"], reuse).astype(
+            jnp.int32).sum(axis=0)
+        fill = fill + jnp.where(active, n_fresh, 0)
+        return (store, tok, t + 1, fill, rng), (tok, logits)
+
+    with jax.named_scope(f"paged_draft_x{n_steps}"):
+        (store, feed, t, fill, rng), (toks, logits) = jax.lax.scan(
+            body, (store, feed, t, fill, rng), None, length=n_steps)
+    return store, {"tokens": toks, "logits": logits, "feed": feed,
+                   "t": t, "fill": fill, "rng": rng}
+
+
+def paged_verify_chunk(params: Params, store: Dict,
+                       batch: Dict[str, jnp.ndarray], t0: jnp.ndarray,
+                       block_table: jnp.ndarray, fill: jnp.ndarray,
+                       cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Speculative verification against the paged store — read-only.
+
+    The C-token sibling of ``paged_decode_step``: the window's C = k+1
+    fed tokens attend over the *committed* entry prefix (entries below
+    ``fill`` — the engine passes the pre-draft fill, so the draft loop's
+    tentative entries are invisible here) plus the window's own
+    in-flight KV, which rides along explicitly inside each layer.
+    Nothing is committed: the per-layer token views come back in
+    ``stats['kv_token']`` ([nA, B, C, Hkv, dh] each) for
+    ``commit_verified`` to append after host-side acceptance.  Returns
+    (logits [B, C, V], stats) with ``stats['attn_gate']`` [nA, B, C]."""
+    from repro.kvcache import paged as paged_mod
+
+    assert paged_mod.can_page(cfg), f"{cfg.name}: not a pageable stack"
+    B, C = batch["tokens"].shape if cfg.frontend == "token" \
+        else batch["embeds"].shape[:2]
+    t0 = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(t0, jnp.int32)), (B,))
+    pos = t0[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    if cfg.pos_embedding == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, B, C))
+    x = _embed_inputs(params, batch, pos, cfg)
+
+    # always the jnp concat path: the Pallas decode kernel is
+    # single-query, and a k+1-wide window doesn't need it
+    view = paged_mod.gather_view(store, block_table, with_kv=True)
+    E = view["pos"].shape[1]
+    paged_ctx = dict(view)
+    paged_ctx["in_fill"] = jnp.arange(E)[None, :] < fill[:, None]
+
+    stack = params["stack"]
+    nA_stage = sum(1 for k in range(cfg.stage_len)
+                   if cfg.block_kind(k) != MAMBA)
+    x, kv_prev, s0, sq = transformer.stage_verify_paged(
+        stack["stage0"], x, None, pos, cfg, paged_ctx, jnp.int32(0))
+    gates = s0.pop("attn_gate")
+    buf_k, buf_v = s0.pop("kv_token")
+    stats = s0
+
+    if cfg.num_stages > 1:
+        def body(carry, xs):
+            x, kv_prev, sq = carry
+            sp, si = xs
+            x, kv_prev, s, sq = transformer.stage_verify_paged(
+                sp, x, kv_prev, pos, cfg, paged_ctx, si * nA_stage,
+                carried_sq=sq)
+            g = s.pop("attn_gate")
+            kt = s.pop("kv_token")
+            return (x, kv_prev, sq), (s, g, kt)
+
+        idxs = jnp.arange(1, cfg.num_stages, dtype=jnp.int32)
+        if cfg.scan_layers:
+            (x, kv_prev, sq), (s_scan, g_scan, kt_scan) = jax.lax.scan(
+                body, (x, kv_prev, sq), (stack["stages"], idxs))
+            stats = jax.tree_util.tree_map(lambda a, b: a + b.sum(axis=0),
+                                           stats, s_scan)
+            gates = jnp.concatenate([gates[None], g_scan], axis=0)
+            buf_k = jnp.concatenate([buf_k[None], kt_scan[0]], axis=0)
+            buf_v = jnp.concatenate([buf_v[None], kt_scan[1]], axis=0)
+        else:
+            g_list, k_list, v_list = [], [], []
+            for i in range(cfg.num_stages - 1):
+                sp = jax.tree_util.tree_map(lambda l: l[i], stack["stages"])
+                (x, kv_prev, sq), (s, g, kt) = body((x, kv_prev, sq),
+                                                    (sp, idxs[i]))
+                stats = jax.tree_util.tree_map(lambda a, b: a + b, stats, s)
+                g_list.append(g[None])
+                k_list.append(kt[0][None])
+                v_list.append(kt[1][None])
+            gates = jnp.concatenate([gates[None]] + g_list, axis=0)
+            buf_k = jnp.concatenate([buf_k[None]] + k_list, axis=0)
+            buf_v = jnp.concatenate([buf_v[None]] + v_list, axis=0)
+        gates = gates.reshape((-1, B) + gates.shape[-1:])
+        buf_k = buf_k.reshape((-1,) + buf_k.shape[-4:])
+        buf_v = buf_v.reshape((-1,) + buf_v.shape[-4:])
+
+    stats["attn_gate"] = gates
+    stats["kv_token"] = (buf_k, buf_v)
+    x = layers.norm_apply(params["final_norm"], x, cfg, stats=sq)
+    logits = layers.unembed(params["embed"], params.get("lm_head"), x, cfg)
+    return logits, stats
+
+
+def commit_verified(store: Dict, buf_k: jnp.ndarray, buf_v: jnp.ndarray,
+                    gates: jnp.ndarray, t0: jnp.ndarray,
+                    block_table: jnp.ndarray, fill0: jnp.ndarray,
+                    committed: jnp.ndarray, active: jnp.ndarray,
+                    cfg: ModelConfig) -> Tuple[Dict, jnp.ndarray]:
+    """Post-acceptance paged commit: rewrite the entry stream from the
+    pre-window ``fill0`` with the *verifier's* KV for exactly the
+    leading ``committed`` columns of the window (per slot), in the same
+    token-major order a never-speculated engine appends — so the
+    committed stream is indistinguishable from plain decoding, and every
+    tentative draft entry at index ≥ post-commit fill is dead (masked by
+    ``in_fill`` at read time, overwritten by the next window's draft).
+
+    buf_k/buf_v: [nA, S, C, Hkv, dh] (``paged_verify_chunk`` views);
+    gates: [nA, S, C]; t0/fill0/committed: [S]; ``active`` [S] masks
+    slots outside the window.  Returns (store, per-slot post-commit
+    fill)."""
+    from repro.kvcache import history as history_mod
+    from repro.kvcache import paged as paged_mod
+
+    reuse = paged_mod.reuse_enabled(cfg)
+    C = gates.shape[-1]
+    fill = jnp.asarray(fill0, jnp.int32)
+    committed = jnp.asarray(committed, jnp.int32)
+    active = jnp.asarray(active, bool)
+    t0 = jnp.asarray(t0, jnp.int32)
+
+    def body(carry, xs):
+        store, fill = carry
+        bk, bv, g, j = xs
+        mask = active & (j < committed)
+        store = paged_mod.commit_decode(store, bk, bv, g, t0 + j,
+                                        block_table, fill, mask, cfg)
+        n_fresh = history_mod.fresh_mask(g, reuse).astype(
+            jnp.int32).sum(axis=0)
+        fill = fill + jnp.where(mask, n_fresh, 0)
+        return (store, fill), None
+
+    xs = (jnp.moveaxis(buf_k, 2, 0), jnp.moveaxis(buf_v, 2, 0),
+          jnp.moveaxis(gates, 2, 0), jnp.arange(C, dtype=jnp.int32))
+    with jax.named_scope(f"commit_verified_x{C}"):
+        (store, fill), _ = jax.lax.scan(body, (store, fill), xs)
+    return store, fill

@@ -335,6 +335,48 @@ def stage_decode_paged(stage_params: Params, x: jnp.ndarray,
     return x, kv_prev, stats, carried_sq
 
 
+def stage_verify_paged(stage_params: Params, x: jnp.ndarray,
+                       kv_prev: Optional[Tuple], positions: jnp.ndarray,
+                       cfg: ModelConfig, paged: Dict, a_base: jnp.ndarray,
+                       carried_sq: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, Optional[Tuple], Dict,
+                                  Optional[jnp.ndarray]]:
+    """``stage_decode_paged``'s C-token verify twin (speculative
+    decoding): one super-block over a k+1-token window, reads resolving
+    through the committed entry stream, the store never written.  The
+    *full-window* per-layer token views are collected instead of the
+    single-token slice — stats['kv_token'] = (k, v)
+    [nA_stage, B, C, Hkv, dh] stacks — so ``model.commit_verified`` can
+    append exactly the accepted columns after the host's accept test.
+    stats['attn_gate'] is [nA_stage, B, C]."""
+    stats = _ZERO_STATS()
+    gates: List[jnp.ndarray] = []
+    k_toks: List[jnp.ndarray] = []
+    v_toks: List[jnp.ndarray] = []
+    for k in range(cfg.stage_len):
+        bp = stage_params[f"pos{k}"]
+        assert cfg.block_kind(k) == ATTN, \
+            "paged verify requires an all-global-attn stack"
+        x, kv_prev, s = skip_block.routed_attention_chunk_paged(
+            bp["mixer"], x, kv_prev, positions, cfg,
+            paged=paged, layer=a_base + len(gates), carried_sq=carried_sq)
+        carried_sq = s.pop("res_sq", None)
+        gates.append(s.pop("attn_gate"))
+        k_toks.append(kv_prev[0])
+        v_toks.append(kv_prev[1])
+        stats = _acc_stats(stats, s, cfg.skip.route_attention)
+        if "ffn" in bp:
+            x, s = skip_block.routed_mlp(
+                bp["ffn"], x, cfg,
+                inner_fn=_ffn_inner(cfg, cfg.is_moe_layer(k)),
+                rng=None, train=False, carried_sq=carried_sq)
+            carried_sq = s.pop("res_sq", None)
+            stats = _acc_stats(stats, s, cfg.skip.route_mlp)
+    stats["attn_gate"] = jnp.stack(gates)
+    stats["kv_token"] = (jnp.stack(k_toks), jnp.stack(v_toks))
+    return x, kv_prev, stats, carried_sq
+
+
 def _ring_attention_decode(p: Params, x, k_ring, v_ring, t, kv_prev,
                            positions, cfg: ModelConfig, carried_sq=None):
     """Sliding-window decode against a ring buffer cache [B, W, H, d].

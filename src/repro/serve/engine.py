@@ -34,6 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import LOCAL, ModelConfig
 from repro.core import kv_reuse
+from repro.core.routing import draft_router_bias
 from repro.distributed.sharding import ShardingPolicy, set_policy
 from repro.kvcache import history as history_mod
 from repro.kvcache import paged as paged_mod
@@ -45,10 +46,12 @@ from repro.serve.errors import (AdmissionRejected, HungDispatch,
                                 PageExhausted, SimulatedKill)
 from repro.serve.faults import (FaultInjected, Watchdog, as_fault_plan,
                                 sleep_stall)
+from repro.serve import sampling as sampling_mod
 from repro.serve.sampling import sample
 from repro.serve.scheduler import (ActiveRequest, PrefillChunk, Request,
                                    Scheduler, can_bucket,
-                                   can_chunk_prefill, default_buckets)
+                                   can_chunk_prefill, can_speculate,
+                                   default_buckets)
 
 
 @dataclasses.dataclass
@@ -135,6 +138,12 @@ class ServeStats:
     history_hit_rate: float = 0.0         # reads served by the history buf
     history_hits_per_layer: List[float] = dataclasses.field(
         default_factory=list)
+    # -- speculative decoding (spec_k > 0; docs/speculative.md) ------------
+    spec_windows: int = 0                 # draft+verify windows dispatched
+    spec_tokens_drafted: int = 0          # draft proposals fed to verify
+    spec_tokens_accepted: int = 0         # proposals the verifier kept
+    spec_entries_rolled_back: int = 0     # tentative paged entries discarded
+    spec_acceptance_rate: float = 0.0     # accepted / drafted (0 when off)
     # -- robustness / lifecycle (docs/robustness.md) -----------------------
     faults_injected: int = 0              # FaultPlan faults that fired
     dispatch_retries: int = 0             # iterations abandoned + replanned
@@ -421,6 +430,29 @@ class ContinuousBatchingEngine:
                              work overlaps the in-flight dispatch — see
                              docs/serving.md.  Token output is identical
                              to N = 1 at temperature 0.
+      spec_k               — self-speculative decoding (docs/
+                             speculative.md): each decode iteration
+                             drafts up to ``spec_k`` tokens per resident
+                             with an aggressively-skipped forward, then
+                             verifies the whole window in ONE chunked
+                             dispatch — two dispatches emit up to
+                             ``spec_k + 1`` tokens per slot.  0 = off
+                             (parity default).  Requires
+                             ``can_speculate(cfg)`` and is mutually
+                             exclusive with ``decode_steps > 1`` (both
+                             amortize host overhead over multi-token
+                             dispatches).  Token output is identical to
+                             plain decoding at temperature 0; at
+                             temperature > 0 the per-token emission
+                             distribution is preserved exactly
+                             (speculative-sampling identity).
+      draft_keep           — draft-pass router keep-rate override in
+                             (0, 1]; values < 1 bias every router toward
+                             skipping during the draft loop only (the
+                             verify pass always runs the full model).
+                             None/1.0 = draft with the configured
+                             routing (self-drafting, acceptance-
+                             friendly).
       step_tokens          — optional per-step token budget for
                              ``plan_step`` (decode slots cost 1 each, a
                              chunk its length); None = unbudgeted.
@@ -480,6 +512,8 @@ class ContinuousBatchingEngine:
                  num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  decode_steps: Optional[int] = None,
+                 spec_k: int = 0,
+                 draft_keep: Optional[float] = None,
                  step_tokens: Optional[int] = None,
                  trace=None,
                  mesh=None, sharding_policy: Optional[ShardingPolicy] = None,
@@ -534,6 +568,30 @@ class ContinuousBatchingEngine:
                                 if decode_steps is None else decode_steps)
         if self.decode_steps < 1:
             raise ValueError("decode_steps must be >= 1 (1 = single-step)")
+        self.spec_k = int(spec_k)
+        if self.spec_k < 0:
+            raise ValueError("spec_k must be >= 0 (0 = off)")
+        self.draft_keep = 1.0 if draft_keep is None else float(draft_keep)
+        # test hook: callable (uid, drafts [k] int32) -> [k] replacing a
+        # slot's draft proposals before verification (forces a host sync
+        # of the draft tokens — test-only, not a serving lever)
+        self.draft_override = None
+        self.draft_params = params
+        if self.spec_k:
+            if not can_speculate(cfg):
+                raise ValueError(
+                    f"{cfg.name}: speculative decoding reuses the chunked-"
+                    "prefill stack pass for verification — it requires an "
+                    "all-global-attention stack with masked-mode routing "
+                    "and the bthd cache layout (spec_k=0)")
+            if self.decode_steps > 1:
+                raise ValueError(
+                    "spec_k and decode_steps > 1 are mutually exclusive — "
+                    "both amortize host overhead over multi-token "
+                    "dispatches; pick one")
+            if not 0.0 < self.draft_keep <= 1.0:
+                raise ValueError("draft_keep must be in (0, 1]")
+            self.draft_params = draft_router_bias(params, self.draft_keep)
         self.step_tokens = step_tokens
         if prefill_buckets is not None and not can_bucket(cfg):
             raise ValueError(
@@ -600,6 +658,11 @@ class ContinuousBatchingEngine:
         # fused decode loops, compiled lazily per power-of-two epoch length
         self._dense_loops: Dict[int, object] = {}
         self._paged_loops: Dict[int, object] = {}
+        # speculative draft loops (lazy per draft length) + the verify /
+        # commit steps (single jits — their window width is shape-driven)
+        self._spec_drafts: Dict[int, object] = {}
+        self._spec_verify_fn = None
+        self._spec_commit_fn = None
         self._insert = _jit(
             partial(pool_insert, cfg=cfg), donate=(0,),
             in_sh=(self._pool_sh, self._pcache_sh, rep),
@@ -746,6 +809,100 @@ class ContinuousBatchingEngine:
                 in_sh=(self._param_sh, self._store_sh) + (rep,) * 8,
                 out_sh=(self._store_sh, rep))
             self._paged_loops[n] = fn
+        return fn
+
+    def _spec_draft(self, n: int):
+        """The jitted n-step speculative draft loop for the engine's KV
+        mode, compiled lazily per draft length (n <= spec_k, a handful
+        of variants).  The pool/store is donated: draft KV writes are
+        tentative — dense verify overwrites the window rows outright,
+        and the paged verifier masks the tentative entries out before
+        ``commit_verified`` rewrites them."""
+        fn = self._spec_drafts.get(n)
+        if fn is None:
+            cfg, temp = self.cfg, self.temperature
+            rep = self._repl
+            if self.kv_mode == "paged":
+                def draft_fn(p, store, feed, t, fill, active, rng, bt):
+                    return model_lib.paged_draft_loop(
+                        p, store, feed, t, fill, active, rng, bt,
+                        n_steps=n, cfg=cfg, temperature=temp)
+
+                fn = self._jit_step(
+                    draft_fn, donate=(1,),
+                    in_sh=(self._param_sh, self._store_sh) + (rep,) * 6,
+                    out_sh=(self._store_sh, rep))
+            else:
+                def draft_fn(p, pool, feed, t, rng):
+                    return model_lib.draft_loop(
+                        p, pool, feed, t, rng, n_steps=n, cfg=cfg,
+                        temperature=temp)
+
+                fn = self._jit_step(
+                    draft_fn, donate=(1,),
+                    in_sh=(self._param_sh, self._pool_sh) + (rep,) * 3,
+                    out_sh=(self._pool_sh, rep))
+            self._spec_drafts[n] = fn
+        return fn
+
+    def _spec_verify(self):
+        """The jitted verify step (the window width C is shape-driven,
+        so one jit covers every draft length).  Dense mode donates the
+        pool — the verifier's window rows ARE the committed state; paged
+        mode reads the store without donating, since commit happens in
+        the separate ``_spec_commit`` dispatch once the host knows each
+        slot's accepted prefix.  The per-column argmax is computed on
+        device so the temperature-0 sync never pulls [S, C, V] logits."""
+        fn = self._spec_verify_fn
+        if fn is None:
+            cfg = self.cfg
+            rep = self._repl
+            if self.kv_mode == "paged":
+                def vfn(p, store, batch, t0, bt, fill):
+                    logits, stats = model_lib.paged_verify_chunk(
+                        p, store, batch, t0, bt, fill, cfg=cfg)
+                    return (jnp.argmax(logits, -1).astype(jnp.int32),
+                            logits, stats)
+
+                fn = self._jit_step(
+                    vfn,
+                    in_sh=(self._param_sh, self._store_sh) + (rep,) * 4,
+                    out_sh=(rep, rep, rep))
+            else:
+                def vfn(p, pool, batch, t0):
+                    logits, pool, stats = model_lib.verify_chunk(
+                        p, pool, batch, t0, cfg=cfg)
+                    return (jnp.argmax(logits, -1).astype(jnp.int32),
+                            logits, pool, stats)
+
+                fn = self._jit_step(
+                    vfn, donate=(1,),
+                    in_sh=(self._param_sh, self._pool_sh, rep, rep),
+                    out_sh=(rep, rep, self._pool_sh, rep))
+            self._spec_verify_fn = fn
+        return fn
+
+    def _spec_commit(self):
+        """Paged tentative-commit (``model.commit_verified``): rewrite
+        the entry stream from the pre-window fill with the verifier's KV
+        for exactly the emitted columns — the device half of the
+        rollback protocol (the host half is allocator replay + trim)."""
+        fn = self._spec_commit_fn
+        if fn is None:
+            cfg = self.cfg
+            rep = self._repl
+
+            def cfn(store, bk, bv, gates, t0, bt, fill0, committed,
+                    active):
+                return model_lib.commit_verified(
+                    store, bk, bv, gates, t0, bt, fill0, committed,
+                    active, cfg=cfg)
+
+            fn = self._jit_step(
+                cfn, donate=(0,),
+                in_sh=(self._store_sh,) + (rep,) * 8,
+                out_sh=(self._store_sh, rep))
+            self._spec_commit_fn = fn
         return fn
 
     # -- sharding sanity ---------------------------------------------------
@@ -910,9 +1067,13 @@ class ContinuousBatchingEngine:
         replicated; KV is head-sharded)."""
         with set_policy(self.policy):
             if self.kv_mode == "paged":
+                if self.spec_k:
+                    return self._run_paged_spec(rng)
                 if self.decode_steps > 1:
                     return self._run_paged_fused(rng)
                 return self._run_paged(rng)
+            if self.spec_k:
+                return self._run_dense_spec(rng)
             if self.decode_steps > 1:
                 return self._run_dense_fused(rng)
             return self._run_dense(rng)
@@ -1742,6 +1903,15 @@ class ContinuousBatchingEngine:
         stats.epoch_shrinks = int(m.value("epoch_shrinks_total"))
         stats.snapshots = int(m.value("snapshots_total"))
         stats.resumes = int(m.value("resumes_total"))
+        stats.spec_windows = int(m.value("spec_windows_total"))
+        stats.spec_tokens_drafted = int(m.value("spec_tokens_drafted_total"))
+        stats.spec_tokens_accepted = int(
+            m.value("spec_tokens_accepted_total"))
+        stats.spec_entries_rolled_back = int(
+            m.value("spec_entries_rolled_back_total"))
+        if stats.spec_tokens_drafted:
+            stats.spec_acceptance_rate = (stats.spec_tokens_accepted
+                                          / stats.spec_tokens_drafted)
         stats.attn_keep_frac = (rs.keep_acc / rs.keep_n if rs.keep_n
                                 else 1.0)
         tot_dense = sum(r.kv_dense for r in results.values())
@@ -1935,6 +2105,519 @@ class ContinuousBatchingEngine:
                         self._finish(rs, slot, reason)
                 self._record_step_series(rs, lay)
             rs.step_idx += 1
+            rs.disp_idx += 1
+            self._poll_compiles(rs)
+            tr.end()                      # step
+
+        m.inc("host_seconds_total",
+              (perf_counter() - t_loop) - m.value("device_seconds_total"))
+        return self._finalize(rs)
+
+    # -- speculative decoding (spec_k > 0; docs/speculative.md) ------------
+    def _window_gamma(self) -> int:
+        """Draft length for this window, clamped so (a) every active
+        slot can hold the window's C = γ+1 KV writes within ``max_len``
+        (a verify write past the last row would clamp back onto
+        committed rows) and (b) the window is not all waste when every
+        resident is nearly out of generation budget.  0 = verify-only:
+        a C=1 window, i.e. exactly one plain decode step."""
+        g = self.spec_k
+        rem_max = 1
+        for st in self.scheduler.active.values():
+            g = min(g, self.max_len - st.pos - 1)
+            rem_max = max(rem_max,
+                          st.req.max_new_tokens - len(st.out_tokens))
+        return max(0, min(g, rem_max - 1))
+
+    def _override_drafts(self, feed: np.ndarray, dout) -> jnp.ndarray:
+        """Apply the ``draft_override`` test hook: sync the draft
+        tokens, let the hook rewrite each active slot's proposals, and
+        rebuild the verify feed host-side (the extra sync is the hook's
+        cost — it exists for forcing accept/reject patterns in tests,
+        not for serving)."""
+        d = np.asarray(dout["tokens"]).T.copy()              # [S, γ]
+        for slot, st in self.scheduler.active.items():
+            d[slot] = np.asarray(
+                self.draft_override(st.req.uid, d[slot].copy()),
+                np.int32)
+        return jnp.asarray(np.concatenate([feed[:, None], d], axis=1))
+
+    def _accept_windows(self, rs: _RunState, cur: List[int], gamma: int,
+                        drafts: np.ndarray, tgt: np.ndarray,
+                        vlog: Optional[np.ndarray],
+                        dlog: Optional[np.ndarray]):
+        """Host acceptance for one window.  Returns ({slot: emitted
+        tokens (pre-truncation)}, {slot: accepted draft count}).
+        Temperature 0 takes the greedy prefix-match path (the chain is
+        then bit-identical to plain greedy decoding by induction);
+        temperature > 0 runs the exact accept/resample test per slot
+        with uniforms drawn from the run's rng stream, preserving the
+        per-token emission distribution (serve/sampling.py)."""
+        emitted: Dict[int, List[int]] = {}
+        accepted: Dict[int, int] = {}
+        if self.temperature <= 0.0:
+            acc, corr = sampling_mod.greedy_verify(tgt, drafts)
+            for slot in cur:
+                a = int(acc[slot])
+                emitted[slot] = ([int(x) for x in drafts[slot, :a]]
+                                 + [int(corr[slot])])
+                accepted[slot] = a
+            return emitted, accepted
+        S = drafts.shape[0]
+        rs.rng, ka, kf = jax.random.split(rs.rng, 3)
+        u_acc = np.asarray(jax.random.uniform(ka, (S, max(gamma, 1))),
+                           np.float64)
+        u_fin = np.asarray(jax.random.uniform(kf, (S, gamma + 1)),
+                           np.float64)
+        p_t = sampling_mod.softmax_probs(vlog, self.temperature)
+        p_d = (sampling_mod.softmax_probs(dlog, self.temperature)
+               if gamma else None)
+        for slot in cur:
+            if gamma:
+                a, toks = sampling_mod.speculative_accept_window(
+                    drafts[slot], p_d[slot], p_t[slot], u_acc[slot],
+                    u_fin[slot])
+            else:
+                a, toks = 0, [sampling_mod.inverse_cdf_sample(
+                    p_t[slot, 0], float(u_fin[slot, 0]))]
+            emitted[slot] = toks
+            accepted[slot] = a
+        return emitted, accepted
+
+    def _plan_emission(self, st: ActiveRequest,
+                       toks: List[int]) -> List[int]:
+        """Truncate a window's emitted tokens to what ``_advance_slot``
+        will actually append — stop token, generation budget and pool
+        ``max_len`` all end the request mid-window.  The paged engine
+        commits exactly this many verify columns (the emitted chain's
+        KV minus the final token, whose KV is written when it is fed as
+        the next window's first column — the plain engine's fill
+        trajectory, entry for entry)."""
+        keep: List[int] = []
+        for tok in toks:
+            keep.append(tok)
+            if st.req.stop_token is not None and tok == st.req.stop_token:
+                break
+            if len(st.out_tokens) + len(keep) >= st.req.max_new_tokens:
+                break
+            if st.pos + len(keep) >= self.max_len:
+                break
+        return keep
+
+    def _spec_bookkeep(self, rs: _RunState, cur: List[int], gamma: int,
+                       plan_emit: Dict[int, List[int]],
+                       accepted: Dict[int, int], gates: np.ndarray,
+                       window_s: float, t0: float, now: float,
+                       n_layers: int, measure: bool,
+                       per_tok=None) -> int:
+        """Walk each slot's (truncated) emission in token order, applying
+        exactly the per-token accounting the plain loops do — emitted
+        token i pairs with verify gate column i, the gates of processing
+        the token that *produced* it, matching the single-step engines'
+        (token, gate) pairing.  ``per_tok`` is the paged hook (allocator
+        append + history replay).  Returns the longest emission (the
+        window's step-equivalent count)."""
+        m, tr, sched = rs.metrics, self.tracer, self.scheduler
+        m.inc("spec_windows_total")
+        max_emit = 1
+        t0u = t1u = None
+        if tr.enabled:
+            t0u, t1u = tr.to_us(t0), tr.to_us(now)
+        lay_sum, lay_n = None, 0
+        for slot in cur:
+            st = sched.active[slot]
+            keep = plan_emit[slot]
+            a = accepted[slot]
+            tid = request_tid(st.req.uid)
+            if gamma:
+                m.inc("spec_tokens_drafted_total", gamma)
+                m.inc("spec_tokens_accepted_total", a)
+                m.observe("spec_acceptance_rate", a / gamma)
+            tr.instant("accept", tid, drafted=gamma, accepted=a,
+                       emitted=len(keep))
+            if tr.enabled:
+                tr.span_at(f"decode[{rs.disp_idx}]", tid, t0u, t1u,
+                           tokens=len(keep))
+            share = window_s / len(keep)
+            max_emit = max(max_emit, len(keep))
+            reason = None
+            for i, tok in enumerate(keep):
+                g = gates[:, slot, i] if gates is not None else None
+                if g is not None:
+                    rs.keep_acc += float(g.sum())
+                    rs.keep_n += n_layers
+                if per_tok is not None:
+                    per_tok(slot, g)
+                reason = self._advance_slot(rs, st, int(tok), g, share,
+                                            measure, n_layers)
+                if reason and i != len(keep) - 1:
+                    raise RuntimeError(
+                        f"speculative window divergence on slot {slot}: "
+                        f"_advance_slot finished ({reason!r}) at emitted "
+                        f"token {i} but _plan_emission kept {len(keep)} "
+                        "— the truncation rules no longer mirror the "
+                        "finish conditions")
+            if gates is not None:
+                win = gates[:, slot, :len(keep)].sum(axis=1)
+                lay_sum = win if lay_sum is None else lay_sum + win
+                lay_n += len(keep)
+            if reason:
+                self._finish(rs, slot, reason)
+        self._record_step_series(
+            rs, lay_sum / lay_n if lay_n else None)
+        return max_emit
+
+    def _run_dense_spec(self, rng: Optional[jax.Array] = None
+                        ) -> Dict[str, object]:
+        """Dense-pool speculative loop (``spec_k > 0``).
+
+        Per iteration: admission/prefill exactly as ``_run_dense``, then
+        ONE draft+verify window instead of a single decode step: (1) a
+        γ-step draft loop under ``draft_params`` proposes tokens (KV
+        writes tentative); (2) one ``verify_chunk`` dispatch runs the
+        full model over [feed, drafts], rewriting every window row with
+        the verifier's KV — dense rollback is free, rows beyond the
+        accepted prefix stay dead until ``kv_valid_len`` reaches them
+        and the next window overwrites them first; (3) a single sync
+        pulls drafts, per-column verify argmax and gates; (4) the host
+        accept/resample emits accepted prefix + correction per slot.
+        Two dispatches per window, up to spec_k+1 tokens per slot;
+        temperature-0 token output is bit-identical to ``_run_dense``."""
+        cfg = self.cfg
+        sched = self.scheduler
+        rs = self._new_run_state(rng, paged=False)
+        m, tr = rs.metrics, self.tracer
+        L_attn = max(len(cfg.attention_layers), 1)
+        measure = cfg.skip.enabled and cfg.skip.kv_reuse
+
+        pool = init_pool(cfg, self.max_slots, self.max_len)
+        if self.policy is not None:
+            pool = jax.device_put(pool, self._pool_sh)
+        pool = self._apply_resume(rs, pool)
+        feed = np.zeros((self.max_slots,), np.int32)
+        pos = np.zeros((self.max_slots,), np.int32)
+        t_loop = perf_counter()
+
+        while sched.has_work():
+            self._boundary(rs, pool)
+            if not sched.has_work():      # lifecycle sweep drained the run
+                break
+            tr.begin("step", idx=rs.disp_idx)
+            self._step_gauges(rs)
+            pre_active = bool(sched.active)
+            did_prefill = False
+            while True:
+                with tr.span("plan"):
+                    plan = sched.plan_step(token_budget=self.step_tokens)
+                self._note_admission(rs)
+                if plan.prefill is None:
+                    break
+                with tr.span("prefill"):
+                    pool = self._prefill_work_dense(rs, plan.prefill, pool)
+                did_prefill = True
+                if self.prefill_chunk:
+                    break
+            if did_prefill and pre_active:
+                m.inc("interleaved_steps_total")
+
+            if not sched.active:
+                self._poll_compiles(rs)
+                tr.end()                  # step
+                continue
+
+            # -- one draft+verify window over the whole pool ---------------
+            cur = sorted(sched.active)
+            for slot in cur:
+                st = sched.active[slot]
+                feed[slot] = st.next_token
+                pos[slot] = st.pos
+            gamma = self._window_gamma()
+            t0 = perf_counter()
+            try:
+                feed_dev = jnp.asarray(feed)
+                pos_dev = jnp.asarray(pos)
+                dout = None
+                with tr.span("draft", k=gamma), tr.annotate("spec_draft"):
+                    self._fault_dispatch(rs)
+                    if gamma:
+                        pool, dout = self._spec_draft(gamma)(
+                            self.draft_params, pool, feed_dev, pos_dev,
+                            rs.rng)
+                        rs.rng = dout["rng"]
+                        feed_chunk = jnp.concatenate(
+                            [feed_dev[:, None], dout["tokens"].T], axis=1)
+                        if self.draft_override is not None:
+                            feed_chunk = self._override_drafts(feed, dout)
+                    else:
+                        feed_chunk = feed_dev[:, None]
+                with tr.span("verify", k=gamma), tr.annotate("spec_verify"):
+                    tgt_dev, vlog_dev, pool, vstats = self._spec_verify()(
+                        self.params, pool, {"tokens": feed_chunk}, pos_dev)
+            except FaultInjected:
+                # raised before the jitted calls: pool untouched — abandon
+                # the window and re-plan (see _run_dense)
+                m.inc("dispatch_retries_total")
+                self._poll_compiles(rs)
+                tr.end()                  # step
+                continue
+            m.inc("decode_dispatches_total", 2 if gamma else 1)
+            t_sync = perf_counter()
+            with tr.span("sync"):
+                self._fault_stall(rs)
+                tgt = np.asarray(tgt_dev)                     # [S, C]
+                drafts = np.asarray(feed_chunk[:, 1:])        # [S, γ]
+                gates = (np.asarray(vstats["attn_gate"], np.float32)
+                         if vstats.get("attn_gate") is not None else None)
+                dlog = (np.asarray(dout["logits"]).transpose(1, 0, 2)
+                        if (gamma and self.temperature > 0.0) else None)
+                vlog = (np.asarray(vlog_dev)
+                        if self.temperature > 0.0 else None)
+            now = perf_counter()
+            m.inc("device_seconds_total", now - t_sync)
+            window_s = now - t0
+            m.inc("decode_seconds_total", window_s)
+            m.observe("step_seconds", window_s)
+            self._watch(rs, "decode_window", window_s)
+
+            with tr.span("bookkeep"):
+                emitted, accepted = self._accept_windows(
+                    rs, cur, gamma, drafts, tgt, vlog, dlog)
+                plan_emit = {
+                    s: self._plan_emission(sched.active[s], emitted[s])
+                    for s in cur}
+                max_emit = self._spec_bookkeep(
+                    rs, cur, gamma, plan_emit, accepted, gates,
+                    window_s, t0, now, L_attn, measure)
+            rs.step_idx += max_emit
+            rs.disp_idx += 1
+            self._poll_compiles(rs)
+            tr.end()                      # step
+
+        m.inc("host_seconds_total",
+              (perf_counter() - t_loop) - m.value("device_seconds_total"))
+        return self._finalize(rs)
+
+    def _ensure_window(self, rs: _RunState, gamma: int,
+                       hidden: List[int]) -> None:
+        """Grow every active slot's page chain to the speculative
+        window's worst case (fill + (γ+1)·n_attn entries) BEFORE the
+        block table is snapshotted — device-side appends past the
+        ensured chain would read block-table zeros and scatter into
+        physical page 0, corrupting another slot's committed entries.
+        Preempt-youngest backpressure mirrors ``_run_paged``'s per-step
+        headroom pass; ``hidden`` is the oom-fault seam's page list,
+        returned to the pool in place when it is the only way out."""
+        alloc, sched = self.allocator, self.scheduler
+        need_per = (gamma + 1) * self.n_attn
+        for slot in sorted(sched.active):
+            if slot not in sched.active:          # preempted below
+                continue
+            while not alloc.ensure(slot,
+                                   int(alloc.fill[slot]) + need_per):
+                if not self._preempt_youngest(rs, exclude=slot):
+                    if hidden:
+                        alloc.unhide_pages(hidden)
+                        hidden.clear()
+                        continue
+                    raise PageExhausted(
+                        f"page pool exhausted with a single resident "
+                        f"request (slot {slot}) — submit() should have "
+                        "rejected it", slot=slot,
+                        free_pages=alloc.free_pages,
+                        pages_total=self.num_pages)
+
+    def _run_paged_spec(self, rng: Optional[jax.Array] = None
+                        ) -> Dict[str, object]:
+        """Paged-store speculative loop: ``_run_dense_spec``'s twin with
+        the tentative-commit KV protocol (docs/speculative.md).
+
+        Window anatomy: (1) resident window headroom is page-reserved
+        up front (``_ensure_window``) — before admission, so
+        ``_can_place`` sees the free list net of the residents' window,
+        and again after admission so a newly activated request is
+        covered too; (2) the draft loop appends *tentative* entries
+        past the pre-window fill; (3) the verifier reads the committed
+        prefix only (``in_fill`` masks at the pre-window fill) and
+        returns every window column's full-model KV; (4) after the
+        single sync and host acceptance, ``commit_verified`` rewrites
+        the stream from the pre-window fill with exactly the emitted
+        columns — in plain-engine token-major order — while the host
+        replays the allocator/history accounting per emitted token and
+        ``trim`` returns the rejected tail's pages.  Zero leaked pages,
+        zero stale tentative entries (test_speculative.py pins both)."""
+        cfg = self.cfg
+        sched = self.scheduler
+        alloc = self.allocator
+        nA = self.n_attn
+        reuse = paged_mod.reuse_enabled(cfg)
+        measure = cfg.skip.enabled and cfg.skip.kv_reuse
+        rs = self._new_run_state(rng, paged=True)
+        m, tr = rs.metrics, self.tracer
+
+        store = paged_mod.init_store(cfg, self.num_pages, self.page_size)
+        if self.policy is not None:
+            store = jax.device_put(store, self._store_sh)
+        store = self._apply_resume(rs, store)
+        feed = np.zeros((self.max_slots,), np.int32)
+        pos = np.zeros((self.max_slots,), np.int32)
+        act = np.zeros((self.max_slots,), bool)
+        t_loop = perf_counter()
+
+        def per_tok(slot, g):
+            fresh_n = int(1 + (g[1:] > 0.5).sum()) if reuse else nA
+            alloc.append(slot, fresh_n, nA)
+            rs.hist.on_decode_step(slot, g)
+
+        while sched.has_work():
+            self._boundary(rs, store)
+            if not sched.has_work():      # lifecycle sweep drained the run
+                break
+            tr.begin("step", idx=rs.disp_idx)
+            self._step_gauges(rs)
+            # -- resident window headroom before admission (_can_place
+            # must see the free list net of what residents need)
+            hidden = self._fault_oom(rs)
+            gamma = self._window_gamma() if sched.active else 0
+            with tr.span("headroom"):
+                self._ensure_window(rs, gamma, hidden)
+
+            pre_active = bool(sched.active)
+            with tr.span("plan"):
+                plan = sched.plan_step(can_place=self._can_place,
+                                       token_budget=self.step_tokens)
+            self._note_admission(rs)
+            pf = sched.prefilling
+            if (pf is not None and pf.done == 0
+                    and (self.prefill_chunk
+                         or self.step_tokens is not None)):
+                if not alloc.ensure(pf.slot,
+                                    pf.req.prompt_len * nA + nA):
+                    raise RuntimeError(
+                        "worst-case page reservation failed in the same "
+                        "iteration as a successful _can_place admission "
+                        "check — allocator bug")
+            if plan.prefill is not None:
+                with tr.span("prefill"):
+                    store = self._prefill_work_paged(rs, plan.prefill,
+                                                     store)
+                if pre_active:
+                    m.inc("interleaved_steps_total")
+
+            if not sched.active:
+                if hidden:
+                    alloc.unhide_pages(hidden)
+                self._poll_compiles(rs)
+                tr.end()                  # step
+                continue
+
+            # -- final headroom pass: covers a request activated by this
+            # iteration's prefill (idempotent for the residents), at the
+            # final γ — which the newcomer's position may have clamped
+            gamma = self._window_gamma()
+            with tr.span("headroom"):
+                self._ensure_window(rs, gamma, hidden)
+            if hidden:
+                alloc.unhide_pages(hidden)
+
+            # -- one draft+verify window over the live chains --------------
+            cur = sorted(sched.active)
+            for slot in cur:
+                st = sched.active[slot]
+                feed[slot] = st.next_token
+                pos[slot] = st.pos
+            act[:] = False
+            act[cur] = True
+            fill0 = alloc.fill.copy()
+            j_live = max(1, alloc.max_chain_pages())
+            j_step = min(1 << (j_live - 1).bit_length(),
+                         alloc.pages_per_slot)
+            bt = jnp.asarray(alloc.block_table[:, :j_step])
+            fill_dev = jnp.asarray(fill0)
+            t0 = perf_counter()
+            try:
+                feed_dev = jnp.asarray(feed)
+                pos_dev = jnp.asarray(pos)
+                dout = None
+                with tr.span("draft", k=gamma), tr.annotate("spec_draft"):
+                    self._fault_dispatch(rs)
+                    if gamma:
+                        store, dout = self._spec_draft(gamma)(
+                            self.draft_params, store, feed_dev, pos_dev,
+                            fill_dev, jnp.asarray(act), rs.rng, bt)
+                        rs.rng = dout["rng"]
+                        feed_chunk = jnp.concatenate(
+                            [feed_dev[:, None], dout["tokens"].T], axis=1)
+                        if self.draft_override is not None:
+                            feed_chunk = self._override_drafts(feed, dout)
+                    else:
+                        feed_chunk = feed_dev[:, None]
+                with tr.span("verify", k=gamma), tr.annotate("spec_verify"):
+                    tgt_dev, vlog_dev, vstats = self._spec_verify()(
+                        self.params, store, {"tokens": feed_chunk},
+                        pos_dev, bt, fill_dev)
+            except FaultInjected:
+                # raised before the jitted calls: store and allocator
+                # untouched beyond idempotent reservations — abandon the
+                # window and re-plan (see _run_dense)
+                m.inc("dispatch_retries_total")
+                self._poll_compiles(rs)
+                tr.end()                  # step
+                continue
+            m.inc("decode_dispatches_total", 2 if gamma else 1)
+            t_sync = perf_counter()
+            with tr.span("sync"):
+                self._fault_stall(rs)
+                tgt = np.asarray(tgt_dev)                     # [S, C]
+                drafts = np.asarray(feed_chunk[:, 1:])        # [S, γ]
+                gates = np.asarray(vstats["attn_gate"], np.float32)
+                dfill = (np.asarray(dout["fill"]) if gamma
+                         else fill0)
+                dlog = (np.asarray(dout["logits"]).transpose(1, 0, 2)
+                        if (gamma and self.temperature > 0.0) else None)
+                vlog = (np.asarray(vlog_dev)
+                        if self.temperature > 0.0 else None)
+            now = perf_counter()
+            m.inc("device_seconds_total", now - t_sync)
+            window_s = now - t0
+            m.inc("decode_seconds_total", window_s)
+            m.observe("step_seconds", window_s)
+            self._watch(rs, "decode_window", window_s)
+
+            with tr.span("bookkeep"):
+                emitted, accepted = self._accept_windows(
+                    rs, cur, gamma, drafts, tgt, vlog, dlog)
+                plan_emit = {
+                    s: self._plan_emission(sched.active[s], emitted[s])
+                    for s in cur}
+            with tr.span("rollback", k=gamma):
+                committed = np.zeros((self.max_slots,), np.int32)
+                for s in cur:
+                    committed[s] = len(plan_emit[s])
+                bk, bv = vstats["kv_token"]
+                store, _ = self._spec_commit()(
+                    store, bk, bv, vstats["attn_gate"], pos_dev, bt,
+                    fill_dev, jnp.asarray(committed), jnp.asarray(act))
+                # rolled back = tentative draft entries the commit does
+                # not cover (the draft's fresh counts come from the
+                # *draft* gates, the commit's from the verifier's — with
+                # full acceptance under an unbiased draft the rewrite
+                # covers everything and this is 0)
+                rolled = 0
+                for s in cur:
+                    cf = int(fill0[s])
+                    for i in range(len(plan_emit[s])):
+                        g = gates[:, s, i]
+                        cf += (int(1 + (g[1:] > 0.5).sum())
+                               if reuse else nA)
+                    rolled += max(0, int(dfill[s]) - cf)
+                m.inc("spec_entries_rolled_back_total", rolled)
+                max_emit = self._spec_bookkeep(
+                    rs, cur, gamma, plan_emit, accepted, gates,
+                    window_s, t0, now, nA, measure, per_tok=per_tok)
+                for slot in cur:
+                    if slot in sched.active:
+                        alloc.trim(slot)
+            rs.step_idx += max_emit
             rs.disp_idx += 1
             self._poll_compiles(rs)
             tr.end()                      # step

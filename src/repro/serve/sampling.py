@@ -1,8 +1,18 @@
-"""Token sampling."""
+"""Token sampling — plain per-step sampling plus the speculative-decoding
+accept/resample primitives (docs/speculative.md).
+
+The speculative helpers are deliberately *pure numpy on the host*: the
+engine computes acceptance once per window after its single sync, and the
+property tests fuzz the exact same functions against the analytic
+distribution oracle (``emitted_distribution``) with no device in the loop.
+"""
 from __future__ import annotations
+
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def sample(logits: jnp.ndarray, rng, temperature: float = 0.0,
@@ -25,3 +35,111 @@ def split_sample(logits: jnp.ndarray, rng, temperature: float = 0.0,
     sample.  Returns (new_rng, tokens [B] int32)."""
     rng, sub = jax.random.split(rng)
     return rng, sample(logits, sub, temperature, top_k)
+
+
+# -- speculative decoding: accept / resample (host-side, numpy) -----------
+#
+# One verify window feeds C = k+1 tokens [f0, d_1..d_k] at positions
+# t..t+k; column j of the verifier's logits is the target model's
+# response to the prefix ending in the j-th fed token, so draft d_{j+1}
+# is judged against column j and the correction after accepting ``a``
+# drafts comes from column ``a``.
+
+def greedy_verify(target_tokens: np.ndarray, draft_tokens: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Greedy (temperature-0) window acceptance.
+
+    target_tokens: [B, k+1] — per-column argmax of the verify logits.
+    draft_tokens:  [B, k]   — the draft loop's proposals.
+    Returns (accepted [B] int, correction [B] int32): ``accepted[b]`` is
+    the length of the longest prefix of drafts matching the verifier's
+    argmax chain, and ``correction[b] = target_tokens[b, accepted[b]]``
+    is the bonus/correction token — so every window emits
+    ``accepted + 1`` tokens and the emitted chain is exactly what plain
+    greedy decoding would have produced (induction on the prefix)."""
+    target_tokens = np.asarray(target_tokens)
+    draft_tokens = np.asarray(draft_tokens)
+    match = draft_tokens == target_tokens[:, :-1]
+    accepted = np.cumprod(match, axis=1).sum(axis=1).astype(np.int64)
+    correction = np.take_along_axis(
+        target_tokens, accepted[:, None], axis=1)[:, 0].astype(np.int32)
+    return accepted, correction
+
+
+def softmax_probs(logits: np.ndarray, temperature: float) -> np.ndarray:
+    """Numerically stable host softmax over the last axis at the given
+    temperature (> 0), in float64 so the exactness oracle holds tight."""
+    z = np.asarray(logits, np.float64) / float(temperature)
+    z -= z.max(axis=-1, keepdims=True)
+    e = np.exp(z)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def residual_distribution(p_draft: np.ndarray, p_target: np.ndarray
+                          ) -> np.ndarray:
+    """Rejection-path distribution ``norm(max(0, p_target - p_draft))``.
+    Degenerate case (p_draft ≥ p_target everywhere, zero residual mass —
+    only possible when the distributions coincide) falls back to
+    ``p_target``, which is the correct limit."""
+    res = np.maximum(np.asarray(p_target, np.float64)
+                     - np.asarray(p_draft, np.float64), 0.0)
+    s = res.sum(axis=-1, keepdims=True)
+    safe = np.where(s > 0.0, res / np.where(s == 0.0, 1.0, s), p_target)
+    return safe
+
+
+def emitted_distribution(p_draft: np.ndarray, p_target: np.ndarray
+                         ) -> np.ndarray:
+    """Analytic marginal of the first emitted token under
+    accept-with-prob-min(1, pt/pd) + residual resample:
+
+        P(emit v) = min(pd[v], pt[v]) + (1 - Σ_u min(pd[u], pt[u])) · res[v]
+
+    The speculative-sampling identity says this equals ``p_target``
+    exactly — the oracle the Hypothesis fuzz asserts against."""
+    mn = np.minimum(np.asarray(p_draft, np.float64),
+                    np.asarray(p_target, np.float64))
+    res = residual_distribution(p_draft, p_target)
+    return mn + (1.0 - mn.sum(axis=-1, keepdims=True)) * res
+
+
+def inverse_cdf_sample(p: np.ndarray, u: float) -> int:
+    """Deterministic categorical draw: smallest index whose CDF exceeds
+    ``u`` (ties broken low, u ∈ [0, 1))."""
+    cdf = np.cumsum(np.asarray(p, np.float64))
+    return int(np.searchsorted(cdf, u, side="right").clip(0, len(p) - 1))
+
+
+def speculative_accept_window(draft_tokens: np.ndarray,
+                              p_draft: np.ndarray,
+                              p_target: np.ndarray,
+                              u_accept: np.ndarray,
+                              u_final: np.ndarray
+                              ) -> Tuple[int, List[int]]:
+    """Stochastic (temperature > 0) window acceptance for ONE sequence.
+
+    draft_tokens: [k] — drafted tokens.
+    p_draft:      [k, V] — draft-model distribution each was drawn from.
+    p_target:     [k+1, V] — verifier distribution per column.
+    u_accept:     [k] uniforms for the accept tests.
+    u_final:      [k+1] uniforms — u_final[j] drives the resample after a
+                  rejection at draft j, u_final[k] the all-accept bonus.
+    Returns (n_accepted, emitted tokens).  Emitted-token marginals match
+    sampling every token from ``p_target`` directly (the identity
+    ``emitted_distribution`` pins down per position)."""
+    draft_tokens = np.asarray(draft_tokens)
+    k = draft_tokens.shape[0]
+    emitted: List[int] = []
+    for j in range(k):
+        d = int(draft_tokens[j])
+        pd = float(p_draft[j, d])
+        pt = float(p_target[j, d])
+        ratio = 1.0 if pd <= 0.0 else min(1.0, pt / pd)
+        if float(u_accept[j]) < ratio and pt > 0.0:
+            emitted.append(d)
+            continue
+        res = residual_distribution(p_draft[j], p_target[j])
+        emitted.append(inverse_cdf_sample(res, float(u_final[j])))
+        return j, emitted
+    emitted.append(inverse_cdf_sample(p_target[k], float(u_final[k])))
+    return k, emitted

@@ -141,6 +141,17 @@ def can_chunk_prefill(cfg: ModelConfig) -> bool:
     return can_bucket(cfg)
 
 
+def can_speculate(cfg: ModelConfig) -> bool:
+    """Self-speculative decoding exactness condition: the draft/verify
+    window reuses the chunked-prefill stack pass (``model.verify_chunk``
+    is ``prefill_chunk``'s all-columns sibling), so the chunk-exactness
+    condition must hold, and the dense verify path overwrites the pool's
+    window rows with a time-axis ``dynamic_update_slice`` that assumes
+    the ``bthd`` cache layout (head-major pools would need a transposed
+    write the chunk stack does not emit)."""
+    return can_chunk_prefill(cfg) and cfg.kv_cache_layout == "bthd"
+
+
 @dataclasses.dataclass
 class PrefillChunk:
     """One unit of prefill work handed to the engine by ``plan_step``.

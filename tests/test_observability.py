@@ -290,6 +290,77 @@ def test_trace_schema_valid(tmp_path, kv_mode, steps):
     assert trace_summary.main([str(path), "--json"]) == 0
 
 
+@pytest.mark.parametrize("kv_mode", ["dense", "paged"])
+def test_spec_trace_schema(tmp_path, kv_mode):
+    """Speculative runs must trace their window anatomy: draft/verify
+    (and, paged, rollback) spans nested under the step span, one
+    ``accept`` instant per slot-window on the request's track, and the
+    roll-up ``tools/trace_summary.py`` builds from those instants must
+    agree with the engine's own counters."""
+    cfg = _cfg()
+    path = tmp_path / "spec.json"
+    eng, out = _run_engine(cfg, _params(cfg), kv_mode=kv_mode,
+                           spec_k=4, trace=str(path))
+    st, m = out["stats"], out["metrics"]
+    events = trace_summary.load_events(str(path))
+    spans = trace_summary.pair_spans(events)     # raises if unbalanced
+
+    names = {s["name"] for s in spans[trace_summary.ENGINE_TID]}
+    assert {"draft", "verify"} <= names
+    if kv_mode == "paged":
+        assert "rollback" in names
+    for s in spans[trace_summary.ENGINE_TID]:
+        if s["name"] in ("draft", "verify", "rollback"):
+            assert s["depth"] >= 1               # inside its step span
+
+    # ServeStats is a derived view over the registry for spec counters too
+    assert st.spec_windows == int(m.value("spec_windows_total")) > 0
+    assert st.spec_tokens_drafted == \
+        int(m.value("spec_tokens_drafted_total"))
+    assert st.spec_tokens_accepted == \
+        int(m.value("spec_tokens_accepted_total"))
+    assert st.spec_entries_rolled_back == \
+        int(m.value("spec_entries_rolled_back_total"))
+
+    # accept instants: one per slot-window, each on a request track,
+    # totals matching the counters exactly
+    track = trace_summary.track_names(events)
+    accepts = [ev for ev in events
+               if ev.get("ph") == "i" and ev.get("name") == "accept"]
+    assert accepts
+    assert all(track.get(ev.get("tid", 0), "").startswith("req ")
+               for ev in accepts)
+    assert len(accepts) >= st.spec_windows
+    summary = trace_summary.summarize(events)
+    spec = summary["speculative"]
+    assert spec is not None
+    assert spec["windows"] == len(accepts)
+    assert spec["tokens_drafted"] == st.spec_tokens_drafted
+    assert spec["tokens_accepted"] == st.spec_tokens_accepted
+    assert spec["acceptance_rate"] == pytest.approx(st.spec_acceptance_rate)
+    # emitted tokens counted by the instants == decode tokens generated
+    # minus each request's first token (that one comes off the prefill
+    # logits, before any speculative window runs)
+    assert spec["tokens_emitted"] == \
+        st.decode_tokens - st.requests_completed
+    # the draft/verify phases are part of the accounted step breakdown
+    assert summary["phase_us"].get("draft", 0) > 0
+    assert summary["phase_us"].get("verify", 0) > 0
+    assert trace_summary.main([str(path), "--json"]) == 0
+
+
+def test_spec_trace_absent_without_speculation(tmp_path):
+    """A plain run must not emit speculative schema elements — the
+    summary's speculative section stays None."""
+    cfg = _cfg()
+    path = tmp_path / "plain.json"
+    _run_engine(cfg, _params(cfg), trace=str(path))
+    events = trace_summary.load_events(str(path))
+    assert not any(ev.get("name") == "accept" for ev in events
+                   if ev.get("ph") == "i")
+    assert trace_summary.summarize(events)["speculative"] is None
+
+
 def test_tracing_off_is_default_and_run_has_metrics():
     cfg = _cfg()
     eng, out = _run_engine(cfg, _params(cfg))

@@ -91,6 +91,15 @@ FLOORS = {
         ("meta.fault_storm.goodput_ratio", 0.85),
         ("meta.fault_storm.bit_identical", 1),
     ],
+    "speculative": [
+        # PR-9 headline: speculative decoding on acceptance-friendly
+        # traffic must beat plain decoding by >= 1.2x tok/s, and must
+        # NEVER buy that speed by changing tokens — temperature-0
+        # identity on both KV paths is a hard bool floor
+        ("meta.speculative.speedup", 1.2),
+        ("meta.speculative.temp0_identical", 1),
+        ("meta.speculative.paged_temp0_identical", 1),
+    ],
 }
 
 

@@ -8,14 +8,18 @@ Reports, from the span structure alone (no engine imports):
 
 * engine time-in-phase breakdown — how each run-loop iteration's wall
   time splits across plan / headroom / prefill / dispatch / sync /
-  bookkeep (the host-side anatomy of a step);
+  bookkeep, plus the speculative phases draft / verify / rollback
+  (the host-side anatomy of a step);
 * top-N slowest requests by wall time (queued → finish), with their
   queued/prefill time split and decode-epoch count;
 * preemption and recompile report: every ``preempt`` instant with its
   kind, and every ``compile`` instant with the step it landed in;
 * robustness report: injected faults, load sheds, cancellations,
   snapshots/resumes, watchdog strikes and epoch shrinks — the lifecycle
-  instants the fault-injection harness emits (docs/robustness.md).
+  instants the fault-injection harness emits (docs/robustness.md);
+* speculative-decoding report: per-window ``accept`` instants rolled up
+  into drafted/accepted/emitted token counts and the overall acceptance
+  rate (docs/speculative.md).
 
 ``--json`` prints the summary dict instead of the human table (what the
 schema test and CI consume).  Exit code is non-zero on malformed traces
@@ -89,7 +93,7 @@ def summarize(events: List[dict], top: int = 5) -> dict:
     step_us = sum(s["dur"] for s in steps)
     accounted = sum(d for n, d in phase_us.items() if n in
                     ("plan", "headroom", "prefill", "dispatch", "sync",
-                     "bookkeep"))
+                     "bookkeep", "draft", "verify", "rollback"))
     if step_us:
         phase_us["other"] = max(0.0, step_us - accounted)
 
@@ -137,6 +141,22 @@ def summarize(events: List[dict], top: int = 5) -> dict:
         if ev.get("ph") == "i" and ev.get("name") == "finish":
             finish_reasons[ev.get("args", {}).get("reason", "?")] += 1
 
+    # -- speculative decoding: per-window "accept" instants ----------------
+    accepts = [ev.get("args", {}) for ev in events
+               if ev.get("ph") == "i" and ev.get("name") == "accept"]
+    speculative = None
+    if accepts:
+        drafted = sum(int(a.get("drafted", 0)) for a in accepts)
+        accepted = sum(int(a.get("accepted", 0)) for a in accepts)
+        speculative = {
+            "windows": len(accepts),
+            "tokens_drafted": drafted,
+            "tokens_accepted": accepted,
+            "tokens_emitted": sum(int(a.get("emitted", 0))
+                                  for a in accepts),
+            "acceptance_rate": accepted / drafted if drafted else 0.0,
+        }
+
     return {
         "n_events": len(events),
         "n_steps": len(steps),
@@ -148,6 +168,7 @@ def summarize(events: List[dict], top: int = 5) -> dict:
         "compiles": compiles,
         "robustness": {k: v for k, v in robustness.items() if v},
         "finish_reasons": dict(finish_reasons),
+        "speculative": speculative,
     }
 
 
@@ -178,6 +199,12 @@ def print_summary(s: dict) -> None:
           f"{len(s['compiles'])} events")
     for c in s["compiles"]:
         print(f"  at {_fmt_us(c['ts'])}  +{c.get('n_new', 1)}")
+    spec = s.get("speculative")
+    if spec:
+        print(f"\nspeculative: {spec['windows']} windows · "
+              f"{spec['tokens_emitted']} emitted · acceptance "
+              f"{spec['acceptance_rate']:.1%} "
+              f"({spec['tokens_accepted']}/{spec['tokens_drafted']})")
     robust = s.get("robustness", {})
     if robust or s.get("finish_reasons"):
         counts = " · ".join(f"{k}={len(v)}" for k, v in robust.items())
