@@ -473,9 +473,17 @@ def routed_attention_decode_paged(p: Params, x: jnp.ndarray,
     q_pos = _q_index_positions(positions)
     if cfg.use_kernels:
         from repro.kernels import ops as kops
+        # quantized stores carry scale pages; the payload's head dim says
+        # int8 (full) vs nibble-packed int4 (halved)
+        kv_dtype = None
+        if "k_scales" in paged:
+            kv_dtype = ("int8" if paged["k_pages"].shape[-1] == q.shape[-1]
+                        else "int4")
         o = kops.paged_decode_attention(
             q, paged["k_pages"], paged["v_pages"], paged["block_table"],
-            eff_pos, k_t, v_t, q_positions=q_pos)
+            eff_pos, k_t, v_t, q_positions=q_pos,
+            k_scales=paged.get("k_scales"), v_scales=paged.get("v_scales"),
+            kv_dtype=kv_dtype)
     else:
         k_cat = jnp.concatenate(
             [paged["k"], k_t.astype(paged["k"].dtype)], axis=1)

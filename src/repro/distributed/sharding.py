@@ -312,6 +312,14 @@ class ShardingPolicy:
                     spec = (None, None, "model", None)
                 else:
                     spec = ("model", None, None, None)
+            elif name in ("k_scales", "v_scales"):
+                # quantized-page scales [P, page, Hkv]: ride the payload's
+                # sharding so code and scale for an entry-head pair stay
+                # on the same chip
+                if leaf.shape[2] % self.model_size == 0:
+                    spec = (None, None, "model")
+                else:
+                    spec = ("model", None, None)
             elif name in ("pos_pages", "l0_pages", "l1_pages"):
                 spec = (None,) * nd                   # replicated metadata
             elif name in ("k", "v"):

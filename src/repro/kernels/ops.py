@@ -79,7 +79,8 @@ def decode_attention(q, k, v, *, q_positions, window: int = 0,
 
 def paged_decode_attention(q, k_pages, v_pages, block_table, eff_pos,
                            k_tok, v_tok, *, q_positions,
-                           softmax_scale: Optional[float] = None
+                           softmax_scale: Optional[float] = None,
+                           k_scales=None, v_scales=None, kv_dtype=None
                            ) -> jnp.ndarray:
     """Single-token decode against the paged KV store.
 
@@ -89,8 +90,11 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, eff_pos,
     to the store only at end-of-step — is folded in here with one more
     online-softmax update.
 
-    q: [B, 1, Hq, dh]; k/v pages: [P, ps, Hkv, dh]; block_table: [B, J];
-    eff_pos: [B, J·ps]; k_tok/v_tok: [B, 1, Hkv, dh]; q_positions: [B, 1].
+    q: [B, 1, Hq, dh]; k/v pages: [P, ps, Hkv, dh] (int8 codes when
+    ``kv_dtype`` is set, with ``k_scales``/``v_scales`` [P, ps, Hkv]);
+    block_table: [B, J]; eff_pos: [B, J·ps]; k_tok/v_tok: [B, 1, Hkv, dh]
+    (always full precision — in-flight KV is quantized only at commit);
+    q_positions: [B, 1].
     """
     B, _, Hq, dh = q.shape
     P, ps, Hkv, _ = k_pages.shape
@@ -107,7 +111,8 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, eff_pos,
     acc, m, l = paged_attention_packed(
         qp, k_pages, v_pages, block_table.astype(jnp.int32),
         eff_pos.reshape(B, J, ps), pos.astype(jnp.int32),
-        scale=scale, interpret=_interpret())
+        scale=scale, interpret=_interpret(),
+        k_scales=k_scales, v_scales=v_scales, kv_dtype=kv_dtype)
 
     # fold in the current token (always causally valid: key pos == q pos)
     kt = k_tok.reshape(B, Hkv, dh)

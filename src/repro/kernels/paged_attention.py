@@ -31,9 +31,26 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1.0e30
 
 
+def _page_dequant(codes, scale, kv_dtype):
+    """codes [ps, dhp] int8 + scale [ps] -> f32 [ps, dh].  int4 payloads
+    pack dims d (low nibble) and d + dh//2 (high nibble) into byte d, so
+    the unpack is a concat along the head dim (kvcache/paged.py)."""
+    if kv_dtype == "int4":
+        c = codes.astype(jnp.int32)
+        lo = (c << 28) >> 28                  # arithmetic shifts sign-extend
+        hi = (c << 24) >> 28
+        codes = jnp.concatenate([lo, hi], axis=-1)
+    return codes.astype(jnp.float32) * scale[:, None]
+
+
 def _paged_kernel(bt_ref, qpos_ref, effpos_ref, q_ref, k_ref, v_ref,
-                  o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
-                  scale: float):
+                  *rest, scale: float, kv_dtype=None):
+    if kv_dtype is None:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        (ks_ref, vs_ref, o_ref, m_ref, l_ref,
+         m_scr, l_scr, acc_scr) = rest
     j = pl.program_id(1)
     nj = pl.num_programs(1)
 
@@ -44,7 +61,11 @@ def _paged_kernel(bt_ref, qpos_ref, effpos_ref, q_ref, k_ref, v_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0].astype(jnp.float32) * scale              # [R, dh]
-    k = k_ref[0, :, 0].astype(jnp.float32)                # [ps, dh]
+    k = k_ref[0, :, 0]                                    # [ps, dh(p)]
+    if kv_dtype is None:
+        k = k.astype(jnp.float32)
+    else:
+        k = _page_dequant(k, ks_ref[0, :, 0], kv_dtype)   # in-walk dequant
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # [R, ps]
 
@@ -57,7 +78,11 @@ def _paged_kernel(bt_ref, qpos_ref, effpos_ref, q_ref, k_ref, v_ref,
     p = jnp.exp(s - m_new)
     alpha = jnp.exp(m_prev - m_new)
     l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
-    v = v_ref[0, :, 0].astype(jnp.float32)                # [ps, dh]
+    v = v_ref[0, :, 0]                                    # [ps, dh(p)]
+    if kv_dtype is None:
+        v = v.astype(jnp.float32)
+    else:
+        v = _page_dequant(v, vs_ref[0, :, 0], kv_dtype)
     pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     acc_scr[...] = acc_scr[...] * alpha + pv
@@ -74,16 +99,25 @@ def _paged_kernel(bt_ref, qpos_ref, effpos_ref, q_ref, k_ref, v_ref,
 def paged_attention_packed(q: jnp.ndarray, k_pages: jnp.ndarray,
                            v_pages: jnp.ndarray, block_table: jnp.ndarray,
                            eff_pos: jnp.ndarray, q_pos: jnp.ndarray, *,
-                           scale: float, interpret: bool = False):
+                           scale: float, interpret: bool = False,
+                           k_scales=None, v_scales=None, kv_dtype=None):
     """q: [BH, R, dh]; k/v pages: [P, ps, Hkv, dh]; block_table: [B, J];
     eff_pos: [B, J, ps]; q_pos: [BH, R] (-1 = padded row).
+
+    With a quantized store (``kv_dtype`` "int8"/"int4"), pages hold int8
+    codes ([P, ps, Hkv, dh] or nibble-packed [P, ps, Hkv, dh//2]) and
+    ``k_scales``/``v_scales`` [P, ps, Hkv] ride the same block-table
+    index map — dequantization happens inside the page walk, so HBM
+    traffic is the code bytes, never the f32 rows.
 
     Returns the unnormalized online-softmax state over the paged history:
     (acc [BH, R, dh] f32, m [BH, R] f32, l [BH, R] f32)."""
     BH, R, dh = q.shape
-    P, ps, Hkv, _ = k_pages.shape
+    P, ps, Hkv, dhp = k_pages.shape
     B, J = block_table.shape
     assert BH == B * Hkv, (BH, B, Hkv)
+    assert (kv_dtype is None) == (k_scales is None), \
+        "quantized pages need kv_dtype AND scales"
 
     Rp = max(8, R)                       # sublane-friendly row count
     if Rp != R:
@@ -91,22 +125,32 @@ def paged_attention_packed(q: jnp.ndarray, k_pages: jnp.ndarray,
         q_pos = jnp.pad(q_pos, ((0, 0), (0, Rp - R)), constant_values=-1)
 
     grid = (BH, J)
-    kernel = functools.partial(_paged_kernel, scale=scale)
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               kv_dtype=kv_dtype)
+
+    def page_spec(width):
+        return pl.BlockSpec((1, ps, 1) + ((width,) if width else ()),
+                            (lambda b, j, bt: (bt[b // Hkv, j], 0, b % Hkv, 0)
+                             ) if width else
+                            (lambda b, j, bt: (bt[b // Hkv, j], 0, b % Hkv)))
+
+    in_specs = [
+        pl.BlockSpec((1, Rp), lambda b, j, bt: (b, 0)),          # q_pos
+        pl.BlockSpec((1, 1, ps),
+                     lambda b, j, bt: (b // Hkv, j, 0)),         # eff_pos
+        pl.BlockSpec((1, Rp, dh), lambda b, j, bt: (b, 0, 0)),   # q
+        page_spec(dhp),                                          # k page
+        page_spec(dhp),                                          # v page
+    ]
+    operands = [q_pos, eff_pos, q, k_pages, v_pages]
+    if kv_dtype is not None:
+        in_specs += [page_spec(0), page_spec(0)]                 # scales
+        operands += [k_scales, v_scales]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, Rp), lambda b, j, bt: (b, 0)),          # q_pos
-            pl.BlockSpec((1, 1, ps),
-                         lambda b, j, bt: (b // Hkv, j, 0)),         # eff_pos
-            pl.BlockSpec((1, Rp, dh), lambda b, j, bt: (b, 0, 0)),   # q
-            pl.BlockSpec((1, ps, 1, dh),
-                         lambda b, j, bt: (bt[b // Hkv, j], 0,
-                                           b % Hkv, 0)),             # k page
-            pl.BlockSpec((1, ps, 1, dh),
-                         lambda b, j, bt: (bt[b // Hkv, j], 0,
-                                           b % Hkv, 0)),             # v page
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, Rp, dh), lambda b, j, bt: (b, 0, 0)),
             pl.BlockSpec((1, Rp), lambda b, j, bt: (b, 0)),
@@ -127,5 +171,5 @@ def paged_attention_packed(q: jnp.ndarray, k_pages: jnp.ndarray,
             jax.ShapeDtypeStruct((BH, Rp), jnp.float32),
         ],
         interpret=interpret,
-    )(block_table, q_pos, eff_pos, q, k_pages, v_pages)
+    )(block_table, *operands)
     return acc[:, :R], m[:, :R], l[:, :R]

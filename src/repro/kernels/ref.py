@@ -45,21 +45,40 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return o.reshape(B, Tq, Hq, dh).astype(q.dtype)
 
 
+def _dequant_pages_ref(pages: jnp.ndarray, scales: jnp.ndarray,
+                       kv_dtype: str) -> jnp.ndarray:
+    """Exact dequant of int8/int4 page payloads (mirrors
+    ``kvcache.paged.dequantize_entries`` without importing it — the
+    oracle stays self-contained)."""
+    if kv_dtype == "int4":
+        c = pages.astype(jnp.int32)
+        pages = jnp.concatenate([(c << 28) >> 28, (c << 24) >> 28], axis=-1)
+    return pages.astype(jnp.float32) * scales[..., None]
+
+
 def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                         v_pages: jnp.ndarray, block_table: jnp.ndarray,
                         eff_pos: jnp.ndarray, k_tok: jnp.ndarray,
                         v_tok: jnp.ndarray, *, q_positions: jnp.ndarray,
-                        softmax_scale: Optional[float] = None) -> jnp.ndarray:
+                        softmax_scale: Optional[float] = None,
+                        k_scales=None, v_scales=None,
+                        kv_dtype=None) -> jnp.ndarray:
     """Paged decode-attention oracle: dense gather of each slot's page
     chain + the in-flight token, masked by effective position.
 
     q: [B, 1, Hq, dh]; k/v pages: [P, ps, Hkv, dh]; block_table: [B, J];
     eff_pos: [B, J·ps] (history-buffer validity, MASKED = int32 max);
-    k_tok/v_tok: [B, 1, Hkv, dh]; q_positions: [B, 1]."""
+    k_tok/v_tok: [B, 1, Hkv, dh]; q_positions: [B, 1].  With ``kv_dtype``
+    set, pages are int8/int4 codes and ``k_scales``/``v_scales``
+    [P, ps, Hkv] dequantize them up front (the whole-pool dequant the
+    kernel's in-walk dequant must match)."""
     B, _, Hq, dh = q.shape
     P, ps, Hkv, _ = k_pages.shape
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dh)
     G = Hq // Hkv
+    if kv_dtype is not None:
+        k_pages = _dequant_pages_ref(k_pages, k_scales, kv_dtype)
+        v_pages = _dequant_pages_ref(v_pages, v_scales, kv_dtype)
 
     def chain(pages):
         flat = pages[block_table.reshape(-1)]            # [B·J, ps, Hkv, dh]

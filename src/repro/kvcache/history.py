@@ -77,6 +77,28 @@ def effective_positions(pos: jnp.ndarray, l0: jnp.ndarray, l1: jnp.ndarray,
 # Host-side hit accounting
 # ---------------------------------------------------------------------------
 
+def host_fresh_mask(gates: np.ndarray, reuse: bool) -> np.ndarray:
+    """Numpy mirror of :func:`fresh_mask` for host-side bookkeeping:
+    [nA, ...] gate log -> bool mask of (layer, token) entries the compact
+    store physically writes."""
+    g = np.asarray(gates, np.float32) > 0.5
+    if not reuse:
+        return np.ones_like(g)
+    g[0] = True
+    return g
+
+
+def fresh_counts(gates: np.ndarray, valid_len: int, reuse: bool
+                 ) -> np.ndarray:
+    """[nA, T] prompt gate log -> per-layer fresh-entry counts over the
+    first ``valid_len`` tokens.  The single host-side freshness
+    definition shared by ``HistoryAccounting``, the paged prefill entry
+    accounting (``paged.prefill_entry_count``) and warm-prefix admission
+    (splitting a gate log at the shared-prefix boundary)."""
+    return host_fresh_mask(gates, reuse)[:, :valid_len].sum(
+        axis=1).astype(np.int64)
+
+
 class HistoryAccounting:
     """Per-layer history-buffer hit rates, fed from the live gate log.
 
@@ -96,17 +118,12 @@ class HistoryAccounting:
         self.reads = np.zeros((n_layers,), np.int64)
 
     def _fresh_of(self, gates: np.ndarray) -> np.ndarray:
-        g = (np.asarray(gates, np.float32) > 0.5)
-        if not self.reuse:
-            return np.ones_like(g)
-        g[0] = True
-        return g
+        return host_fresh_mask(gates, self.reuse)
 
     def on_prefill(self, slot: int, gates: np.ndarray, valid_len: int
                    ) -> None:
         """gates: [nA, T] prompt execution gates (may include padding)."""
-        f = self._fresh_of(gates)[:, :valid_len]
-        self._fresh[slot] = f.sum(axis=1)
+        self._fresh[slot] = fresh_counts(gates, valid_len, self.reuse)
         self._ctx[slot] = valid_len
         # prefill attention at layer a reads a triangular number of
         # entries; count the final-state reads only (decode is the regime

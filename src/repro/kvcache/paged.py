@@ -36,7 +36,7 @@ jitted step never allocates.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -45,6 +45,13 @@ from repro.configs.base import ATTN, ModelConfig
 from repro.kvcache import history
 
 Store = Dict[str, jnp.ndarray]
+
+# Quantized page payloads (ROADMAP item 3): per-entry-per-head scales in
+# the BFP power-of-two idiom of quant/int4.py.  "int4" packs two codes
+# per byte along the head dim: byte d holds dims d (low nibble) and
+# d + dh//2 (high nibble), so dequant is a concat, not an interleave.
+KV_DTYPES = (None, "int8", "int4")
+_QMAX = {"int8": 127.0, "int4": 7.0}
 
 
 def can_page(cfg: ModelConfig) -> bool:
@@ -89,7 +96,18 @@ class PageAllocator:
     ``max_len × n_attn_layers`` — every token fresh at every layer), fixing
     the block-table width ``J``.  Pages are allocated on demand as a slot's
     fill crosses page boundaries and returned to the free list wholesale on
-    eviction; a page is only ever owned by one slot at a time.
+    eviction.
+
+    **Prefix sharing** (refcounts): a page is *referenced* by every slot
+    chain it appears in plus every published prefix record pinning it
+    (``ref_pages``/``deref_pages``).  ``refcount[p]`` tracks the total; a
+    page returns to the free list only when its refcount drops to zero, so
+    ``release``/``trim`` can never reclaim a page another slot (or the
+    prefix cache) still reads — the copy-on-write discipline is that
+    shared pages are immutable and a slot's first divergent append always
+    lands in a private page (``alias_into`` only aliases *full* shared
+    pages; the partial boundary page is COW-copied via
+    ``copy_page_masked``).
     """
 
     def __init__(self, num_pages: int, page_size: int, max_slots: int,
@@ -105,6 +123,7 @@ class PageAllocator:
         self.block_table = np.zeros((max_slots, self.pages_per_slot),
                                     np.int32)
         self.fill = np.zeros((max_slots,), np.int32)
+        self.refcount = np.zeros((num_pages,), np.int32)
         self.stats = PageStats(pages_total=num_pages)
 
     # -- queries ------------------------------------------------------------
@@ -118,6 +137,11 @@ class PageAllocator:
 
     def pages_for(self, n_entries: int) -> int:
         return -(-n_entries // self.page_size)
+
+    def chain(self, slot: int) -> Tuple[int, ...]:
+        """``slot``'s current page chain, in stream order (a copy — the
+        prefix cache snapshots it at publish time)."""
+        return tuple(self._chains[slot])
 
     def max_chain_pages(self) -> int:
         """Longest allocated page chain — the live width of the stream
@@ -140,12 +164,63 @@ class PageAllocator:
         chain = self._chains[slot]
         while len(chain) * self.page_size < n_entries:
             page = self._free.pop()
+            self.refcount[page] = 1
             self.block_table[slot, len(chain)] = page
             chain.append(page)
         in_use = self.num_pages - len(self._free)
         self.stats.pages_in_use = in_use
         self.stats.pages_peak = max(self.stats.pages_peak, in_use)
         return True
+
+    def _drop_ref(self, page: int) -> bool:
+        """Drop one reference; return the page to the free list iff that
+        was the last one.  Returns True when the page was freed."""
+        self.refcount[page] -= 1
+        assert self.refcount[page] >= 0, f"page {page}: refcount underflow"
+        if self.refcount[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
+    def alias_into(self, slot: int, pages: Sequence[int]) -> None:
+        """Warm-prefix admission: extend ``slot``'s *empty* chain with
+        shared (fully-filled) pages — one new reference each.  The
+        caller then COW-copies the partial boundary page (if any) into a
+        private page via ``ensure`` + ``copy_page_masked`` and seeds the
+        fill with ``seed_fill``; all subsequent appends target entry
+        indices past the shared region, so shared pages are never
+        written."""
+        chain = self._chains[slot]
+        assert not chain and self.fill[slot] == 0, \
+            f"slot {slot}: alias_into needs an empty chain"
+        for page in pages:
+            assert self.refcount[page] > 0, \
+                f"page {page}: aliasing an unreferenced page"
+            self.refcount[page] += 1
+            self.block_table[slot, len(chain)] = page
+            chain.append(page)
+
+    def seed_fill(self, slot: int, n_entries: int) -> None:
+        """Adopt ``n_entries`` already-materialized entries (the shared
+        prefix) as ``slot``'s starting fill.  Deliberately *not* counted
+        in ``entries_appended`` — the whole point is that these entries
+        were never stored again."""
+        assert n_entries <= self.capacity(slot), (n_entries, slot)
+        self.fill[slot] = n_entries
+
+    def ref_pages(self, pages: Sequence[int]) -> None:
+        """Pin pages on behalf of a published prefix record."""
+        for page in pages:
+            assert self.refcount[page] > 0, \
+                f"page {page}: pinning an unreferenced page"
+            self.refcount[page] += 1
+
+    def deref_pages(self, pages: Sequence[int]) -> int:
+        """Drop a prefix record's pins; frees pages nobody else holds.
+        Returns the number of pages returned to the free list."""
+        freed = sum(1 for page in pages if self._drop_ref(page))
+        self.stats.pages_in_use = self.num_pages - len(self._free)
+        return freed
 
     def append(self, slot: int, n_entries: int, dense_entries: int) -> None:
         """Record ``n_entries`` committed writes (capacity must already be
@@ -183,10 +258,14 @@ class PageAllocator:
         self.stats.pages_in_use = self.num_pages - len(self._free)
 
     def release(self, slot: int) -> int:
-        """Evict: return every page of ``slot`` to the free list."""
+        """Evict: drop ``slot``'s reference on every page of its chain
+        (pages return to the free list only when nobody else — another
+        chain or a prefix-record pin — still references them).  Returns
+        the number of pages detached from the chain."""
         chain = self._chains[slot]
         n = len(chain)
-        self._free.extend(reversed(chain))
+        for page in reversed(chain):
+            self._drop_ref(page)
         chain.clear()
         self.block_table[slot] = 0
         self.fill[slot] = 0
@@ -201,17 +280,46 @@ class PageAllocator:
         pre-window fill and ``in_fill`` masks anything beyond — but the
         *pages* backing the rejected tail must come back to the free
         list, or every partially-accepted window leaks page headroom
-        until eviction.  Returns the number of pages freed."""
+        until eviction.  Shared pages never reach the tail (a slot's
+        fill never drops below its aliased-prefix entry count), and
+        ``_drop_ref`` would keep a still-referenced page off the free
+        list even if one did.  Returns the number of pages detached."""
         chain = self._chains[slot]
         keep = self.pages_for(int(self.fill[slot]))
         tail = chain[keep:]
         if not tail:
             return 0
         del chain[keep:]
-        self._free.extend(reversed(tail))
+        for page in reversed(tail):
+            self._drop_ref(page)
         self.block_table[slot, keep:keep + len(tail)] = 0
         self.stats.pages_in_use = self.num_pages - len(self._free)
         return len(tail)
+
+    def check_conservation(self, pinned: Optional[Dict[int, int]] = None
+                           ) -> None:
+        """Assert the refcount conservation invariant: every page is
+        either on the free list with refcount 0, or off it with refcount
+        equal to its chain-membership count plus its prefix-record pins
+        (``pinned``: page -> pin count).  Raises AssertionError on any
+        leak or double-free; cheap enough for tests and debug asserts."""
+        pinned = pinned or {}
+        expected = np.zeros((self.num_pages,), np.int64)
+        for chain in self._chains.values():
+            for page in chain:
+                expected[page] += 1
+        for page, n in pinned.items():
+            expected[page] += n
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list has duplicates"
+        for page in range(self.num_pages):
+            if page in free:
+                assert self.refcount[page] == 0 and expected[page] == 0, \
+                    f"page {page}: free but referenced"
+            else:
+                assert self.refcount[page] == expected[page] > 0, \
+                    (f"page {page}: refcount {self.refcount[page]} != "
+                     f"holders {expected[page]}")
 
     @property
     def saved_fraction(self) -> float:
@@ -227,33 +335,116 @@ class PageAllocator:
 # ---------------------------------------------------------------------------
 
 def init_store(cfg: ModelConfig, num_pages: int, page_size: int,
-               dtype=None) -> Store:
-    """Unified page pool shared by every slot and every attention layer."""
+               dtype=None, kv_dtype: Optional[str] = None) -> Store:
+    """Unified page pool shared by every slot and every attention layer.
+
+    ``kv_dtype`` selects the page payload format: None keeps full
+    ``cfg.dtype`` rows; "int8"/"int4" store fixed-point codes plus one
+    power-of-two scale per (entry, head) in ``k_scales``/``v_scales``
+    (the BFP idiom of quant/int4.py), dequantized during the block-table
+    walk."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                         f"got {kv_dtype!r}")
     dt = jnp.dtype(dtype or cfg.dtype)
     Hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
     P, ps = num_pages, page_size
-    return {
-        "k_pages": jnp.zeros((P, ps, Hkv, dh), dt),
-        "v_pages": jnp.zeros((P, ps, Hkv, dh), dt),
+    if kv_dtype == "int4" and dh % 2:
+        raise ValueError("int4 paged KV needs an even head_dim")
+    dh_payload = dh if kv_dtype != "int4" else dh // 2
+    kv_dt = dt if kv_dtype is None else jnp.int8
+    store = {
+        "k_pages": jnp.zeros((P, ps, Hkv, dh_payload), kv_dt),
+        "v_pages": jnp.zeros((P, ps, Hkv, dh_payload), kv_dt),
         # per-entry history metadata: token position + validity [l0, l1)
         "pos_pages": jnp.full((P, ps), history.MASKED_POS, jnp.int32),
         "l0_pages": jnp.zeros((P, ps), jnp.int32),
         "l1_pages": jnp.zeros((P, ps), jnp.int32),
     }
+    if kv_dtype is not None:
+        store["k_scales"] = jnp.ones((P, ps, Hkv), jnp.float32)
+        store["v_scales"] = jnp.ones((P, ps, Hkv), jnp.float32)
+    return store
+
+
+def infer_kv_dtype(store: Store, cfg: ModelConfig) -> Optional[str]:
+    """Recover the page payload format from the store's structure, so
+    downstream consumers (model steps, commit, gather) adapt without
+    threading a config flag: scales present + full head dim -> int8;
+    scales + halved head dim -> the nibble-packed int4 payload."""
+    if "k_scales" not in store:
+        return None
+    return ("int8" if store["k_pages"].shape[-1] == cfg.resolved_head_dim
+            else "int4")
+
+
+def quantize_entries(k: jnp.ndarray, v: jnp.ndarray, kv_dtype: str):
+    """[..., Hkv, dh] f32/bf16 KV rows -> (k_codes, v_codes, k_scale,
+    v_scale).  Scales are per (entry, head), power-of-two (BFP idiom:
+    exact-by-shift dequant on fixed-point hardware)."""
+    qmax = _QMAX[kv_dtype]
+
+    def quant(x):
+        x = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(x), axis=-1)                     # [..., Hkv]
+        scale = jnp.exp2(jnp.ceil(jnp.log2(
+            jnp.maximum(amax / qmax, 1e-12))))
+        scale = jnp.where(amax > 0, scale, 1.0)
+        codes = jnp.clip(jnp.round(x / scale[..., None]),
+                         -qmax, qmax).astype(jnp.int8)
+        if kv_dtype == "int4":
+            dh = codes.shape[-1]
+            lo = codes[..., :dh // 2] & 0x0F
+            hi = codes[..., dh // 2:] & 0x0F
+            codes = (lo | (hi << 4)).astype(jnp.int8)
+        return codes, scale
+
+    k_codes, k_scale = quant(k)
+    v_codes, v_scale = quant(v)
+    return k_codes, v_codes, k_scale, v_scale
+
+
+def dequantize_entries(codes: jnp.ndarray, scale: jnp.ndarray,
+                       kv_dtype: str) -> jnp.ndarray:
+    """Invert ``quantize_entries`` for one pool: codes [..., Hkv, dhp] +
+    scale [..., Hkv] -> f32 [..., Hkv, dh]."""
+    if kv_dtype == "int4":
+        c = codes.astype(jnp.int32)
+        lo = (c << 28) >> 28                      # sign-extend low nibble
+        hi = (c << 24) >> 28                      # sign-extend high nibble
+        codes = jnp.concatenate([lo, hi], axis=-1)
+    return codes.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
 
 
 def store_bytes(store: Store, data_only: bool = True) -> int:
-    keys = ("k_pages", "v_pages") if data_only else tuple(store)
+    if data_only:
+        keys = tuple(k for k in ("k_pages", "v_pages", "k_scales",
+                                 "v_scales") if k in store)
+    else:
+        keys = tuple(store)
     return sum(store[k].size * store[k].dtype.itemsize for k in keys)
 
 
+def entry_bytes(cfg: ModelConfig, kv_dtype: Optional[str] = None) -> int:
+    """Payload bytes one (token, layer) entry costs: K+V codes plus
+    scales.  The fp16/bf16 baseline is 2·Hkv·dh·itemsize."""
+    Hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    if kv_dtype is None:
+        return 2 * Hkv * dh * np.dtype(cfg.dtype).itemsize
+    per_head = dh if kv_dtype == "int8" else dh // 2
+    return 2 * Hkv * (per_head + 4)               # int8 codes + f32 scale
+
+
 def gather_view(store: Store, block_table: jnp.ndarray,
-                with_kv: bool = True) -> Dict[str, jnp.ndarray]:
+                with_kv: bool = True,
+                kv_dtype: Optional[str] = None) -> Dict[str, jnp.ndarray]:
     """Resolve each slot's page chain into logical entry order.
 
     block_table: [S, J] int32.  Returns arrays of shape [S, J·ps(, ...)]
     — the per-step read view (metadata always; K/V only on the jnp path,
-    the Pallas kernel walks the block table itself)."""
+    the Pallas kernel walks the block table itself).  With a quantized
+    store the K/V view is dequantized here (the jnp-path analogue of the
+    kernel's in-walk dequant)."""
     S, J = block_table.shape
     ps = store["pos_pages"].shape[1]
 
@@ -265,8 +456,14 @@ def gather_view(store: Store, block_table: jnp.ndarray,
            "l0": take(store["l0_pages"]),
            "l1": take(store["l1_pages"])}
     if with_kv:
-        out["k"] = take(store["k_pages"])
-        out["v"] = take(store["v_pages"])
+        if kv_dtype is None:
+            out["k"] = take(store["k_pages"])
+            out["v"] = take(store["v_pages"])
+        else:
+            out["k"] = dequantize_entries(take(store["k_pages"]),
+                                          take(store["k_scales"]), kv_dtype)
+            out["v"] = dequantize_entries(take(store["v_pages"]),
+                                          take(store["v_scales"]), kv_dtype)
     return out
 
 
@@ -284,23 +481,36 @@ def _flat_targets(block_table: jnp.ndarray, e: jnp.ndarray,
 
 
 def _scatter(store: Store, idx: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-             pos: jnp.ndarray, l0: jnp.ndarray, l1: jnp.ndarray) -> Store:
-    """Write entries at flat physical indices (OOB indices dropped)."""
-    P, ps, Hkv, dh = store["k_pages"].shape
+             pos: jnp.ndarray, l0: jnp.ndarray, l1: jnp.ndarray,
+             kv_dtype: Optional[str] = None) -> Store:
+    """Write entries at flat physical indices (OOB indices dropped).
+
+    The single write choke point: with a quantized store, full-precision
+    KV rows are quantized here and both the codes and the per-entry
+    scales land in one scatter."""
+    P, ps = store["pos_pages"].shape
     flat = idx.reshape(-1)
 
     def put(pages, vals):
         out = pages.reshape((P * ps,) + pages.shape[2:]).at[flat].set(
-            vals.reshape((-1,) + pages.shape[2:]), mode="drop")
+            vals.reshape((-1,) + pages.shape[2:]).astype(pages.dtype),
+            mode="drop")
         return out.reshape(pages.shape)
 
-    return {
-        "k_pages": put(store["k_pages"], k.astype(store["k_pages"].dtype)),
-        "v_pages": put(store["v_pages"], v.astype(store["v_pages"].dtype)),
-        "pos_pages": put(store["pos_pages"], pos),
-        "l0_pages": put(store["l0_pages"], l0),
-        "l1_pages": put(store["l1_pages"], l1),
-    }
+    out = dict(store)
+    if kv_dtype is None:
+        out["k_pages"] = put(store["k_pages"], k)
+        out["v_pages"] = put(store["v_pages"], v)
+    else:
+        kc, vc, k_sc, v_sc = quantize_entries(k, v, kv_dtype)
+        out["k_pages"] = put(store["k_pages"], kc)
+        out["v_pages"] = put(store["v_pages"], vc)
+        out["k_scales"] = put(store["k_scales"], k_sc)
+        out["v_scales"] = put(store["v_scales"], v_sc)
+    out["pos_pages"] = put(store["pos_pages"], pos)
+    out["l0_pages"] = put(store["l0_pages"], l0)
+    out["l1_pages"] = put(store["l1_pages"], l1)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -334,7 +544,8 @@ def prefill_views_from_cache(cache: Dict, cfg: ModelConfig) -> jnp.ndarray:
 
 def pack_prefill(store: Store, cache: Dict, gates: jnp.ndarray,
                  valid_len: jnp.ndarray, block_table: jnp.ndarray,
-                 cfg: ModelConfig) -> Store:
+                 cfg: ModelConfig, start_token=0, start_entry=0,
+                 kv_dtype: Optional[str] = None) -> Store:
     """Scatter one prefilled prompt's compact entries into its pages.
 
     gates: [nA, T] execution gates (T may include right-padding; tokens at
@@ -348,7 +559,12 @@ def pack_prefill(store: Store, cache: Dict, gates: jnp.ndarray,
     chunked-prefill staging cache (``model.init_chunk_cache``, padded to
     a chunk multiple) with ``gates`` as the concatenated per-chunk gate
     log — the packed entry stream is identical either way because both
-    the views and the gates are per-token state."""
+    the views and the gates are per-token state.
+
+    Warm-prefix admission packs only the cold suffix: ``start_token``
+    drops tokens below it (their entries are shared pages) and
+    ``start_entry`` offsets the stream so the suffix lands right after
+    the adopted prefix entries.  Both may be traced scalars."""
     k_views, v_views = prefill_views_from_cache(cache, cfg)
     nA, T = gates.shape
     # the cache may carry decode headroom (pad_to); entries only exist for
@@ -360,9 +576,11 @@ def pack_prefill(store: Store, cache: Dict, gates: jnp.ndarray,
 
     fresh = history.fresh_mask(gates, reuse_enabled(cfg))       # [nA, T]
     fresh &= (jnp.arange(T)[None, :] < valid_len)
+    fresh &= (jnp.arange(T)[None, :] >= start_token)
     freshT = fresh.T                                            # [T, nA]
     e = (jnp.cumsum(freshT.reshape(-1).astype(jnp.int32)) -
          freshT.reshape(-1)).reshape(T, nA)                     # excl. cumsum
+    e = e + jnp.asarray(start_entry, jnp.int32)
     l1 = history.next_fresh_layer(fresh).T                      # [T, nA]
 
     idx = _flat_targets(block_table[None], e.reshape(1, T * nA),
@@ -372,16 +590,92 @@ def pack_prefill(store: Store, cache: Dict, gates: jnp.ndarray,
     l0 = jnp.broadcast_to(jnp.arange(nA, dtype=jnp.int32)[None, :], (T, nA))
     return _scatter(store, idx,
                     k_views.swapaxes(0, 1), v_views.swapaxes(0, 1),
-                    pos, l0, l1)
+                    pos, l0, l1, kv_dtype=kv_dtype)
 
 
 def prefill_entry_count(gates: np.ndarray, valid_len: int,
                         reuse: bool) -> int:
     """Host-side mirror of ``pack_prefill``'s entry count."""
-    g = np.asarray(gates, np.float32)[:, :valid_len]
-    if not reuse:
-        return g.shape[0] * valid_len
-    return int(valid_len + g[1:].sum())
+    return int(history.fresh_counts(gates, valid_len, reuse).sum())
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: copy-on-write + warm-prefix reconstruction
+# ---------------------------------------------------------------------------
+
+def copy_page_masked(store: Store, src, dst, keep) -> Store:
+    """COW-copy page ``src`` into private page ``dst``, keeping only the
+    first ``keep`` in-page entries (the shared-prefix portion of a
+    partial boundary page).  Entries past ``keep`` are reset — position
+    to MASKED_POS, payload to zero — so the copy carries nothing of the
+    donor slot's divergent suffix.  ``src``/``dst``/``keep`` may be
+    traced scalars."""
+    ps = store["pos_pages"].shape[1]
+    m = jnp.arange(ps) < keep
+    out = {}
+    for key, leaf in store.items():
+        row = leaf[src]
+        mask = m.reshape((ps,) + (1,) * (row.ndim - 1))
+        blank = (jnp.full_like(row, history.MASKED_POS)
+                 if key == "pos_pages" else jnp.zeros_like(row))
+        out[key] = leaf.at[dst].set(jnp.where(mask, row, blank))
+    return out
+
+
+def views_from_pages(store: Store, block_table: jnp.ndarray,
+                     fill: jnp.ndarray, cfg: ModelConfig, cap: int,
+                     kv_dtype: Optional[str] = None):
+    """Invert one slot's entry stream into per-layer prefill views.
+
+    block_table: [J] the slot's page-chain row; fill: scalar entry
+    count; cap: static time extent of the produced views.  For each
+    attention layer the entry valid at that layer scatters back to its
+    token position — the exact inverse of ``pack_prefill`` (cross-layer
+    reuse means one physical entry may serve many layers).  Quantized
+    stores are dequantized during the gather, so the views are always
+    full precision.  Returns (k_views, v_views): [nA, cap, Hkv, dh];
+    positions the stream doesn't cover stay zero (matching a fresh
+    ``init_chunk_cache``)."""
+    view = gather_view(store, block_table[None], with_kv=True,
+                       kv_dtype=kv_dtype)
+    k, v = view["k"][0], view["v"][0]                 # [E, Hkv, dh]
+    in_fill = (jnp.arange(k.shape[0]) < fill)[None]   # [1, E]
+    ks, vs = [], []
+    for a in range(num_attention_layers(cfg)):
+        eff = history.effective_positions(
+            view["pos"], view["l0"], view["l1"], in_fill, a)[0]
+        # MASKED_POS (and anything >= cap) falls off the scatter
+        ks.append(jnp.zeros((cap,) + k.shape[1:], k.dtype)
+                  .at[eff].set(k, mode="drop"))
+        vs.append(jnp.zeros((cap,) + v.shape[1:], v.dtype)
+                  .at[eff].set(v, mode="drop"))
+    return jnp.stack(ks), jnp.stack(vs)
+
+
+def chunk_cache_from_views(k_views: jnp.ndarray, v_views: jnp.ndarray,
+                           cfg: ModelConfig, dtype=None) -> Dict:
+    """Inverse of ``prefill_views_from_cache``: per-layer views
+    [nA, cap, Hkv, dh] -> a batch-1 chunked-prefill staging cache
+    (``model.init_chunk_cache`` layout) holding them, so a warm-prefix
+    admission resumes chunked prefill exactly where the shared prefix's
+    prefill left off."""
+    sl, S = cfg.stage_len, cfg.num_stages
+    assert k_views.shape[0] == S * sl, (k_views.shape, S, sl)
+    dt = jnp.dtype(dtype or cfg.dtype)
+
+    stage0 = {f"pos{k}": {"k": k_views[k].astype(dt)[None],
+                          "v": v_views[k].astype(dt)[None]}
+              for k in range(sl)}                     # [1, cap, Hkv, dh]
+    cache: Dict = {"stage0": stage0}
+    if S > 1:
+        cache["stages"] = {
+            f"pos{k}": {                              # [S-1, 1, cap, ...]
+                "k": jnp.stack([k_views[s * sl + k].astype(dt)[None]
+                                for s in range(1, S)]),
+                "v": jnp.stack([v_views[s * sl + k].astype(dt)[None]
+                                for s in range(1, S)])}
+            for k in range(sl)}
+    return cache
 
 
 # ---------------------------------------------------------------------------
@@ -391,7 +685,8 @@ def prefill_entry_count(gates: np.ndarray, valid_len: int,
 def commit_decode(store: Store, buf_k: jnp.ndarray, buf_v: jnp.ndarray,
                   gates: jnp.ndarray, t: jnp.ndarray,
                   block_table: jnp.ndarray, fill: jnp.ndarray,
-                  active: jnp.ndarray, cfg: ModelConfig) -> Store:
+                  active: jnp.ndarray, cfg: ModelConfig,
+                  kv_dtype: Optional[str] = None) -> Store:
     """Append this step's fresh entries for every active slot.
 
     buf_k/buf_v: [nA, S, Hkv, dh] — each attention layer's token view
@@ -409,4 +704,5 @@ def commit_decode(store: Store, buf_k: jnp.ndarray, buf_v: jnp.ndarray,
                         fresh.swapaxes(0, 1), ps, P).swapaxes(0, 1)
     pos = jnp.broadcast_to(t[None, :], (nA, S))
     l0 = jnp.broadcast_to(jnp.arange(nA, dtype=jnp.int32)[:, None], (nA, S))
-    return _scatter(store, idx, buf_k, buf_v, pos, l0, l1)
+    return _scatter(store, idx, buf_k, buf_v, pos, l0, l1,
+                    kv_dtype=kv_dtype)

@@ -30,6 +30,18 @@ def main() -> None:
                     help="paged KV store + history buffer instead of the "
                          "dense slot pool (see docs/kvcache.md)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=("int8", "int4"),
+                    help="quantize paged-KV page payloads (per-entry "
+                         "pow2 scales; requires --paged-kv; see "
+                         "docs/kvcache.md)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted prompt-prefix sharing with "
+                         "copy-on-write pages: warm admissions skip the "
+                         "shared prefill (requires --paged-kv; see "
+                         "docs/kvcache.md)")
+    ap.add_argument("--prefix-block", type=int, default=16,
+                    help="prefix-cache publish granularity in tokens")
     ap.add_argument("--decode-steps", type=int, default=0,
                     help="fuse this many decode iterations into one "
                          "device-resident dispatch (0 = config default; "
@@ -112,6 +124,9 @@ def main() -> None:
 
     from repro.configs import get_config
     from repro.models import model as model_lib
+    from repro.serve.config import (EngineConfig, KVConfig, ObsConfig,
+                                    RobustnessConfig, SchedulingConfig,
+                                    SpecConfig)
     from repro.serve.engine import ContinuousBatchingEngine, ServeEngine
 
     cfg = get_config(args.arch)
@@ -139,6 +154,8 @@ def main() -> None:
     if args.spec_k and args.decode_steps:
         raise SystemExit("--spec-k and --decode-steps are mutually "
                          "exclusive (both own the decode cadence)")
+    if (args.kv_dtype or args.prefix_cache) and not args.paged_kv:
+        raise SystemExit("--kv-dtype/--prefix-cache require --paged-kv")
     if args.draft_keep is not None and not args.spec_k:
         raise SystemExit("--draft-keep requires --spec-k")
     if args.tp and not args.continuous:
@@ -164,22 +181,28 @@ def main() -> None:
                   if args.kill_at is not None else None)
         watchdog = (Watchdog(timeout_s=args.watchdog_timeout_s)
                     if args.watchdog_timeout_s is not None else None)
-        eng = ContinuousBatchingEngine(
-            cfg, params, max_slots=args.batch, max_len=max_len,
-            temperature=args.temperature,
-            kv_mode="paged" if args.paged_kv else "dense",
-            page_size=args.page_size,
-            prefill_chunk=args.prefill_chunk,
-            decode_steps=args.decode_steps or None,
-            spec_k=args.spec_k, draft_keep=args.draft_keep,
-            trace=args.trace_out,
-            mesh=mesh,
-            faults=faults, watchdog=watchdog,
-            snapshot_dir=args.snapshot_dir,
-            snapshot_every=args.snapshot_every,
-            max_queue_depth=args.max_queue_depth,
-            max_queue_delay_s=args.max_queue_delay_s,
-            max_preemptions=args.max_preemptions)
+        eng = ContinuousBatchingEngine(cfg, params, config=EngineConfig(
+            kv=KVConfig(
+                kv_mode="paged" if args.paged_kv else "dense",
+                page_size=args.page_size,
+                kv_dtype=args.kv_dtype,
+                prefix_cache=args.prefix_cache,
+                prefix_block=args.prefix_block),
+            scheduling=SchedulingConfig(
+                max_slots=args.batch, max_len=max_len,
+                prefill_chunk=args.prefill_chunk,
+                decode_steps=args.decode_steps or None),
+            spec=SpecConfig(spec_k=args.spec_k,
+                            draft_keep=args.draft_keep),
+            robustness=RobustnessConfig(
+                faults=faults, watchdog=watchdog,
+                snapshot_dir=args.snapshot_dir,
+                snapshot_every=args.snapshot_every,
+                max_queue_depth=args.max_queue_depth,
+                max_queue_delay_s=args.max_queue_delay_s,
+                max_preemptions=args.max_preemptions),
+            obs=ObsConfig(trace=args.trace_out, mesh=mesh),
+            temperature=args.temperature))
         if args.resume:
             at = eng.resume()
             print(f"resumed from snapshot boundary {at} "
@@ -226,6 +249,14 @@ def main() -> None:
                   f"saving {s.kv_entries_saved_fraction:.1%} | history "
                   f"hit rate {s.history_hit_rate:.1%} | "
                   f"preemptions {s.preemptions}")
+        if args.kv_dtype:
+            print(f"quantized KV: {args.kv_dtype} page payloads "
+                  "(pow2 per-entry scales)")
+        if args.prefix_cache:
+            print(f"prefix cache: {s.prefix_hits} warm / "
+                  f"{s.prefix_misses} cold admissions | "
+                  f"{s.prefix_tokens_saved} prefill tokens skipped | "
+                  f"{s.prefix_records} records resident")
         if (s.faults_injected or s.requests_cancelled or s.deadline_exceeded
                 or s.requests_shed or s.snapshots or s.resumes):
             print(f"robustness: faults {s.faults_injected} | retries "

@@ -568,8 +568,10 @@ def paged_decode_step(params: Params, store: Dict,
     # resolve the page chains once per step (the store is frozen until the
     # end-of-step commit; the current token rides along as an explicit
     # (k_t, v_t) pair inside each layer)
+    kv_dtype = paged_mod.infer_kv_dtype(store, cfg)
     view = paged_mod.gather_view(store, block_table,
-                                 with_kv=not cfg.use_kernels)
+                                 with_kv=not cfg.use_kernels,
+                                 kv_dtype=kv_dtype)
     E = view["pos"].shape[1]
     paged_ctx = dict(view)
     paged_ctx["in_fill"] = jnp.arange(E)[None, :] < fill[:, None]
@@ -577,6 +579,9 @@ def paged_decode_step(params: Params, store: Dict,
         paged_ctx["k_pages"] = store["k_pages"]
         paged_ctx["v_pages"] = store["v_pages"]
         paged_ctx["block_table"] = block_table
+        if kv_dtype is not None:
+            paged_ctx["k_scales"] = store["k_scales"]
+            paged_ctx["v_scales"] = store["v_scales"]
 
     stack = params["stack"]
     nA_stage = sum(1 for k in range(cfg.stage_len)
@@ -628,7 +633,8 @@ def paged_decode_step(params: Params, store: Dict,
     if commit_mask is None:
         commit_mask = fill > 0
     store = paged_mod.commit_decode(store, buf_k, buf_v, gates, t,
-                                    block_table, fill, commit_mask, cfg)
+                                    block_table, fill, commit_mask, cfg,
+                                    kv_dtype=kv_dtype)
     stats["attn_gate"] = gates
     x = layers.norm_apply(params["final_norm"], x, cfg, stats=sq)
     logits = layers.unembed(params["embed"], params.get("lm_head"), x, cfg)
@@ -885,7 +891,9 @@ def paged_verify_chunk(params: Params, store: Dict,
 
     # always the jnp concat path: the Pallas decode kernel is
     # single-query, and a k+1-wide window doesn't need it
-    view = paged_mod.gather_view(store, block_table, with_kv=True)
+    view = paged_mod.gather_view(store, block_table, with_kv=True,
+                                 kv_dtype=paged_mod.infer_kv_dtype(store,
+                                                                   cfg))
     E = view["pos"].shape[1]
     paged_ctx = dict(view)
     paged_ctx["in_fill"] = jnp.arange(E)[None, :] < fill[:, None]
@@ -970,12 +978,15 @@ def commit_verified(store: Dict, buf_k: jnp.ndarray, buf_v: jnp.ndarray,
     active = jnp.asarray(active, bool)
     t0 = jnp.asarray(t0, jnp.int32)
 
+    kv_dtype = paged_mod.infer_kv_dtype(store, cfg)
+
     def body(carry, xs):
         store, fill = carry
         bk, bv, g, j = xs
         mask = active & (j < committed)
         store = paged_mod.commit_decode(store, bk, bv, g, t0 + j,
-                                        block_table, fill, mask, cfg)
+                                        block_table, fill, mask, cfg,
+                                        kv_dtype=kv_dtype)
         n_fresh = history_mod.fresh_mask(g, reuse).astype(
             jnp.int32).sum(axis=0)
         fill = fill + jnp.where(mask, n_fresh, 0)

@@ -1,18 +1,27 @@
 from repro.serve.engine import (ContinuousBatchingEngine,  # noqa: F401
-                                RequestResult, ServeEngine, ServeStats)
+                                RequestHandle, RequestResult, ServeEngine,
+                                ServeStats)
 from repro.serve.scheduler import (PrefillChunk, Request,  # noqa: F401
                                    Scheduler, StepPlan, can_chunk_prefill)
 
+# grouped engine configuration (the redesigned constructor surface;
+# docs/serving.md)
+from repro.serve.config import (EngineConfig, KVConfig,  # noqa: F401
+                                ObsConfig, RobustnessConfig,
+                                SchedulingConfig, SpecConfig)
+
 # paged-KV engine mode building blocks (kv_mode="paged")
 from repro.kvcache.history import HistoryAccounting  # noqa: F401
-from repro.kvcache.paged import PageAllocator, can_page  # noqa: F401
+from repro.kvcache.paged import (KV_DTYPES, PageAllocator,  # noqa: F401
+                                 can_page)
+from repro.kvcache.prefix import PrefixCache, PrefixRecord  # noqa: F401
 
 # robustness layer: typed errors, fault injection, crash-consistent
 # snapshots (docs/robustness.md)
 from repro.serve.errors import (AdmissionRejected,  # noqa: F401
-                                DeadlineExceeded, EngineAborted,
-                                HungDispatch, PageExhausted, ServeError,
-                                SimulatedKill)
+                                ConfigError, DeadlineExceeded,
+                                EngineAborted, HungDispatch, PageExhausted,
+                                ServeError, SimulatedKill)
 from repro.serve.faults import (Fault, FaultInjected,  # noqa: F401
                                 FaultPlan, Watchdog)
 from repro.serve.snapshot import (latest_snapshot_step,  # noqa: F401

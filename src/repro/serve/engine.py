@@ -41,8 +41,10 @@ from repro.kvcache import paged as paged_mod
 from repro.models import model as model_lib
 from repro.obs import (MetricsRegistry, as_tracer, jit_cache_size,
                        request_tid)
+from repro.kvcache import prefix as prefix_mod
 from repro.serve import snapshot as snapshot_mod
-from repro.serve.errors import (AdmissionRejected, HungDispatch,
+from repro.serve.config import EngineConfig
+from repro.serve.errors import (AdmissionRejected, ConfigError, HungDispatch,
                                 PageExhausted, SimulatedKill)
 from repro.serve.faults import (FaultInjected, Watchdog, as_fault_plan,
                                 sleep_stall)
@@ -52,6 +54,25 @@ from repro.serve.scheduler import (ActiveRequest, PrefillChunk, Request,
                                    Scheduler, can_bucket,
                                    can_chunk_prefill, can_speculate,
                                    default_buckets)
+
+# sentinel distinguishing "caller passed this legacy kwarg" from its old
+# default — the deprecation shim only routes *explicit* flat kwargs
+# through EngineConfig.from_kwargs
+_UNSET = object()
+_legacy_warned = False
+
+
+def _warn_legacy_kwargs(names) -> None:
+    """One DeprecationWarning per process, naming the offending kwargs."""
+    global _legacy_warned
+    if _legacy_warned:
+        return
+    _legacy_warned = True
+    warnings.warn(
+        "flat ContinuousBatchingEngine kwargs ({}) are deprecated — pass "
+        "config=EngineConfig(...) instead (semantics unchanged; migration "
+        "table in docs/serving.md)".format(", ".join(names)),
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -138,6 +159,11 @@ class ServeStats:
     history_hit_rate: float = 0.0         # reads served by the history buf
     history_hits_per_layer: List[float] = dataclasses.field(
         default_factory=list)
+    # -- prefix cache (kv.prefix_cache; docs/kvcache.md) -------------------
+    prefix_hits: int = 0                  # warm-prefix admissions
+    prefix_misses: int = 0                # cold admissions with cache on
+    prefix_tokens_saved: int = 0          # prompt tokens skipped at prefill
+    prefix_records: int = 0               # records resident at run end
     # -- speculative decoding (spec_k > 0; docs/speculative.md) ------------
     spec_windows: int = 0                 # draft+verify windows dispatched
     spec_tokens_drafted: int = 0          # draft proposals fed to verify
@@ -396,6 +422,53 @@ class _RunState:
     pending: Dict[int, object] = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass
+class _WarmAdmission:
+    """Host state of one warm-prefix admission between the scheduler's
+    probe (allocator work done, device work deferred) and the slot's
+    first prefill chunk (COW copy + staging-cache reconstruction)."""
+    rec: prefix_mod.PrefixRecord
+    # boundary-page COW: (src shared page, dst private page, entries kept);
+    # None when the shared prefix ends exactly on a page boundary
+    copy: Optional[tuple] = None
+
+
+class RequestHandle(int):
+    """What ``submit()`` returns: the request uid (is-an ``int``, so every
+    pre-streaming caller that compared / stored uids keeps working) plus
+    the streaming surface.
+
+    ``tokens()`` yields ``(token, step)`` pairs as the engine emits them,
+    *driving the engine itself* when the buffer runs dry — iterating a
+    handle interleaves engine iterations with consumption, no thread
+    needed.  Emission granularity is the engine iteration (= epoch in
+    fused mode): see docs/serving.md for the exact contract.
+    """
+
+    def __new__(cls, uid: int, engine):
+        h = super().__new__(cls, uid)
+        h.engine = engine
+        return h
+
+    @property
+    def uid(self) -> int:
+        return int(self)
+
+    def done(self) -> bool:
+        """True once the request has a final :class:`RequestResult`."""
+        return int(self) in self.engine._stream_done
+
+    def result(self) -> Optional["RequestResult"]:
+        """The final result, or None while the request is still running
+        (``tokens()`` / ``run()`` drive it to completion)."""
+        return self.engine._stream_results.get(int(self))
+
+    def tokens(self):
+        """Iterate ``(token, step)`` pairs for this request, pumping the
+        engine's run loop whenever no buffered token is ready."""
+        return self.engine._stream_tokens(int(self))
+
+
 class ContinuousBatchingEngine:
     """Continuous batching over a fixed slot pool (per-sequence positions).
 
@@ -505,24 +578,70 @@ class ContinuousBatchingEngine:
                              requeueing forever; None = unlimited.
     """
 
-    def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
-                 max_len: int = 512, temperature: float = 0.0,
-                 prefill_buckets: Optional[Sequence[int]] = None,
-                 kv_mode: str = "dense", page_size: int = 16,
-                 num_pages: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None,
-                 decode_steps: Optional[int] = None,
-                 spec_k: int = 0,
-                 draft_keep: Optional[float] = None,
-                 step_tokens: Optional[int] = None,
-                 trace=None,
-                 mesh=None, sharding_policy: Optional[ShardingPolicy] = None,
-                 faults=None, watchdog: Optional[Watchdog] = None,
-                 snapshot_dir: Optional[str] = None,
-                 snapshot_every: int = 1,
-                 max_queue_depth: Optional[int] = None,
-                 max_queue_delay_s: Optional[float] = None,
-                 max_preemptions: Optional[int] = None):
+    def __init__(self, cfg: ModelConfig, params, max_slots=_UNSET,
+                 max_len=_UNSET, temperature=_UNSET,
+                 prefill_buckets=_UNSET,
+                 kv_mode=_UNSET, page_size=_UNSET,
+                 num_pages=_UNSET,
+                 prefill_chunk=_UNSET,
+                 decode_steps=_UNSET,
+                 spec_k=_UNSET,
+                 draft_keep=_UNSET,
+                 step_tokens=_UNSET,
+                 trace=_UNSET,
+                 mesh=_UNSET, sharding_policy=_UNSET,
+                 faults=_UNSET, watchdog=_UNSET,
+                 snapshot_dir=_UNSET,
+                 snapshot_every=_UNSET,
+                 max_queue_depth=_UNSET,
+                 max_queue_delay_s=_UNSET,
+                 max_preemptions=_UNSET,
+                 kv_dtype=_UNSET, prefix_cache=_UNSET, prefix_block=_UNSET,
+                 *, config: Optional[EngineConfig] = None):
+        # -- deprecation shim: explicit flat kwargs -> EngineConfig --------
+        legacy = {name: value for name, value in (
+            ("max_slots", max_slots), ("max_len", max_len),
+            ("temperature", temperature),
+            ("prefill_buckets", prefill_buckets), ("kv_mode", kv_mode),
+            ("page_size", page_size), ("num_pages", num_pages),
+            ("prefill_chunk", prefill_chunk), ("decode_steps", decode_steps),
+            ("spec_k", spec_k), ("draft_keep", draft_keep),
+            ("step_tokens", step_tokens), ("trace", trace), ("mesh", mesh),
+            ("sharding_policy", sharding_policy), ("faults", faults),
+            ("watchdog", watchdog), ("snapshot_dir", snapshot_dir),
+            ("snapshot_every", snapshot_every),
+            ("max_queue_depth", max_queue_depth),
+            ("max_queue_delay_s", max_queue_delay_s),
+            ("max_preemptions", max_preemptions), ("kv_dtype", kv_dtype),
+            ("prefix_cache", prefix_cache), ("prefix_block", prefix_block),
+        ) if value is not _UNSET}
+        if legacy:
+            if config is not None:
+                raise ConfigError(
+                    "pass either config=EngineConfig(...) or the legacy "
+                    "flat kwargs, not both (got config= plus "
+                    f"{sorted(legacy)})")
+            _warn_legacy_kwargs(sorted(legacy))
+            config = EngineConfig.from_kwargs(**legacy)
+        elif config is None:
+            config = EngineConfig()
+        self.config = config
+        kvc, sch = config.kv, config.scheduling
+        spc, rob, obs = config.spec, config.robustness, config.obs
+        max_slots, max_len = sch.max_slots, sch.max_len
+        temperature = config.temperature
+        prefill_buckets, prefill_chunk = sch.prefill_buckets, sch.prefill_chunk
+        decode_steps, step_tokens = sch.decode_steps, sch.step_tokens
+        kv_mode, page_size = kvc.kv_mode, kvc.page_size
+        num_pages = kvc.num_pages
+        spec_k, draft_keep = spc.spec_k, spc.draft_keep
+        trace, mesh = obs.trace, obs.mesh
+        sharding_policy = obs.sharding_policy
+        faults, watchdog = rob.faults, rob.watchdog
+        snapshot_dir, snapshot_every = rob.snapshot_dir, rob.snapshot_every
+        max_queue_depth = rob.max_queue_depth
+        max_queue_delay_s = rob.max_queue_delay_s
+        max_preemptions = rob.max_preemptions
         self.cfg = cfg
         self.tracer = as_tracer(trace)
         self.metrics: Optional[MetricsRegistry] = None   # last run's registry
@@ -663,6 +782,7 @@ class ContinuousBatchingEngine:
         self._spec_drafts: Dict[int, object] = {}
         self._spec_verify_fn = None
         self._spec_commit_fn = None
+        self._spec_vc_fn = None
         self._insert = _jit(
             partial(pool_insert, cfg=cfg), donate=(0,),
             in_sh=(self._pool_sh, self._pcache_sh, rep),
@@ -697,6 +817,11 @@ class ContinuousBatchingEngine:
                 _ins_staged, donate=(0,),
                 in_sh=(self._pool_sh, self._chunk_sh, rep),
                 out_sh=self._pool_sh)
+        self.kv_dtype = kvc.kv_dtype
+        self.prefix: Optional[prefix_mod.PrefixCache] = None
+        # persistent device page store (paged mode): stashed by the run
+        # loops at clean exit so prefix records stay backed across runs
+        self._store = None
         if kv_mode == "paged":
             self.n_attn = paged_mod.num_attention_layers(cfg)
             self.page_size = page_size
@@ -713,7 +838,7 @@ class ContinuousBatchingEngine:
             if pol is not None:
                 self._store_sh = pol.cache_specs(jax.eval_shape(
                     partial(paged_mod.init_store, cfg, self.num_pages,
-                            self.page_size)))
+                            self.page_size, kv_dtype=self.kv_dtype)))
                 self._warn_if_unsharded(self._store_sh, "paged KV store")
 
             def _prefill_paged_fn(p, batch, last_index, rng):
@@ -731,15 +856,92 @@ class ContinuousBatchingEngine:
                 out_sh=(rep, self._pcache_sh, rep))
             pack_cache_sh = (self._chunk_sh if self.prefill_chunk
                              else self._pcache_sh)
+            kv_dt = self.kv_dtype
+
+            def _pack_fn(store, cache, gates, valid_len, bt_row,
+                         start_token, start_entry):
+                return paged_mod.pack_prefill(
+                    store, cache, gates, valid_len, bt_row, cfg,
+                    start_token=start_token, start_entry=start_entry,
+                    kv_dtype=kv_dt)
+
             self._pack = _jit(
-                partial(paged_mod.pack_prefill, cfg=cfg), donate=(0,),
-                in_sh=(self._store_sh, pack_cache_sh, rep, rep, rep),
+                _pack_fn, donate=(0,),
+                in_sh=(self._store_sh, pack_cache_sh, rep, rep, rep,
+                       rep, rep),
                 out_sh=self._store_sh)
             self._decode_paged = _jit(
                 partial(model_lib.paged_decode_step, cfg=cfg), donate=(1,),
                 in_sh=(self._param_sh, self._store_sh, rep, rep, rep, rep),
                 out_sh=(rep, self._store_sh, rep))
+            if kvc.prefix_cache:
+                if not can_chunk_prefill(cfg):
+                    raise ConfigError(
+                        f"{cfg.name}: prefix_cache resumes prefill from a "
+                        "reconstructed staging cache — it requires the "
+                        "chunk-resumable stack chunked prefill needs")
+                self.prefix = prefix_mod.PrefixCache(
+                    self.allocator, block=kvc.prefix_block,
+                    reuse=paged_mod.reuse_enabled(cfg),
+                    max_records=kvc.prefix_max_records)
+                self.scheduler.prefix_probe = self._prefix_probe
+                # in-flight warm admissions: slot -> _WarmAdmission
+                self._warm_pending: Dict[int, _WarmAdmission] = {}
+                # warm-suffix forward runs chunk-style even under
+                # monolithic prefill: the suffix resumes mid-sequence, so
+                # it needs the resumable staging-cache step.  Its cache
+                # capacity covers the whole prompt region.
+                self._warm_cap = (self._chunk_cap if self.prefill_chunk
+                                  else max_len)
+                self._warm_sh = None
+                if pol is not None:
+                    self._warm_sh = (
+                        self._chunk_sh if self.prefill_chunk
+                        else pol.cache_specs(
+                            jax.eval_shape(partial(
+                                model_lib.init_chunk_cache, cfg, 1,
+                                self._warm_cap)),
+                            layout="bthd", seq_fallback=False))
+                warm_cap = self._warm_cap
+                kv_dt = self.kv_dtype
+
+                def _warm_fn(store, bt_row, fill):
+                    kv_v, vv_v = paged_mod.views_from_pages(
+                        store, bt_row, fill, cfg, warm_cap,
+                        kv_dtype=kv_dt)
+                    return paged_mod.chunk_cache_from_views(kv_v, vv_v, cfg)
+
+                # shared-prefix entries -> batch-1 staging cache (the
+                # exact inverse of pack_prefill; docs/kvcache.md)
+                self._warm_cache = _jit(
+                    _warm_fn, in_sh=(self._store_sh, rep, rep),
+                    out_sh=self._warm_sh)
+                self._cow_copy = _jit(
+                    paged_mod.copy_page_masked, donate=(0,),
+                    in_sh=(self._store_sh, rep, rep, rep),
+                    out_sh=self._store_sh)
+                if self.prefill_chunk:
+                    self._warm_chunk_step = self._chunk_step
+                else:
+                    def _warm_chunk_fn(p, cache, batch, t0, last_index):
+                        return model_lib.prefill_chunk(
+                            p, cache, batch, t0, cfg=cfg,
+                            last_index=last_index)
+
+                    self._warm_chunk_step = _jit(
+                        _warm_chunk_fn, donate=(1,),
+                        in_sh=(self._param_sh, self._warm_sh, rep, rep,
+                               rep),
+                        out_sh=(rep, self._warm_sh, rep))
         self._uid = 0
+        # -- streaming surface (docs/serving.md) ----------------------------
+        self._streams: Dict[int, List] = {}      # uid -> [(token, step), ..]
+        self._stream_pos: Dict[int, int] = {}    # uid -> emitted high-water
+        self._stream_done: set = set()           # uids with a final result
+        self._stream_results: Dict[int, RequestResult] = {}
+        self._driver = None                      # active run-loop generator
+        self._driver_rng = None
+        self._driver_out: Optional[Dict] = None
         # -- robustness state (docs/robustness.md) --------------------------
         self.faults = as_fault_plan(faults)
         self.watchdog = watchdog
@@ -905,6 +1107,60 @@ class ContinuousBatchingEngine:
             self._spec_commit_fn = fn
         return fn
 
+    def _spec_verify_commit(self):
+        """Fused paged verify + greedy accept + tentative-commit: ONE
+        dispatch where the two-phase path (``_spec_verify`` sync, host
+        accept, ``_spec_commit`` dispatch) takes two — the greedy accept
+        rule and ``_plan_emission``'s truncation (stop token, generation
+        budget, ``max_len``) are pure elementwise arithmetic over the
+        verifier's argmax chain, so at temperature 0 the device can
+        decide the committed column count itself and rewrite the entry
+        stream without waiting on the host.  The host still replays the
+        acceptance from the synced argmax chain for bookkeeping and
+        asserts it agrees (``_run_paged_spec``).  Temperature > 0 keeps
+        the two-dispatch path: exact accept/resample needs host-side
+        float64 probability arithmetic."""
+        fn = self._spec_vc_fn
+        if fn is None:
+            cfg = self.cfg
+            rep = self._repl
+
+            def vcfn(p, store, batch, t0, bt, fill0, active, budget_cap,
+                     len_cap, stop_tok):
+                logits, stats = model_lib.paged_verify_chunk(
+                    p, store, batch, t0, bt, fill0, cfg=cfg)
+                tgt = jnp.argmax(logits, -1).astype(jnp.int32)    # [S, C]
+                C = tgt.shape[1]
+                if C > 1:
+                    match = batch["tokens"][:, 1:] == tgt[:, :-1]
+                    acc = jnp.where(match.all(axis=1), C - 1,
+                                    jnp.argmin(match, axis=1)
+                                    ).astype(jnp.int32)
+                else:
+                    acc = jnp.zeros(tgt.shape[:1], jnp.int32)
+                # emitted chain == tgt[:, :acc+1]; truncate exactly as
+                # _plan_emission does (stop inclusive, budget, max_len)
+                cols = jnp.arange(C, dtype=jnp.int32)[None, :]
+                is_stop = ((stop_tok[:, None] >= 0)
+                           & (tgt == stop_tok[:, None]))
+                stop_n = jnp.min(jnp.where(is_stop, cols, C), axis=1) + 1
+                n = jnp.minimum(jnp.minimum(acc + 1, stop_n),
+                                jnp.minimum(budget_cap, len_cap))
+                committed = jnp.where(active, jnp.maximum(n, 1),
+                                      0).astype(jnp.int32)
+                bk, bv = stats["kv_token"]
+                store2, _ = model_lib.commit_verified(
+                    store, bk, bv, stats["attn_gate"], t0, bt, fill0,
+                    committed, active, cfg=cfg)
+                return store2, tgt, stats["attn_gate"], committed
+
+            fn = self._jit_step(
+                vcfn, donate=(1,),
+                in_sh=(self._param_sh, self._store_sh) + (rep,) * 8,
+                out_sh=(self._store_sh, rep, rep, rep))
+            self._spec_vc_fn = fn
+        return fn
+
     # -- sharding sanity ---------------------------------------------------
     def _warn_if_unsharded(self, sh_tree, what: str) -> None:
         """If no leaf of ``sh_tree`` landed on the model axis (head count
@@ -930,8 +1186,13 @@ class ContinuousBatchingEngine:
     # -- request intake ----------------------------------------------------
     def submit(self, tokens: np.ndarray, max_new_tokens: int,
                stop_token: Optional[int] = None,
-               deadline_s: Optional[float] = None) -> int:
-        """Queue one prompt; returns its uid.
+               deadline_s: Optional[float] = None) -> "RequestHandle":
+        """Queue one prompt; returns its :class:`RequestHandle` (an
+        ``int`` subclass carrying the uid, so callers that treated the
+        return value as a plain uid are unaffected).  Iterating
+        ``handle.tokens()`` streams ``(token, step)`` pairs and drives
+        the engine's run loop on demand; ``run()`` remains the drain-
+        everything entry point.
 
         ``deadline_s`` is a wall-clock budget measured from submission:
         past it the request finishes with ``finish_reason == "deadline"``
@@ -964,7 +1225,7 @@ class ContinuousBatchingEngine:
                     reason="kv_worst_case", uid=uid)
         self._maybe_shed(req)
         self.scheduler.submit(req)
-        return uid
+        return RequestHandle(uid, self)
 
     def _maybe_shed(self, req: Request) -> None:
         """Load shedding at the submit boundary: refuse to grow a queue
@@ -1029,8 +1290,39 @@ class ContinuousBatchingEngine:
         the snapshot restore template build it the same way)."""
         if self.kv_mode == "paged":
             return paged_mod.init_store(self.cfg, self.num_pages,
-                                        self.page_size)
+                                        self.page_size,
+                                        kv_dtype=self.kv_dtype)
         return init_pool(self.cfg, self.max_slots, self.max_len)
+
+    def _acquire_store(self):
+        """Device page store for one paged run.  The store outlives a
+        single ``run()`` call: published prefix records alias page
+        payloads, so the run loops stash their final store back on the
+        engine at clean exit and the next run picks it up here.  Stale
+        entries in re-allocated pages are harmless — the attention kernel
+        masks by chain fill exactly as it does for within-run page reuse.
+
+        Ownership is taken eagerly (the stash is cleared before the run
+        starts): if the run dies mid-flight the store may have been
+        donated away, so the next run starts from a fresh zeroed pool —
+        and must flush the prefix cache, whose records would otherwise
+        alias blank pages."""
+        store = self._store
+        self._store = None
+        if store is not None:
+            return store
+        if self.prefix is not None:
+            for slot in list(self._warm_pending):
+                self._abort_warm(slot)
+            self.prefix.clear()
+        store = paged_mod.init_store(self.cfg, self.num_pages,
+                                     self.page_size,
+                                     kv_dtype=self.kv_dtype)
+        if self.policy is not None:
+            # head-sharded page pools, replicated entry metadata — the
+            # host-side PageAllocator stays global (see cache_specs)
+            store = jax.device_put(store, self._store_sh)
+        return store
 
     # -- paged-mode memory policy -------------------------------------------
     def _worst_case_entries(self, req: Request) -> int:
@@ -1051,8 +1343,70 @@ class ContinuousBatchingEngine:
         never over-commits.)"""
         need = req.prompt_len * self.n_attn + self.n_attn
         pages = self.allocator.pages_for(need)
-        return (pages <= self.allocator.pages_per_slot
-                and pages <= self.allocator.free_pages)
+        if pages > self.allocator.pages_per_slot:
+            return False
+        # prefix records hold pages too: evict LRU records (never pinned
+        # ones) before declaring the pool full — cached history must not
+        # starve admission
+        while pages > self.allocator.free_pages and self._reclaim_pages():
+            pass
+        return pages <= self.allocator.free_pages
+
+    def _reclaim_pages(self) -> bool:
+        """Page-pressure valve: drop one LRU prefix record.  Returns True
+        when a record was evicted (its unshared pages returned to the
+        free list) — callers loop until the reservation fits or this
+        returns False, *then* fall back to preempting residents."""
+        return (self.prefix is not None
+                and self.prefix.evict_one() is not None)
+
+    # -- prefix sharing (docs/kvcache.md) ----------------------------------
+    def _prefix_probe(self, req: Request, slot: int) -> int:
+        """Scheduler admission hook (``kv.prefix_cache``): find the
+        longest published prefix of ``req``'s prompt and alias its pages
+        into ``slot`` — full shared pages by reference (refcount bump, no
+        copy), the partial boundary page queued for a device-side COW
+        copy at the first suffix chunk (the probe runs inside
+        ``plan_step`` with no store handle in scope; deferring is safe
+        because nothing reads the slot's pages before that chunk).  The
+        cold *suffix*'s worst-case pages are reserved here too, keeping
+        the reservation inside the same plan_step that passed
+        ``_can_place`` — the invariant the cold path maintains.  Returns
+        the number of prompt tokens covered (0 = cold admission)."""
+        rec = self.prefix.lookup(req.tokens)
+        if rec is None:
+            if self.metrics is not None:
+                self.metrics.inc("prefix_misses_total")
+            return 0
+        alloc, nA = self.allocator, self.n_attn
+        n_full, rem = divmod(rec.entries, alloc.page_size)
+        worst = rec.entries + (req.prompt_len - rec.length) * nA + nA
+        alloc.alias_into(slot, rec.pages[:n_full])
+        if not alloc.ensure(slot, worst):
+            # cannot happen after _can_place's full-prompt worst-case
+            # check (worst - aliased <= full worst case), but fall back to
+            # a cold admission rather than crash on an allocator surprise
+            alloc.release(slot)
+            return 0
+        alloc.seed_fill(slot, rec.entries)
+        self.prefix.pin(rec)
+        copy = None
+        if rem:
+            copy = (int(rec.pages[n_full]),
+                    int(alloc.block_table[slot, n_full]), rem)
+        self._warm_pending[slot] = _WarmAdmission(rec=rec, copy=copy)
+        return rec.length
+
+    def _abort_warm(self, slot: int) -> None:
+        """Drop the warm-admission state of an aborted in-flight prefill.
+        The caller's ``allocator.release`` already dropped the chain's
+        page references (shared pages just lose one refcount); this
+        unpins the record so it is evictable again."""
+        if self.prefix is None:
+            return
+        warm = self._warm_pending.pop(slot, None)
+        if warm is not None:
+            self.prefix.unpin(warm.rec)
 
     # -- main loop ---------------------------------------------------------
     def run(self, rng: Optional[jax.Array] = None
@@ -1064,19 +1418,105 @@ class ContinuousBatchingEngine:
         Under a mesh the sharding policy is active
         for the whole run, so every jitted step traces with the serve-mode
         activation/KV hints baked in (routing gates and the Σy² carry stay
-        replicated; KV is head-sharded)."""
+        replicated; KV is head-sharded).
+
+        Reimplemented on the streaming driver: the run loops are
+        generators yielding once per engine iteration (the granularity
+        ``RequestHandle.tokens`` observes), and ``run()`` simply pumps
+        the shared driver to exhaustion — token output and metrics are
+        identical to the pre-streaming blocking loops.  A partially
+        consumed ``tokens()`` iteration resumes here: one driver serves
+        both surfaces."""
+        if self._driver is None:
+            self._driver_rng = rng
+        while self._pump():
+            pass
+        out, self._driver_out = self._driver_out, None
+        return out
+
+    def _make_driver(self, rng):
+        """One generator wrapping the mode dispatch; ``yield`` marks
+        engine-iteration boundaries, ``return`` carries the run dict."""
         with set_policy(self.policy):
             if self.kv_mode == "paged":
                 if self.spec_k:
-                    return self._run_paged_spec(rng)
+                    return (yield from self._run_paged_spec(rng))
                 if self.decode_steps > 1:
-                    return self._run_paged_fused(rng)
-                return self._run_paged(rng)
+                    return (yield from self._run_paged_fused(rng))
+                return (yield from self._run_paged(rng))
             if self.spec_k:
-                return self._run_dense_spec(rng)
+                return (yield from self._run_dense_spec(rng))
             if self.decode_steps > 1:
-                return self._run_dense_fused(rng)
-            return self._run_dense(rng)
+                return (yield from self._run_dense_fused(rng))
+            return (yield from self._run_dense(rng))
+
+    def _pump(self) -> bool:
+        """Advance the shared driver one engine iteration.  Returns False
+        when the run completed (the result dict lands in
+        ``self._driver_out``).  Engine errors tear the driver down before
+        re-raising, so a subsequent ``run()`` starts fresh."""
+        if self._driver is None:
+            self._driver = self._make_driver(self._driver_rng)
+        try:
+            next(self._driver)
+            return True
+        except StopIteration as e:
+            self._driver = None
+            self._driver_rng = None
+            self._driver_out = e.value
+            return False
+        except BaseException:
+            self._driver = None
+            self._driver_rng = None
+            raise
+
+    # -- streaming emission (docs/serving.md) ------------------------------
+    def _emit_stream(self, uid: int, out_tokens: List[int],
+                     step: int) -> None:
+        """Append tokens past the uid's high-water mark to its stream
+        buffer.  The watermark survives preemption (out_tokens resets,
+        the mark does not), so every emitted index streams exactly once —
+        at temperature 0 a preempted request re-derives the identical
+        prefix; at temperature > 0 re-decoded tokens may diverge from
+        what was already streamed (documented caveat)."""
+        w = self._stream_pos.get(uid, 0)
+        if len(out_tokens) > w:
+            buf = self._streams.setdefault(uid, [])
+            buf.extend((int(t), step) for t in out_tokens[w:])
+            self._stream_pos[uid] = len(out_tokens)
+
+    def _drain_stream(self, rs: _RunState) -> None:
+        """Per-iteration emission sweep over the resident slots.  Slots
+        with an unresolved deferred first token (fused mode's
+        ``rs.pending``) are skipped — their out_tokens[0] is still the
+        placeholder; the post-epoch resolve backfills it and the next
+        sweep emits."""
+        for slot, st in self.scheduler.active.items():
+            if slot not in rs.pending:
+                self._emit_stream(st.req.uid, st.out_tokens, rs.step_idx)
+
+    def _record_result(self, rs: _RunState, res: "RequestResult") -> None:
+        """Single choke point for finished requests: the run dict and the
+        streaming surface see the same RequestResult."""
+        rs.results[res.uid] = res
+        self._stream_results[res.uid] = res
+        self._stream_done.add(res.uid)
+
+    def _stream_tokens(self, uid: int):
+        """Yield ``(token, step)`` for ``uid``, pumping the engine when
+        the buffer runs dry.  Ends when the request has a final result
+        (or the engine drains without it ever being placeable)."""
+        buf = self._streams.setdefault(uid, [])
+        sent = 0
+        while True:
+            while sent < len(buf):
+                yield buf[sent]
+                sent += 1
+            if uid in self._stream_done:
+                return
+            if not self._pump() and sent >= len(buf) \
+                    and uid not in self._stream_done:
+                return
 
     # -- observability plumbing (shared by all four run loops) -------------
     def _new_run_state(self, rng: Optional[jax.Array],
@@ -1213,6 +1653,7 @@ class ContinuousBatchingEngine:
                 sched.abort_prefill(requeue=False)
                 if self.kv_mode == "paged":
                     self.allocator.release(pf.slot)
+                    self._abort_warm(pf.slot)
                 rs.stage_cache = None
                 rs.stage_gates = []
                 rs.admitted.discard(pf.req.uid)
@@ -1237,10 +1678,10 @@ class ContinuousBatchingEngine:
         removed from the queue or aborted mid-prefill — with an empty
         token result and a typed reason."""
         self._cancelled.discard(req.uid)
-        rs.results[req.uid] = RequestResult(
+        self._record_result(rs, RequestResult(
             uid=req.uid, tokens=np.zeros((0,), np.int32),
             prompt_len=req.prompt_len, ttft_s=0.0, decode_s=0.0,
-            finish_reason=reason)
+            finish_reason=reason))
         self._count_lifecycle(rs, reason)
         tid = request_tid(req.uid)
         self.tracer.instant("finish", tid, reason=reason, tokens=0)
@@ -1424,8 +1865,9 @@ class ContinuousBatchingEngine:
         if self.kv_mode == "paged":
             self.allocator.release(slot)
             rs.hist.on_release(slot)
+        self._emit_stream(st.req.uid, st.out_tokens, rs.step_idx)
         res = self._make_result(st, reason)
-        rs.results[st.req.uid] = res
+        self._record_result(rs, res)
         self._cancelled.discard(st.req.uid)
         self._count_lifecycle(rs, reason)
         m = rs.metrics
@@ -1466,6 +1908,7 @@ class ContinuousBatchingEngine:
         if pf is not None and pf.slot != exclude:
             sched.abort_prefill(requeue=False)
             self.allocator.release(pf.slot)
+            self._abort_warm(pf.slot)
             rs.stage_cache = None
             rs.stage_gates = []
             m.inc("preemptions_total")
@@ -1497,7 +1940,8 @@ class ContinuousBatchingEngine:
                    count=st.req.preempt_count)
         if self._budget_spent(st.req):
             self._account_prefill(rs, st)
-            rs.results[st.req.uid] = self._make_result(st, "preempt_budget")
+            self._emit_stream(st.req.uid, st.out_tokens, rs.step_idx)
+            self._record_result(rs, self._make_result(st, "preempt_budget"))
             self._cancelled.discard(st.req.uid)
             self._count_lifecycle(rs, "preempt_budget")
             tr.instant("finish", tid, reason="preempt_budget",
@@ -1566,14 +2010,22 @@ class ContinuousBatchingEngine:
         return None
 
     # -- prefill work units (monolithic or one chunk) ----------------------
-    def _chunk_forward(self, rs: _RunState, work: PrefillChunk):
+    def _chunk_forward(self, rs: _RunState, work: PrefillChunk,
+                       width: Optional[int] = None):
         """Run one staged prefill chunk.  Returns the chunk logits (valid
         only on the last chunk).  The gate log is accumulated as device
         arrays — paged packing consumes it at completion, and the dense
         path folds it into the measured KV-storage accounting at finish
-        time; either way, never a per-chunk host sync."""
-        C = self.prefill_chunk
-        if work.is_first:
+        time; either way, never a per-chunk host sync.
+
+        ``width`` overrides the dispatch width (warm-prefix suffix chunks
+        in monolithic mode, where ``prefill_chunk == 0`` and the suffix
+        runs through ``_warm_chunk_step`` at a pow2-padded width).  A warm
+        admission pre-seeds ``rs.stage_cache`` from the shared pages, so
+        the first-chunk init is guarded on it being absent."""
+        C = self.prefill_chunk if width is None else width
+        step = self._chunk_step if width is None else self._warm_chunk_step
+        if work.is_first and rs.stage_cache is None:
             rs.stage_cache = model_lib.init_chunk_cache(
                 self.cfg, 1, self._chunk_cap)
             if self.policy is not None:
@@ -1584,7 +2036,7 @@ class ContinuousBatchingEngine:
             rs.stage_gates = []
         c = len(work.tokens)
         padded = np.pad(work.tokens, (0, C - c))
-        logits, rs.stage_cache, cstats = self._chunk_step(
+        logits, rs.stage_cache, cstats = step(
             self.params, rs.stage_cache,
             {"tokens": jnp.asarray(padded[None])},
             jnp.int32(work.start),
@@ -1702,6 +2154,8 @@ class ContinuousBatchingEngine:
         cfg, alloc, nA = self.cfg, self.allocator, self.n_attn
         reuse = paged_mod.reuse_enabled(cfg)
         req, slot = work.req, work.slot
+        if self.prefix is not None and slot in self._warm_pending:
+            return self._prefill_work_warm(rs, work, store)
         t0 = perf_counter()
         tr = self.tracer
         tid = request_tid(req.uid)
@@ -1746,9 +2200,101 @@ class ContinuousBatchingEngine:
                 "worst-case check — allocator bug", slot=slot,
                 free_pages=alloc.free_pages, pages_total=self.num_pages)
         store = self._pack(store, cache, jnp.asarray(gates), jnp.int32(T0),
-                           jnp.asarray(alloc.block_table[slot]))
+                           jnp.asarray(alloc.block_table[slot]),
+                           jnp.int32(0), jnp.int32(0))
         alloc.append(slot, n_ent, nA * T0)
         rs.hist.on_prefill(slot, gates, T0)
+        if self.prefix is not None:
+            self.prefix.publish(req.tokens, gates, alloc.chain(slot))
+        self._finish_prefill(rs, work, tok_dev, t0, gates)
+        return store
+
+    def _prefill_work_warm(self, rs: _RunState, work: PrefillChunk, store):
+        """Warm-prefix prefill work unit: the scheduler already cut the
+        prompt down to the cold suffix (``work.start`` == the record's
+        token length), so this path never runs forward over the shared
+        prefix.  On the first suffix chunk it materialises the state the
+        admission probe deferred — the COW copy of the partial boundary
+        page, then a batch-1 staging cache reconstructed from the shared
+        entry stream (``views_from_pages``; dequantised exactly, since
+        page scales are powers of two) — and from there the ordinary
+        chunk-resumable prefill machinery takes over.  Completion packs
+        *only the suffix entries* (``start_token``/``start_entry`` offsets
+        into ``pack_prefill``), stitches the record's gate log to the
+        suffix gates so history/accounting/publish see the full-prompt
+        view, and republishes the now-longer chain."""
+        cfg, alloc, nA = self.cfg, self.allocator, self.n_attn
+        reuse = paged_mod.reuse_enabled(cfg)
+        req, slot = work.req, work.slot
+        warm = self._warm_pending[slot]
+        rec = warm.rec
+        Ts, E_s = rec.length, rec.entries
+        t0 = perf_counter()
+        tr = self.tracer
+        tid = request_tid(req.uid)
+        m = rs.metrics
+        if work.is_first:
+            if warm.copy is not None:
+                src, dst, keep = warm.copy
+                with tr.span("cow_copy", tid, entries=keep), \
+                        tr.annotate("cow_copy"):
+                    store = self._cow_copy(store, jnp.int32(src),
+                                           jnp.int32(dst), jnp.int32(keep))
+            with tr.span("warm_restore", tid, tokens=Ts, entries=E_s), \
+                    tr.annotate("warm_restore"):
+                rs.stage_cache = self._warm_cache(
+                    store, jnp.asarray(alloc.block_table[slot]),
+                    jnp.int32(E_s))
+            rs.stage_gates = []
+            m.inc("prefix_hits_total")
+            m.inc("prefix_tokens_saved_total", Ts)
+            tr.instant("prefix_hit", tid, warm_tokens=Ts, entries=E_s)
+        c = len(work.tokens)
+        if self.prefill_chunk:
+            width = None
+            idx = (work.start - Ts) // self.prefill_chunk
+        else:
+            # monolithic mode: one pow2-padded suffix dispatch through the
+            # max_len-capacity warm chunk step (clamped so the padded
+            # write never runs past the staging cache)
+            width = 1 << max(3, (c - 1).bit_length())
+            if Ts + width > self._warm_cap:
+                width = c
+            idx = 0
+        with tr.span(f"prefill[{idx}]", tid, tokens=c, warm=Ts), \
+                tr.annotate("prefill_chunk"):
+            logits = self._chunk_forward(rs, work, width=width)
+        if not work.is_last:
+            m.inc("prefill_chunks_total")
+            m.inc("prefill_seconds_total", perf_counter() - t0)
+            self.scheduler.prefill_advance(work)
+            return store
+        T0 = req.prompt_len
+        cache = rs.stage_cache
+        suffix_gates = np.concatenate(
+            [np.asarray(g, np.float32) for g in rs.stage_gates],
+            axis=2)[:, 0]                              # [nA, >= T0 - Ts]
+        gates = np.concatenate(
+            [np.asarray(rec.gates, np.float32), suffix_gates], axis=1)
+        rs.stage_cache = None
+        rs.stage_gates = []
+        rs.rng, sub = jax.random.split(rs.rng)
+        tok_dev = self._sample_tok(logits, sub)
+        n_suffix = int(history_mod.host_fresh_mask(
+            suffix_gates, reuse)[:, :T0 - Ts].sum())
+        if not alloc.ensure(slot, E_s + n_suffix + nA):
+            raise PageExhausted(
+                "warm-suffix page reservation failed after the probe's "
+                "worst-case reservation — allocator bug", slot=slot,
+                free_pages=alloc.free_pages, pages_total=self.num_pages)
+        store = self._pack(store, cache, jnp.asarray(gates), jnp.int32(T0),
+                           jnp.asarray(alloc.block_table[slot]),
+                           jnp.int32(Ts), jnp.int32(E_s))
+        alloc.append(slot, n_suffix, nA * (T0 - Ts))
+        rs.hist.on_prefill(slot, gates, T0)
+        self.prefix.publish(req.tokens, gates, alloc.chain(slot))
+        self.prefix.unpin(rec)
+        del self._warm_pending[slot]
         self._finish_prefill(rs, work, tok_dev, t0, gates)
         return store
 
@@ -1806,6 +2352,8 @@ class ContinuousBatchingEngine:
             if not sched.active:
                 self._poll_compiles(rs)
                 tr.end()                  # step
+                self._drain_stream(rs)
+                yield
                 continue
 
             # -- one ragged decode step over the whole pool ----------------
@@ -1829,6 +2377,8 @@ class ContinuousBatchingEngine:
                 m.inc("dispatch_retries_total")
                 self._poll_compiles(rs)
                 tr.end()                  # step
+                self._drain_stream(rs)
+                yield
                 continue
             m.inc("decode_dispatches_total")
             t_sync = perf_counter()
@@ -1869,6 +2419,8 @@ class ContinuousBatchingEngine:
             rs.disp_idx += 1
             self._poll_compiles(rs)
             tr.end()                      # step
+            self._drain_stream(rs)
+            yield
 
         m.inc("host_seconds_total",
               (perf_counter() - t_loop) - m.value("device_seconds_total"))
@@ -1929,6 +2481,13 @@ class ContinuousBatchingEngine:
             m.set("pages_peak", alloc.stats.pages_peak)
             for i, h in enumerate(rs.hist.per_layer_hit_rate):
                 m.set("history_hit_rate", h, layer=i)
+            if self.prefix is not None:
+                stats.prefix_hits = int(m.value("prefix_hits_total"))
+                stats.prefix_misses = int(m.value("prefix_misses_total"))
+                stats.prefix_tokens_saved = int(
+                    m.value("prefix_tokens_saved_total"))
+                stats.prefix_records = len(self.prefix)
+                m.set("prefix_records", len(self.prefix))
         if self.tracer.enabled and self.tracer.path is not None:
             self.tracer.save()
         return {"results": results, "stats": stats, "metrics": m}
@@ -1958,12 +2517,7 @@ class ContinuousBatchingEngine:
         rs = self._new_run_state(rng, paged=True)
         m, tr = rs.metrics, self.tracer
 
-        store = paged_mod.init_store(cfg, self.num_pages, self.page_size)
-        if self.policy is not None:
-            # head-sharded page pools, replicated entry metadata — the
-            # host-side PageAllocator stays global (see cache_specs)
-            store = jax.device_put(store, self._store_sh)
-        store = self._apply_resume(rs, store)
+        store = self._apply_resume(rs, self._acquire_store())
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
         t_loop = perf_counter()
@@ -1985,6 +2539,8 @@ class ContinuousBatchingEngine:
                         continue
                     while not alloc.ensure(slot,
                                            int(alloc.fill[slot]) + nA):
+                        if self._reclaim_pages():
+                            continue
                         if not self._preempt_youngest(rs, exclude=slot):
                             if hidden:
                                 # the injected OOM drove the pool all the
@@ -2037,6 +2593,8 @@ class ContinuousBatchingEngine:
             if not sched.active:
                 self._poll_compiles(rs)
                 tr.end()                  # step
+                self._drain_stream(rs)
+                yield
                 continue
 
             # -- one ragged decode step over the whole pool ----------------
@@ -2068,6 +2626,8 @@ class ContinuousBatchingEngine:
                 m.inc("dispatch_retries_total")
                 self._poll_compiles(rs)
                 tr.end()                  # step
+                self._drain_stream(rs)
+                yield
                 continue
             m.inc("decode_dispatches_total")
             t_sync = perf_counter()
@@ -2108,9 +2668,12 @@ class ContinuousBatchingEngine:
             rs.disp_idx += 1
             self._poll_compiles(rs)
             tr.end()                      # step
+            self._drain_stream(rs)
+            yield
 
         m.inc("host_seconds_total",
               (perf_counter() - t_loop) - m.value("device_seconds_total"))
+        self._store = store
         return self._finalize(rs)
 
     # -- speculative decoding (spec_k > 0; docs/speculative.md) ------------
@@ -2203,6 +2766,24 @@ class ContinuousBatchingEngine:
             if st.pos + len(keep) >= self.max_len:
                 break
         return keep
+
+    def _emission_caps(self, cur: List[int]):
+        """[S]-vector emission-truncation bounds for the fused commit —
+        the device-side mirror of ``_plan_emission``'s loop bounds:
+        per-slot generation budget, ``max_len`` headroom and stop token
+        (-1 = none).  Inactive slots keep the harmless defaults (their
+        committed count is masked to 0 by ``active``)."""
+        S = self.max_slots
+        budget = np.ones((S,), np.int32)
+        length = np.ones((S,), np.int32)
+        stop = np.full((S,), -1, np.int32)
+        for s in cur:
+            st = self.scheduler.active[s]
+            budget[s] = st.req.max_new_tokens - len(st.out_tokens)
+            length[s] = self.max_len - st.pos
+            if st.req.stop_token is not None:
+                stop[s] = st.req.stop_token
+        return jnp.asarray(budget), jnp.asarray(length), jnp.asarray(stop)
 
     def _spec_bookkeep(self, rs: _RunState, cur: List[int], gamma: int,
                        plan_emit: Dict[int, List[int]],
@@ -2323,6 +2904,8 @@ class ContinuousBatchingEngine:
             if not sched.active:
                 self._poll_compiles(rs)
                 tr.end()                  # step
+                self._drain_stream(rs)
+                yield
                 continue
 
             # -- one draft+verify window over the whole pool ---------------
@@ -2359,6 +2942,8 @@ class ContinuousBatchingEngine:
                 m.inc("dispatch_retries_total")
                 self._poll_compiles(rs)
                 tr.end()                  # step
+                self._drain_stream(rs)
+                yield
                 continue
             m.inc("decode_dispatches_total", 2 if gamma else 1)
             t_sync = perf_counter()
@@ -2392,6 +2977,8 @@ class ContinuousBatchingEngine:
             rs.disp_idx += 1
             self._poll_compiles(rs)
             tr.end()                      # step
+            self._drain_stream(rs)
+            yield
 
         m.inc("host_seconds_total",
               (perf_counter() - t_loop) - m.value("device_seconds_total"))
@@ -2414,6 +3001,8 @@ class ContinuousBatchingEngine:
                 continue
             while not alloc.ensure(slot,
                                    int(alloc.fill[slot]) + need_per):
+                if self._reclaim_pages():
+                    continue
                 if not self._preempt_youngest(rs, exclude=slot):
                     if hidden:
                         alloc.unhide_pages(hidden)
@@ -2444,7 +3033,14 @@ class ContinuousBatchingEngine:
         columns — in plain-engine token-major order — while the host
         replays the allocator/history accounting per emitted token and
         ``trim`` returns the rejected tail's pages.  Zero leaked pages,
-        zero stale tentative entries (test_speculative.py pins both)."""
+        zero stale tentative entries (test_speculative.py pins both).
+
+        At temperature 0 the verify and commit dispatches are FUSED
+        (``_spec_verify_commit``): the device computes the greedy accept
+        and the emission truncation itself and rewrites the stream in
+        the verify dispatch, halving the per-window dispatch count; the
+        host replays the acceptance from the synced argmax chain and
+        asserts agreement.  Temperature > 0 keeps the two-phase path."""
         cfg = self.cfg
         sched = self.scheduler
         alloc = self.allocator
@@ -2453,11 +3049,9 @@ class ContinuousBatchingEngine:
         measure = cfg.skip.enabled and cfg.skip.kv_reuse
         rs = self._new_run_state(rng, paged=True)
         m, tr = rs.metrics, self.tracer
+        fused = self.temperature <= 0.0
 
-        store = paged_mod.init_store(cfg, self.num_pages, self.page_size)
-        if self.policy is not None:
-            store = jax.device_put(store, self._store_sh)
-        store = self._apply_resume(rs, store)
+        store = self._apply_resume(rs, self._acquire_store())
         feed = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
         act = np.zeros((self.max_slots,), bool)
@@ -2508,6 +3102,8 @@ class ContinuousBatchingEngine:
                     alloc.unhide_pages(hidden)
                 self._poll_compiles(rs)
                 tr.end()                  # step
+                self._drain_stream(rs)
+                yield
                 continue
 
             # -- final headroom pass: covers a request activated by this
@@ -2552,9 +3148,17 @@ class ContinuousBatchingEngine:
                     else:
                         feed_chunk = feed_dev[:, None]
                 with tr.span("verify", k=gamma), tr.annotate("spec_verify"):
-                    tgt_dev, vlog_dev, vstats = self._spec_verify()(
-                        self.params, store, {"tokens": feed_chunk},
-                        pos_dev, bt, fill_dev)
+                    if fused:
+                        caps = self._emission_caps(cur)
+                        store, tgt_dev, gates_dev, committed_dev = (
+                            self._spec_verify_commit()(
+                                self.params, store,
+                                {"tokens": feed_chunk}, pos_dev, bt,
+                                fill_dev, jnp.asarray(act), *caps))
+                    else:
+                        tgt_dev, vlog_dev, vstats = self._spec_verify()(
+                            self.params, store, {"tokens": feed_chunk},
+                            pos_dev, bt, fill_dev)
             except FaultInjected:
                 # raised before the jitted calls: store and allocator
                 # untouched beyond idempotent reservations — abandon the
@@ -2562,6 +3166,8 @@ class ContinuousBatchingEngine:
                 m.inc("dispatch_retries_total")
                 self._poll_compiles(rs)
                 tr.end()                  # step
+                self._drain_stream(rs)
+                yield
                 continue
             m.inc("decode_dispatches_total", 2 if gamma else 1)
             t_sync = perf_counter()
@@ -2569,7 +3175,11 @@ class ContinuousBatchingEngine:
                 self._fault_stall(rs)
                 tgt = np.asarray(tgt_dev)                     # [S, C]
                 drafts = np.asarray(feed_chunk[:, 1:])        # [S, γ]
-                gates = np.asarray(vstats["attn_gate"], np.float32)
+                gates = np.asarray(
+                    gates_dev if fused else vstats["attn_gate"],
+                    np.float32)
+                committed_np = (np.asarray(committed_dev) if fused
+                                else None)
                 dfill = (np.asarray(dout["fill"]) if gamma
                          else fill0)
                 dlog = (np.asarray(dout["logits"]).transpose(1, 0, 2)
@@ -2593,10 +3203,22 @@ class ContinuousBatchingEngine:
                 committed = np.zeros((self.max_slots,), np.int32)
                 for s in cur:
                     committed[s] = len(plan_emit[s])
-                bk, bv = vstats["kv_token"]
-                store, _ = self._spec_commit()(
-                    store, bk, bv, vstats["attn_gate"], pos_dev, bt,
-                    fill_dev, jnp.asarray(committed), jnp.asarray(act))
+                if fused:
+                    # the device already committed inside the verify
+                    # dispatch; the host replay must agree column-for-
+                    # column or the entry stream is corrupt
+                    if not np.array_equal(committed_np, committed):
+                        raise RuntimeError(
+                            "fused spec commit divergence: device "
+                            f"committed {committed_np.tolist()} vs host "
+                            f"plan {committed.tolist()} — greedy accept "
+                            "replay bug")
+                else:
+                    bk, bv = vstats["kv_token"]
+                    store, _ = self._spec_commit()(
+                        store, bk, bv, vstats["attn_gate"], pos_dev, bt,
+                        fill_dev, jnp.asarray(committed),
+                        jnp.asarray(act))
                 # rolled back = tentative draft entries the commit does
                 # not cover (the draft's fresh counts come from the
                 # *draft* gates, the commit's from the verifier's — with
@@ -2621,9 +3243,12 @@ class ContinuousBatchingEngine:
             rs.disp_idx += 1
             self._poll_compiles(rs)
             tr.end()                      # step
+            self._drain_stream(rs)
+            yield
 
         m.inc("host_seconds_total",
               (perf_counter() - t_loop) - m.value("device_seconds_total"))
+        self._store = store
         return self._finalize(rs)
 
     # -- fused-epoch run loops (decode_steps > 1) --------------------------
@@ -2803,6 +3428,8 @@ class ContinuousBatchingEngine:
                     m.inc("dispatch_retries_total")
                     self._poll_compiles(rs)
                     tr.end()              # step
+                    self._drain_stream(rs)
+                    yield
                     continue
                 m.inc("decode_dispatches_total")
 
@@ -2828,12 +3455,16 @@ class ContinuousBatchingEngine:
             if out is None:
                 self._poll_compiles(rs)
                 tr.end()                  # step
+                self._drain_stream(rs)
+                yield
                 continue
 
             # -- (3) one sync per epoch + bookkeeping replay ---------------
             self._process_epoch(rs, out, slots, t_disp)
             self._poll_compiles(rs)
             tr.end()                      # step
+            self._drain_stream(rs)
+            yield
 
         m.inc("host_seconds_total",
               (perf_counter() - t_loop) - m.value("device_seconds_total"))
@@ -2862,10 +3493,7 @@ class ContinuousBatchingEngine:
         rs = self._new_run_state(rng, paged=True)
         m, tr = rs.metrics, self.tracer
 
-        store = paged_mod.init_store(cfg, self.num_pages, self.page_size)
-        if self.policy is not None:
-            store = jax.device_put(store, self._store_sh)
-        store = self._apply_resume(rs, store)
+        store = self._apply_resume(rs, self._acquire_store())
         t_loop = perf_counter()
 
         def per_step(slot, g):
@@ -2908,6 +3536,8 @@ class ContinuousBatchingEngine:
                                 break
                         if failed is None:
                             break
+                        if self._reclaim_pages():
+                            continue
                         if n_eff > 1:
                             n_eff //= 2
                             shrunk = True
@@ -2962,6 +3592,8 @@ class ContinuousBatchingEngine:
                     m.inc("dispatch_retries_total")
                     self._poll_compiles(rs)
                     tr.end()              # step
+                    self._drain_stream(rs)
+                    yield
                     continue
                 m.inc("decode_dispatches_total")
 
@@ -2994,12 +3626,17 @@ class ContinuousBatchingEngine:
             if out is None:
                 self._poll_compiles(rs)
                 tr.end()                  # step
+                self._drain_stream(rs)
+                yield
                 continue
 
             self._process_epoch(rs, out, slots, t_disp, per_step=per_step)
             self._poll_compiles(rs)
             tr.end()                      # step
+            self._drain_stream(rs)
+            yield
 
         m.inc("host_seconds_total",
               (perf_counter() - t_loop) - m.value("device_seconds_total"))
+        self._store = store
         return self._finalize(rs)

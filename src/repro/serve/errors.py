@@ -16,6 +16,7 @@ written against the old contract keep working while new callers can
 catch the precise class.
 
     ServeError(Exception)
+    ├── ConfigError(ServeError, ValueError)         bad EngineConfig field
     ├── AdmissionRejected(ServeError, ValueError)   submit() refused
     ├── PageExhausted(ServeError, RuntimeError)     paged KV out of memory
     ├── DeadlineExceeded(ServeError, TimeoutError)  per-request deadline hit
@@ -32,6 +33,15 @@ from typing import Optional
 
 class ServeError(Exception):
     """Base class of every serving-layer error."""
+
+
+class ConfigError(ServeError, ValueError):
+    """An ``EngineConfig`` (or legacy engine kwarg) is invalid — out of
+    range, or a combination the engine cannot serve (e.g. ``spec_k`` with
+    ``decode_steps > 1``, paged-only levers under ``kv_mode='dense'``).
+    Raised at construction time, before any device work.  Is-a
+    ``ValueError`` because these conditions raised bare ``ValueError``
+    before the config redesign."""
 
 
 class AdmissionRejected(ServeError, ValueError):

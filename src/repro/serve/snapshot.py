@@ -220,6 +220,7 @@ def encode_host_state(engine, rs) -> Dict[str, Any]:
             "temperature": engine.temperature,
             "page_size": getattr(engine, "page_size", 0),
             "num_pages": getattr(engine, "num_pages", 0),
+            "kv_dtype": getattr(engine, "kv_dtype", None),
         },
         "uid": engine._uid,
         "queue": [_encode_request(r, now) for r in sched.queue],
@@ -279,6 +280,7 @@ def check_fingerprint(engine, host: Dict[str, Any]) -> None:
         "temperature": engine.temperature,
         "page_size": getattr(engine, "page_size", 0),
         "num_pages": getattr(engine, "num_pages", 0),
+        "kv_dtype": getattr(engine, "kv_dtype", None),
     }
     diffs = {k: (fp.get(k), mine[k]) for k in mine if fp.get(k) != mine[k]}
     if diffs:
@@ -318,14 +320,36 @@ def apply_host_state(engine, rs, host: Dict[str, Any]) -> None:
     rs.t_run = now - h["run_age_s"]
     if engine.kv_mode == "paged":
         alloc = engine.allocator
+        if getattr(engine, "prefix", None) is not None:
+            # prefix records from this engine's pre-resume life pin pages
+            # of the allocator state about to be replaced — drop them
+            # against the OLD state first.  Record pins are never
+            # serialized: a snapshot's pages are owned by slot chains
+            # only, so the restored cache starts cold (and the dead
+            # engine's record-only pages return to the free list below).
+            for w in engine._warm_pending.values():
+                engine.prefix.unpin(w.rec)
+            engine._warm_pending.clear()
+            engine.prefix.clear()
         a = host["alloc"]
-        alloc._free = list(a["free"])
         alloc._chains = {int(s): list(c) for s, c in a["chains"].items()}
         alloc.fill = np.asarray(a["fill"], np.int32)
         alloc.block_table[:] = 0
+        # refcounts rebuild from chain membership alone (shared prefix
+        # pages sit in several chains; record pins are forgotten)
+        alloc.refcount[:] = 0
+        chained = set()
         for s, chain in alloc._chains.items():
             for j, page in enumerate(chain):
                 alloc.block_table[s, j] = page
+                alloc.refcount[page] += 1
+                chained.add(page)
+        # free list = the snapshot's stack order, then any page the dead
+        # engine's prefix records were keeping off it
+        stored = [int(p) for p in a["free"]]
+        seen = set(stored) | chained
+        alloc._free = stored + [p for p in range(alloc.num_pages)
+                                if p not in seen]
         alloc.stats.pages_in_use = alloc.num_pages - len(alloc._free)
         alloc.stats.pages_peak = a["stats"]["pages_peak"]
         alloc.stats.entries_appended = a["stats"]["entries_appended"]

@@ -1,0 +1,547 @@
+"""Prefix caching with copy-on-write pages + quantized paged KV
+(``kvcache/prefix.py``, the refcounted ``PageAllocator``, the quantized
+page payloads in ``kernels/paged_attention.py``) and the redesigned
+``EngineConfig`` / streaming serve surface.
+
+The load-bearing invariants:
+
+* refcount conservation — every page is free with refcount 0 or held
+  with refcount == chain memberships + record pins, across alias / COW /
+  release / preemption / spec rollback / deadline expiry / kill→resume;
+* warm-prefix admission is *invisible* in fp16: a prompt served through
+  a shared prefix decodes bit-identically to a cold run;
+* quantized pages (int8/int4, pow2 per-(entry, head) scales) match the
+  dense oracle within tolerance and cut peak bytes;
+* the EngineConfig shim: flat legacy kwargs behave exactly like the
+  grouped config (one DeprecationWarning), invalid combinations raise
+  ConfigError;
+* ``submit()`` handles stream ``(token, step)`` pairs exactly once, in
+  order, and ``result()``/``done()`` agree with ``run()``.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.routing import neutral_router_bias
+from repro.kernels import ops as kops, ref
+from repro.kvcache import history, paged
+from repro.kvcache.prefix import PrefixCache
+from repro.models import model as M
+from repro.serve import (ConfigError, ContinuousBatchingEngine, EngineConfig,
+                         KVConfig, RobustnessConfig, SchedulingConfig,
+                         SpecConfig)
+from repro.serve.faults import Fault, as_fault_plan
+from repro.serve.errors import SimulatedKill
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(name="llama2-7b", **over):
+    cfg = get_config(name).smoke()
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def _params(cfg, neutral=True):
+    p = M.init_params(KEY, cfg)
+    return neutral_router_bias(p) if neutral else p
+
+
+def _engine(cfg, params, *, prefix=True, page_size=8, prefix_block=8,
+            max_slots=2, max_len=48, num_pages=None, kv_dtype=None,
+            spec_k=0, robustness=None):
+    return ContinuousBatchingEngine(cfg, params, config=EngineConfig(
+        kv=KVConfig(kv_mode="paged", page_size=page_size,
+                    prefix_cache=prefix, prefix_block=prefix_block,
+                    num_pages=num_pages, kv_dtype=kv_dtype),
+        scheduling=SchedulingConfig(max_slots=max_slots, max_len=max_len),
+        spec=SpecConfig(spec_k=spec_k),
+        robustness=robustness or RobustnessConfig()))
+
+
+def _shared_prompts(cfg, prefix_len=24, tails=(4, 6), seed=7):
+    """Prompts sharing a ``prefix_len``-token prefix with fresh tails."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, (prefix_len,), dtype=np.int32)
+    return [np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab_size, (t,), dtype=np.int32)])
+        for t in tails]
+
+
+def _no_leaks(eng):
+    """Free pages + record-pinned pages must tile the pool exactly."""
+    eng.allocator.check_conservation(
+        eng.prefix.page_pins() if eng.prefix is not None else None)
+    pinned = set()
+    if eng.prefix is not None:
+        pinned = set(eng.prefix.page_pins())
+    assert eng.allocator.free_pages == eng.num_pages - len(pinned)
+
+
+# ---------------------------------------------------------------------------
+# Allocator refcounts: alias / COW / release conservation
+# ---------------------------------------------------------------------------
+
+def test_refcount_alias_release_conservation():
+    a = paged.PageAllocator(num_pages=8, page_size=4, max_slots=3,
+                            slot_entry_capacity=32)
+    assert a.ensure(0, 10)                       # 3 private pages
+    shared = list(a.chain(0)[:2])                # pretend first 2 published
+    a.ref_pages(shared)                          # record pin
+    pins = {p: 1 for p in shared}
+    a.check_conservation(pins)
+    # warm admission aliases the shared pages into a fresh slot
+    a.alias_into(1, shared)
+    assert all(a.refcount[p] == 3 for p in shared)   # chain0 + pin + chain1
+    assert a.ensure(1, 12)                       # private COW/suffix page
+    a.seed_fill(1, 8)
+    a.check_conservation(pins)
+    # releasing the donor keeps shared pages resident (record + slot 1)
+    a.release(0)
+    assert all(a.refcount[p] == 2 for p in shared)
+    a.check_conservation(pins)
+    # releasing the aliasing slot leaves only the record pins
+    a.release(1)
+    assert all(a.refcount[p] == 1 for p in shared)
+    a.check_conservation(pins)
+    assert a.free_pages == a.num_pages - len(shared)
+    # dropping the record frees everything — full conservation round trip
+    assert a.deref_pages(shared) == len(shared)
+    a.check_conservation()
+    assert a.free_pages == a.num_pages
+
+
+def test_trim_never_reclaims_shared_pages():
+    a = paged.PageAllocator(num_pages=8, page_size=4, max_slots=2,
+                            slot_entry_capacity=32)
+    assert a.ensure(0, 8)
+    shared = list(a.chain(0)[:2])
+    a.ref_pages(shared)
+    a.release(0)
+    a.alias_into(1, shared)
+    assert a.ensure(1, 16)                       # spec window over-reserve
+    a.seed_fill(1, 8)                            # only the prefix committed
+    # rollback trims the unused tail; the shared pages must stay put
+    assert a.trim(1) == 2
+    assert list(a.chain(1)) == shared
+    assert all(a.refcount[p] == 2 for p in shared)
+    a.check_conservation({p: 1 for p in shared})
+
+
+def test_prefix_publish_lookup_lru_and_clear():
+    a = paged.PageAllocator(num_pages=16, page_size=4, max_slots=2,
+                            slot_entry_capacity=64)
+    pc = PrefixCache(a, block=4, reuse=False)
+    toks = np.arange(100, 112, dtype=np.int32)   # 12 tokens
+    nA = 2
+    gates = np.ones((nA, 12), np.float32)        # reuse off: 2 entries/token
+    assert a.ensure(0, 12 * nA)
+    chain = a.chain(0)
+    assert pc.publish(toks, gates, chain) == 3   # boundaries 4, 8, 12
+    a.release(0)
+    a.check_conservation(pc.page_pins())
+    # longest strict prefix wins; an exact-length prompt matches len-1 cap
+    rec = pc.lookup(toks)
+    assert rec.length == 8 and rec.entries == 16
+    assert pc.lookup(np.arange(100, 117, dtype=np.int32)[:13]).length == 12
+    assert pc.lookup(np.arange(50, 62, dtype=np.int32)) is None
+    assert (pc.hits, pc.misses) == (2, 1)
+    # LRU eviction prefers the longest at equal stamp; pinned never goes
+    long_rec = pc.lookup(np.arange(100, 113, dtype=np.int32))
+    pc.pin(long_rec)
+    freed_pages = [pc.evict_one() for _ in range(2)]
+    assert all(f is not None for f in freed_pages)
+    assert pc.lookup(np.arange(100, 113, dtype=np.int32)) is long_rec
+    pc.unpin(long_rec)
+    pc.clear()
+    a.check_conservation()
+    assert a.free_pages == a.num_pages and len(pc) == 0
+
+
+def test_copy_page_masked_blanks_divergent_tail():
+    cfg = _cfg()
+    store = paged.init_store(cfg, num_pages=4, page_size=8)
+    ps = 8
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.standard_normal(store["k_pages"].shape[1:]),
+                    store["k_pages"].dtype)
+    store["k_pages"] = store["k_pages"].at[1].set(k)
+    store["pos_pages"] = store["pos_pages"].at[1].set(
+        jnp.arange(ps, dtype=jnp.int32))
+    out = paged.copy_page_masked(store, jnp.int32(1), jnp.int32(3),
+                                 jnp.int32(5))
+    np.testing.assert_array_equal(np.asarray(out["k_pages"][3][:5]),
+                                  np.asarray(k[:5]))
+    assert (np.asarray(out["k_pages"][3][5:]) == 0).all()
+    assert (np.asarray(out["pos_pages"][3][5:]) == history.MASKED_POS).all()
+    assert (np.asarray(out["pos_pages"][3][:5]) == np.arange(5)).all()
+
+
+# ---------------------------------------------------------------------------
+# Quantized pages: pow2 scales, kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "int4"])
+def test_quantize_roundtrip_pow2_bounded_error(kv_dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((6, 3, 16)) * 3.0, jnp.float32)
+    kc, vc, ks, vs = paged.quantize_entries(x, x, kv_dtype)
+    assert kc.dtype == jnp.int8
+    # scales are exact powers of two (BFP shift-dequant idiom)
+    exps = np.log2(np.asarray(ks))
+    np.testing.assert_array_equal(exps, np.round(exps))
+    dq = np.asarray(paged.dequantize_entries(kc, ks, kv_dtype))
+    # rounding error is bounded by half a step per element
+    assert np.max(np.abs(dq - np.asarray(x))) <= np.max(np.asarray(ks)) / 2
+    rel = np.abs(dq - np.asarray(x)).max() / np.abs(np.asarray(x)).max()
+    assert rel < (0.02 if kv_dtype == "int8" else 0.2)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "int4"])
+def test_quantized_pages_kernel_matches_oracle(kv_dtype):
+    rng = np.random.default_rng(2)
+    B, Hq, Hkv, dh = 3, 4, 2, 32
+    P, ps, J = 16, 4, 3
+    E = J * ps
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, dh)), jnp.float32)
+    kf = jnp.asarray(rng.standard_normal((P, ps, Hkv, dh)), jnp.float32)
+    vf = jnp.asarray(rng.standard_normal((P, ps, Hkv, dh)), jnp.float32)
+    kt = jnp.asarray(rng.standard_normal((B, 1, Hkv, dh)), jnp.float32)
+    vt = jnp.asarray(rng.standard_normal((B, 1, Hkv, dh)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, P, (B, J)), jnp.int32)
+    pos = rng.integers(0, 9, (B, E)).astype(np.int32)
+    pos[rng.random((B, E)) < 0.4] = history.MASKED_POS
+    qpos = jnp.asarray(np.full((B, 1), 9, np.int32))
+    kp, vp, ksc, vsc = paged.quantize_entries(kf, vf, kv_dtype)
+    o_k = kops.paged_decode_attention(
+        q, kp, vp, bt, jnp.asarray(pos), kt, vt, q_positions=qpos,
+        k_scales=ksc, v_scales=vsc, kv_dtype=kv_dtype)
+    # oracle 1: the ref dequantizes the same codes up front
+    o_r = ref.paged_attention_ref(
+        q, kp, vp, bt, jnp.asarray(pos), kt, vt, q_positions=qpos,
+        k_scales=ksc, v_scales=vsc, kv_dtype=kv_dtype)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+    # oracle 2: fp32 ref over explicitly dequantized pools — proves the
+    # in-walk dequant is the plain quantization error, nothing kernel-shaped
+    o_f = ref.paged_attention_ref(
+        q, paged.dequantize_entries(kp, ksc, kv_dtype),
+        paged.dequantize_entries(vp, vsc, kv_dtype),
+        bt, jnp.asarray(pos), kt, vt, q_positions=qpos)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_f),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_entry_bytes_int8_cut_at_least_40pct():
+    cfg = _cfg()
+    fp16 = paged.entry_bytes(cfg)
+    assert paged.entry_bytes(cfg, "int8") <= 0.6 * fp16
+    assert paged.entry_bytes(cfg, "int4") < paged.entry_bytes(cfg, "int8")
+
+
+# ---------------------------------------------------------------------------
+# Engine: warm-prefix admission
+# ---------------------------------------------------------------------------
+
+def test_warm_prefix_bit_identical_and_conserved():
+    cfg = _cfg()
+    params = _params(cfg)
+    p1, p2 = _shared_prompts(cfg, prefix_len=24, tails=(4, 6))
+
+    cold = _engine(cfg, params, prefix=False)
+    hc = cold.submit(p2, max_new_tokens=8)
+    want = cold.run()["results"][int(hc)].tokens
+
+    eng = _engine(cfg, params)
+    eng.submit(p1, max_new_tokens=4)
+    out1 = eng.run()
+    assert out1["stats"].prefix_hits == 0 and len(eng.prefix) > 0
+    h2 = eng.submit(p2, max_new_tokens=8)
+    out2 = eng.run()
+    s = out2["stats"]
+    assert s.prefix_hits == 1 and s.prefix_tokens_saved == 24
+    np.testing.assert_array_equal(out2["results"][int(h2)].tokens, want)
+    _no_leaks(eng)
+    # the warm run republished the longer prefix — a third request rides it
+    h3 = eng.submit(np.concatenate([p2, p2[:3]]), max_new_tokens=4)
+    out3 = eng.run()
+    assert out3["stats"].prefix_hits == 1
+    assert out3["results"][int(h3)].finish_reason == "length"
+    _no_leaks(eng)
+
+
+def test_warm_prefix_cow_boundary_page_identity():
+    """A record whose entry count straddles a page forces the COW copy
+    (plain params: every gate fires, so entries are exactly 2/token —
+    block 2 with page 16 lands records mid-page)."""
+    cfg = _cfg()
+    params = _params(cfg, neutral=False)
+    p1, p2 = _shared_prompts(cfg, prefix_len=10, tails=(2, 4), seed=3)
+
+    cold = _engine(cfg, params, prefix=False, page_size=16)
+    hc = cold.submit(p2, max_new_tokens=6)
+    want = cold.run()["results"][int(hc)].tokens
+
+    eng = _engine(cfg, params, page_size=16, prefix_block=2)
+    eng.submit(p1, max_new_tokens=2)
+    eng.run()
+    rec = eng.prefix.lookup(p2)
+    assert rec is not None and rec.entries % 16 != 0, \
+        "test geometry must exercise the COW partial-boundary page"
+    h2 = eng.submit(p2, max_new_tokens=6)
+    out = eng.run()
+    assert out["stats"].prefix_hits == 1
+    np.testing.assert_array_equal(out["results"][int(h2)].tokens, want)
+    _no_leaks(eng)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "int4"])
+def test_warm_prefix_quantized_within_tolerance(kv_dtype):
+    """Quantized pages make warm restore lossy relative to the cold
+    fp-precision prefill context, so identity is behavioural, not
+    bitwise: the engine must complete, conserve pages, and (int8) stay
+    on the cold-run token path."""
+    cfg = _cfg()
+    params = _params(cfg)
+    p1, p2 = _shared_prompts(cfg, prefix_len=24, tails=(4, 6))
+
+    cold = _engine(cfg, params, prefix=False, kv_dtype=kv_dtype)
+    hc = cold.submit(p2, max_new_tokens=8)
+    want = np.asarray(cold.run()["results"][int(hc)].tokens)
+
+    eng = _engine(cfg, params, kv_dtype=kv_dtype)
+    eng.submit(p1, max_new_tokens=4)
+    eng.run()
+    h2 = eng.submit(p2, max_new_tokens=8)
+    out = eng.run()
+    assert out["stats"].prefix_hits == 1
+    got = np.asarray(out["results"][int(h2)].tokens)
+    assert got.shape == want.shape
+    if kv_dtype == "int8":
+        assert float(np.mean(got == want)) >= 0.75, (got, want)
+    _no_leaks(eng)
+
+
+def test_warm_prefix_survives_preemption_pressure():
+    """A page pool too small for everyone: preemptions + record evictions
+    must conserve refcounts and keep every token identical to an
+    uncontended cold engine."""
+    cfg = _cfg()
+    params = _params(cfg)
+    prompts = _shared_prompts(cfg, prefix_len=16, tails=(4, 6, 8, 2),
+                              seed=11)
+
+    roomy = _engine(cfg, params, prefix=False, max_slots=4, max_len=48)
+    hr = [roomy.submit(p, max_new_tokens=6) for p in prompts]
+    outr = roomy.run()
+    want = {int(h): outr["results"][int(h)].tokens for h in hr}
+
+    # nA * max_len = one slot's worst case; 3 slots' worth for 4 requests
+    tight_pages = 3 * (48 * 2) // 8
+    eng = _engine(cfg, params, max_slots=4, max_len=48,
+                  num_pages=tight_pages)
+    hs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    out = eng.run()
+    for h, r in zip(hr, hs):
+        np.testing.assert_array_equal(out["results"][int(r)].tokens,
+                                      want[int(h)])
+    _no_leaks(eng)
+
+
+def test_warm_prefix_spec_rollback_conserved():
+    """Speculative decoding over warm admissions: draft windows
+    over-reserve and roll back against chains holding aliased pages —
+    trim must return only private tail pages, and tokens must match the
+    non-speculative warm engine exactly (temperature 0)."""
+    cfg = _cfg()
+    params = _params(cfg)
+    p1, p2 = _shared_prompts(cfg, prefix_len=16, tails=(4, 6), seed=5)
+
+    plain = _engine(cfg, params, max_len=64)
+    plain.submit(p1, max_new_tokens=4)
+    plain.run()
+    hp = plain.submit(p2, max_new_tokens=10)
+    outp = plain.run()
+    assert outp["stats"].prefix_hits == 1
+    want = outp["results"][int(hp)].tokens
+
+    spec = _engine(cfg, params, max_len=64, spec_k=3)
+    spec.submit(p1, max_new_tokens=4)
+    spec.run()
+    hs = spec.submit(p2, max_new_tokens=10)
+    outs = spec.run()
+    s = outs["stats"]
+    assert s.prefix_hits == 1 and s.spec_windows > 0
+    np.testing.assert_array_equal(outs["results"][int(hs)].tokens, want)
+    _no_leaks(spec)
+
+
+def test_deadline_expiry_releases_warm_pins():
+    cfg = _cfg()
+    params = _params(cfg)
+    p1, p2 = _shared_prompts(cfg, prefix_len=24, tails=(4, 6), seed=9)
+    eng = _engine(cfg, params)
+    eng.submit(p1, max_new_tokens=4)
+    eng.run()
+    # expired before admission: the probe's pins/aliases must unwind
+    h = eng.submit(p2, max_new_tokens=8, deadline_s=0.0)
+    out = eng.run()
+    assert out["results"][int(h)].finish_reason == "deadline"
+    assert not eng._warm_pending
+    _no_leaks(eng)
+    # and the cache still serves the next warm admission normally
+    h2 = eng.submit(p2, max_new_tokens=4)
+    out2 = eng.run()
+    assert out2["stats"].prefix_hits >= 1
+    assert out2["results"][int(h2)].finish_reason == "length"
+    _no_leaks(eng)
+
+
+def test_kill_resume_with_prefix_cache(tmp_path):
+    """A SimulatedKill mid-run, resumed by a fresh engine: tokens must be
+    bit-identical to a clean run, the restored allocator must conserve
+    (records are NOT serialized — resume drops them), and publishing
+    must work again after resume."""
+    cfg = _cfg()
+    params = _params(cfg)
+    prompts = _shared_prompts(cfg, prefix_len=16, tails=(4, 6, 8), seed=13)
+
+    clean = _engine(cfg, params, max_slots=3)
+    hc = [clean.submit(p, max_new_tokens=6) for p in prompts]
+    outc = clean.run()
+    want = [outc["results"][int(h)].tokens for h in hc]
+
+    snap_dir = str(tmp_path / "snaps")
+    eng = _engine(cfg, params, max_slots=3,
+                  robustness=RobustnessConfig(
+                      snapshot_dir=snap_dir,
+                      faults=as_fault_plan([
+                          Fault("kill", step=6, message="yank")])))
+    uids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    with pytest.raises(SimulatedKill, match="yank"):
+        eng.run()
+
+    eng2 = _engine(cfg, params, max_slots=3,
+                   robustness=RobustnessConfig(snapshot_dir=snap_dir))
+    assert eng2.resume() >= 1
+    out = eng2.run()
+    assert sorted(out["results"]) == sorted(int(u) for u in uids)
+    for u, w in zip(uids, want):
+        np.testing.assert_array_equal(out["results"][int(u)].tokens, w)
+    _no_leaks(eng2)
+    # records died with the killed process (they are not serialized);
+    # the cache itself still works: a cold publish, then a warm hit
+    h = eng2.submit(prompts[0], max_new_tokens=4)
+    out2 = eng2.run()
+    assert out2["results"][int(h)].finish_reason == "length"
+    assert out2["stats"].prefix_hits == 0
+    h2 = eng2.submit(prompts[1], max_new_tokens=4)
+    out3 = eng2.run()
+    assert out3["stats"].prefix_hits == 1
+    assert out3["results"][int(h2)].finish_reason == "length"
+    _no_leaks(eng2)
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig shim + streaming surface
+# ---------------------------------------------------------------------------
+
+def test_engine_config_shim_equivalence():
+    cfg = _cfg()
+    params = _params(cfg)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, (l,), dtype=np.int32)
+               for l in (12, 20)]
+
+    import repro.serve.engine as engine_mod
+    engine_mod._legacy_warned = False     # once-per-process latch
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = ContinuousBatchingEngine(
+            cfg, params, max_slots=2, max_len=48, kv_mode="paged",
+            page_size=8)
+        dep = [w for w in caught if issubclass(w.category,
+                                               DeprecationWarning)]
+        assert len(dep) == 1 and "docs/serving.md" in str(dep[0].message)
+    grouped = _engine(cfg, params, prefix=False)
+    hl = [legacy.submit(p, max_new_tokens=6) for p in prompts]
+    hg = [grouped.submit(p, max_new_tokens=6) for p in prompts]
+    ol, og = legacy.run(), grouped.run()
+    for a, b in zip(hl, hg):
+        np.testing.assert_array_equal(ol["results"][int(a)].tokens,
+                                      og["results"][int(b)].tokens)
+
+    with pytest.raises(ConfigError, match="either"):
+        ContinuousBatchingEngine(cfg, params, max_slots=2,
+                                 config=EngineConfig())
+    with pytest.raises(TypeError):
+        ContinuousBatchingEngine(cfg, params, not_a_kwarg=1)
+
+
+def test_engine_config_validation_errors():
+    # validation lives in EngineConfig.__post_init__: a bad combination
+    # never even becomes a config object, so the engine can trust any
+    # EngineConfig it is handed
+    for make in (
+            lambda: EngineConfig(kv=KVConfig(kv_mode="paged",
+                                             kv_dtype="fp8")),
+            lambda: EngineConfig(kv=KVConfig(kv_mode="dense",
+                                             kv_dtype="int8")),
+            lambda: EngineConfig(kv=KVConfig(kv_mode="dense",
+                                             prefix_cache=True)),
+            lambda: EngineConfig(kv=KVConfig(kv_mode="paged",
+                                             prefix_cache=True,
+                                             prefix_block=0)),
+            lambda: EngineConfig(kv=KVConfig(kv_mode="paged", page_size=0)),
+            lambda: EngineConfig(scheduling=SchedulingConfig(max_slots=0)),
+            lambda: EngineConfig(spec=SpecConfig(spec_k=-1)),
+    ):
+        with pytest.raises(ConfigError):
+            make()
+    # ConfigError is a ValueError: existing callers' try/except still work
+    assert issubclass(ConfigError, ValueError)
+
+
+def test_streaming_handle_tokens_exactly_once():
+    cfg = _cfg()
+    params = _params(cfg)
+    rng = np.random.default_rng(2)
+    p = rng.integers(0, cfg.vocab_size, (12,), dtype=np.int32)
+    eng = _engine(cfg, params, prefix=False)
+    h = eng.submit(p, max_new_tokens=6)
+    assert not h.done()
+    pairs = list(h.tokens())
+    assert h.done()
+    res = h.result()
+    assert res.finish_reason == "length"
+    # in order, exactly once, and exactly the run()-visible tokens
+    np.testing.assert_array_equal([t for t, _ in pairs], res.tokens)
+    steps = [s for _, s in pairs]
+    assert steps == sorted(steps)
+    # each pair is yielded exactly once per iterator; a fresh iterator
+    # replays the identical stream, and result() stays stable
+    assert list(h.tokens()) == pairs
+    assert h.result() is res
+
+
+def test_streaming_interleaves_two_requests():
+    cfg = _cfg()
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    p1 = rng.integers(0, cfg.vocab_size, (8,), dtype=np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, (16,), dtype=np.int32)
+    eng = _engine(cfg, params, prefix=False)
+    h1 = eng.submit(p1, max_new_tokens=5)
+    h2 = eng.submit(p2, max_new_tokens=5)
+    out = eng.run()              # run() is sugar over the same stream
+    t1 = list(h1.tokens())
+    t2 = list(h2.tokens())
+    np.testing.assert_array_equal([t for t, _ in t1],
+                                  out["results"][int(h1)].tokens)
+    np.testing.assert_array_equal([t for t, _ in t2],
+                                  out["results"][int(h2)].tokens)
+    assert h1.done() and h2.done()

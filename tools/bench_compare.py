@@ -100,6 +100,14 @@ FLOORS = {
         ("meta.speculative.temp0_identical", 1),
         ("meta.speculative.paged_temp0_identical", 1),
     ],
+    "paged_kv": [
+        # PR-10 headlines.  Warm-prefix admission must answer in at most
+        # half the cold TTFT (cold/warm >= 2x: the shared prefill really
+        # is skipped, not re-run), and int8 page payloads must cut peak
+        # KV bytes by >= 40% (fp16/int8 >= 1/0.6)
+        ("meta.prefix.cold_over_warm_ttft", 2.0),
+        ("meta.quant.fp16_over_int8_peak_bytes", 1.6667),
+    ],
 }
 
 
